@@ -1,0 +1,33 @@
+"""Fig 13: median queries on the cube (bootstrap CIs, §5.2.5).
+
+Paper: median estimates are *more* accurate than sums (less variance
+sensitivity).
+"""
+
+from __future__ import annotations
+
+from typing import List
+
+import jax
+import numpy as np
+
+from benchmarks.common import Row, cube_view_scenario
+from repro.core import Query
+from repro.data.synthetic import grow_lineitem
+
+
+def run(quick: bool = False) -> List[Row]:
+    vm, meta = cube_view_scenario(quick, m=0.1)
+    delta = grow_lineitem(meta["rng"], meta["n_orders"], meta["n_parts"],
+                          start_key=meta["n_items"], n_new=int(meta["n_items"] * 0.1))
+    vm.ingest("lineitem", inserts=delta)
+    vm.svc_refresh("cubeView")
+    q = Query(agg="median", col="revenue")
+    truth = float(vm.query_exact_fresh("cubeView", q))
+    stale = float(vm.query_stale("cubeView", q))
+    est = vm.query("cubeView", q, rng=jax.random.PRNGKey(1))
+    err_stale = abs(stale - truth) / max(abs(truth), 1e-9)
+    err = abs(float(est.value) - truth) / max(abs(truth), 1e-9)
+    covered = float(est.ci_low) <= truth <= float(est.ci_high)
+    return [Row("fig13_median", 0.0,
+                f"rel_err stale={err_stale:.4f} svc={err:.4f} ci_covers={covered}")]

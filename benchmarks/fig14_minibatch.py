@@ -1,0 +1,61 @@
+"""Fig 14–16: mini-batch integration — SVC+periodic IVM vs IVM alone.
+
+The paper's Spark experiment (§7.6.2): under a fixed maintenance budget,
+bigger IVM batches are cheaper per row but staler; spending a slice of the
+budget on SVC refreshes cuts the *max* staleness error between batches.
+We replay a delta stream, give both policies the same wall-clock budget,
+and report the worst query error over the stream.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import List
+
+import numpy as np
+
+from benchmarks.common import Row, visit_view_scenario
+from repro.core import Query
+from repro.data.synthetic import grow_log
+from repro.relational.expr import Col, Lit, Cmp
+
+
+def _stream_errors(vm, meta, n_batches, refresh_every, use_svc):
+    """Replay n_batches insert batches; query after each; full IVM at end of
+    every `maintain_every` batches (here: once at the end)."""
+    q = Query(agg="count", pred=Cmp("gt", Col("visitCount"), Lit(10.0)))
+    errs, t_spent = [], 0.0
+    sess = meta["nl"]
+    for b in range(n_batches):
+        delta = grow_log(meta["rng"], meta["nv"], sess, int(meta["nl"] * 0.05))
+        sess += int(meta["nl"] * 0.05)
+        vm.ingest("Log", inserts=delta)
+        t0 = time.perf_counter()
+        if use_svc and (b % refresh_every == 0):
+            vm.svc_refresh("visitView")
+        t_spent += time.perf_counter() - t0
+        truth = float(vm.query_exact_fresh("visitView", q))
+        if use_svc:
+            est = float(vm.query("visitView", q).value)
+        else:
+            est = float(vm.query_stale("visitView", q))
+        if abs(truth) > 1e-9:
+            errs.append(abs(est - truth) / abs(truth))
+    t0 = time.perf_counter()
+    vm.maintain_all()
+    t_spent += time.perf_counter() - t0
+    return float(np.max(errs)), t_spent
+
+
+def run(quick: bool = False) -> List[Row]:
+    n_batches = 4 if quick else 8
+    vm, meta = visit_view_scenario(quick, m=0.1, seed=21)
+    err_ivm, t_ivm = _stream_errors(vm, meta, n_batches, 1, use_svc=False)
+    vm, meta = visit_view_scenario(quick, m=0.1, seed=21)
+    err_svc, t_svc = _stream_errors(vm, meta, n_batches, 1, use_svc=True)
+    return [
+        Row("fig14_ivm_only", t_ivm * 1e6 / n_batches,
+            f"max_err={err_ivm:.4f} (stale between nightly IVM)"),
+        Row("fig15_svc_plus_ivm", t_svc * 1e6 / n_batches,
+            f"max_err={err_svc:.4f} gain={err_ivm / max(err_svc, 1e-9):.1f}x"),
+    ]

@@ -1,0 +1,41 @@
+"""Fig 4a/4b: SVC maintenance time vs sampling ratio / update size.
+
+4a: fixed 10% updates, vary m — SVC sample cleaning vs full IVM wall time.
+4b: fixed m=10%, vary update size — speedup (paper: 6.5x @2.5% → 10.1x @20%).
+"""
+
+from __future__ import annotations
+
+from typing import List
+
+import numpy as np
+
+from benchmarks.common import Row, join_view_scenario, timeit
+from repro.data.synthetic import grow_lineitem
+
+
+def run(quick: bool = False) -> List[Row]:
+    rows: List[Row] = []
+
+    # --- 4a: vary sampling ratio ------------------------------------------------
+    ratios = (0.05, 0.1, 0.2) if quick else (0.02, 0.05, 0.1, 0.2, 0.4)
+    ivm_t = None
+    for m in ratios:
+        vm, meta = join_view_scenario(quick, m=m)
+        vm.ingest("lineitem", inserts=meta["delta"])
+        t_svc = timeit(lambda: vm.svc_refresh("joinView"))
+        if ivm_t is None:
+            ivm_t = timeit(lambda: vm.maintain("joinView"))
+            rows.append(Row("fig4a_ivm_full", ivm_t, "baseline=change-table IVM"))
+        rows.append(Row(f"fig4a_svc_m{m}", t_svc, f"speedup={ivm_t / t_svc:.2f}x"))
+
+    # --- 4b: vary update size ----------------------------------------------------
+    sizes = (0.05, 0.2) if quick else (0.025, 0.05, 0.1, 0.2)
+    for frac in sizes:
+        vm, meta = join_view_scenario(quick, m=0.1, update_frac=frac)
+        vm.ingest("lineitem", inserts=meta["delta"])
+        t_svc = timeit(lambda: vm.svc_refresh("joinView"))
+        t_ivm = timeit(lambda: vm.maintain("joinView"))
+        rows.append(Row(f"fig4b_update{int(frac*100)}pct", t_svc,
+                        f"speedup={t_ivm / t_svc:.2f}x"))
+    return rows

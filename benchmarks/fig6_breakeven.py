@@ -1,0 +1,52 @@
+"""Fig 6a: maintenance+query time; 6b: CORR vs AQP break-even vs update size.
+
+Paper: CORR is more accurate until updates ≈ 32.5% of base data, then AQP
+wins (§5.2.2 variance analysis).
+"""
+
+from __future__ import annotations
+
+import time
+from typing import List
+
+import numpy as np
+
+from benchmarks.common import Row, join_view_scenario, median_rel_error, random_join_queries, timeit
+from repro.core import Query
+from repro.relational.expr import Col, Lit, Cmp
+
+
+def run(quick: bool = False) -> List[Row]:
+    rows: List[Row] = []
+
+    # --- 6a: total time = maintenance + query ------------------------------------
+    vm, meta = join_view_scenario(quick, m=0.1)
+    vm.ingest("lineitem", inserts=meta["delta"])
+    q = Query(agg="sum", col="revenue")
+    t_q_stale = timeit(lambda: float(vm.query_stale("joinView", q)))
+    t_refresh = timeit(lambda: vm.svc_refresh("joinView"))
+    t_q_corr = timeit(lambda: float(vm.query("joinView", q, prefer="corr").value))
+    t_q_aqp = timeit(lambda: float(vm.query("joinView", q, prefer="aqp").value))
+    t_ivm = timeit(lambda: vm.maintain("joinView"))
+    rows.append(Row("fig6a_ivm_plus_query", t_ivm + t_q_stale, "IVM + exact query"))
+    rows.append(Row("fig6a_svc_corr_total", t_refresh + t_q_corr,
+                    f"refresh {t_refresh:.0f} + corr query {t_q_corr:.0f} us"))
+    rows.append(Row("fig6a_svc_aqp_total", t_refresh + t_q_aqp,
+                    f"refresh {t_refresh:.0f} + aqp query {t_q_aqp:.0f} us"))
+
+    # --- 6b: break-even ------------------------------------------------------------
+    fracs = (0.1, 0.5) if quick else (0.05, 0.1, 0.2, 0.35, 0.5, 0.8)
+    flips = []
+    for frac in fracs:
+        vm, meta = join_view_scenario(quick, m=0.1, update_frac=frac, seed=3)
+        vm.ingest("lineitem", inserts=meta["delta"])
+        vm.svc_refresh("joinView")
+        queries = random_join_queries(meta["rng"], 12 if quick else 30)
+        e_aqp = median_rel_error(vm, "joinView", queries,
+                                 lambda q: float(vm.query("joinView", q, prefer="aqp").value))
+        e_corr = median_rel_error(vm, "joinView", queries,
+                                  lambda q: float(vm.query("joinView", q, prefer="corr").value))
+        flips.append((frac, e_corr, e_aqp))
+        rows.append(Row(f"fig6b_update{int(frac*100)}pct", 0.0,
+                        f"err_corr={e_corr:.4f} err_aqp={e_aqp:.4f} corr_wins={e_corr <= e_aqp}"))
+    return rows

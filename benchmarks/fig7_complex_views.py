@@ -1,0 +1,96 @@
+"""Fig 7: breadth of views — incl. nested structures that block push-down.
+
+Three view classes:
+  * V_join  — FK-join + group-by (full push-down; big speedup)
+  * V_proj  — selection + projection over the join (push-down through σ/Π)
+  * V_nested — nested group-by (count of counts): push-down provably blocks
+    (§12.4, NP-hard) so SVC degrades toward IVM cost — the paper's V21/V22.
+"""
+
+from __future__ import annotations
+
+from typing import List
+
+import numpy as np
+
+from benchmarks.common import Row, timeit
+from repro.core import ViewDef, cleaning_plan, fully_pushed, change_table_strategy
+from repro.core.pushdown import hash_depths
+from repro.data.synthetic import grow_log, make_log_video
+from repro.relational.expr import Col, Lit, Cmp
+from repro.relational.plan import FKJoin, GroupByNode, ProjectNode, Scan, SelectNode
+from repro.views import ViewManager
+
+
+def _scenario(quick, plan, name, delta_cap):
+    scale = 1 if quick else 4
+    nv, nl = 1000 * scale, 10_000 * scale
+    rng = np.random.default_rng(7)
+    log, video = make_log_video(rng, nv, nl)
+    vm = ViewManager()
+    vm.register_base("Log", log)
+    vm.register_base("Video", video)
+    vm.register_view(ViewDef(name, plan), delta_bases=("Log",), m=0.1,
+                     delta_group_capacity=delta_cap)
+    delta = grow_log(rng, nv, nl, int(nl * 0.1))
+    vm.ingest("Log", inserts=delta)
+    return vm
+
+
+def run(quick: bool = False) -> List[Row]:
+    scale = 1 if quick else 4
+    nv = 1000 * scale
+    rows: List[Row] = []
+
+    join_plan = GroupByNode(
+        child=FKJoin(fact=Scan("Log", pk=("sessionId",)),
+                     dim=Scan("Video", pk=("videoId",)), fact_key="videoId"),
+        keys=("videoId",),
+        aggs=(("visits", "count", None), ("bytes", "sum", "bytes")),
+        num_groups=int(nv * 1.5),
+    )
+    proj_plan = GroupByNode(
+        child=SelectNode(
+            child=FKJoin(fact=Scan("Log", pk=("sessionId",)),
+                         dim=Scan("Video", pk=("videoId",)), fact_key="videoId"),
+            pred=Cmp("gt", Col("duration"), Lit(5.0)),
+        ),
+        keys=("videoId",),
+        aggs=(("visits", "count", None),),
+        num_groups=int(nv * 1.5),
+    )
+    # nested: count videos per visit-count bucket — the paper's blocked case:
+    #   SELECT c, count(1) FROM (SELECT videoId, count(1) c ... GROUP BY
+    #   videoId) GROUP BY c            (§4.4 / §12.4: NP-hard to push η)
+    nested_plan = GroupByNode(
+        child=GroupByNode(
+            child=Scan("Log", pk=("sessionId",)),
+            keys=("videoId",),
+            aggs=(("c", "count", None),),
+            num_groups=int(nv * 1.5),
+        ),
+        keys=("c",),  # outer groups by the inner AGGREGATE → η cannot push
+        aggs=(("nested", "count", None),),
+        num_groups=256,
+    )
+
+    for name, plan, cap in (
+        ("V_join", join_plan, int(nv * 1.5)),
+        ("V_proj", proj_plan, int(nv * 1.5)),
+    ):
+        vm = _scenario(quick, plan, name, cap)
+        t_svc = timeit(lambda: vm.svc_refresh(name))
+        t_ivm = timeit(lambda: vm.maintain(name))
+        C = cleaning_plan(vm.views[name].strategy, vm.views[name].view.pk, 0.1)
+        rows.append(Row(f"fig7_{name}", t_svc,
+                        f"speedup={t_ivm / t_svc:.2f}x fully_pushed={fully_pushed(C)}"))
+
+    # nested plan: report push-down blocking analytically
+    strategy = change_table_strategy(
+        ViewDef("V_nested", nested_plan), ("Log",), int(nv * 1.5))
+    C = cleaning_plan(strategy, ("videoId",), 0.1)
+    depths = hash_depths(C)
+    rows.append(Row("fig7_V_nested", 0.0,
+                    f"fully_pushed={fully_pushed(C)} hash_depths={depths} "
+                    "(inner aggregate blocks push-down; Theorem 12.4)"))
+    return rows

@@ -1,0 +1,45 @@
+"""Kernel microbenchmarks: Pallas (interpret) vs jnp reference.
+
+interpret=True on CPU measures correctness-path overhead, not TPU speed;
+the BlockSpec tiling is the TPU contract.  Derived column reports the
+bytes/row footprint that sets the TPU roofline for each kernel.
+"""
+
+from __future__ import annotations
+
+from typing import List
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import Row, timeit
+from repro.kernels.corr_diff.ops import corr_moments
+from repro.kernels.corr_diff.ref import corr_diff_ref
+from repro.kernels.hash_threshold.ops import hash_threshold
+from repro.kernels.hash_threshold.ref import hash_threshold_ref
+from repro.kernels.segment_aggsum.ops import segment_sum
+from repro.kernels.segment_aggsum.ref import segment_sum_ref
+
+
+def run(quick: bool = False) -> List[Row]:
+    n = 1 << (14 if quick else 18)
+    rows: List[Row] = []
+    keys = jnp.asarray(np.random.default_rng(0).integers(0, 2**31 - 1, n, dtype=np.int32))
+    t_ref = timeit(lambda: hash_threshold_ref([keys], 0.1, 1).block_until_ready())
+    t_pal = timeit(lambda: hash_threshold(keys[None][0:1][0:1] if False else [keys], 0.1, 1).block_until_ready())
+    rows.append(Row("kernel_hash_threshold", t_pal,
+                    f"ref={t_ref:.0f}us; 4B read + 1B write per row"))
+    gid = jnp.asarray(np.random.default_rng(1).integers(0, 512, n, dtype=np.int32))
+    vals = jnp.asarray(np.random.default_rng(2).normal(size=(n, 4)).astype(np.float32))
+    t_ref = timeit(lambda: segment_sum_ref(gid, vals, 512).block_until_ready())
+    t_pal = timeit(lambda: segment_sum(gid, vals, 512).block_until_ready())
+    rows.append(Row("kernel_segment_aggsum", t_pal,
+                    f"ref={t_ref:.0f}us; one-hot MXU matmul group-by"))
+    a = jnp.asarray(np.random.default_rng(3).normal(size=n).astype(np.float32))
+    b = jnp.asarray(np.random.default_rng(4).normal(size=n).astype(np.float32))
+    mask = jnp.asarray(np.random.default_rng(5).random(n) < 0.5)
+    t_ref = timeit(lambda: corr_diff_ref(a, b, mask)[0].block_until_ready())
+    t_pal = timeit(lambda: corr_moments(a, b, mask)[0].block_until_ready())
+    rows.append(Row("kernel_corr_diff", t_pal,
+                    f"ref={t_ref:.0f}us; fused Σd,Σd²,count single pass"))
+    return rows

@@ -1,0 +1,162 @@
+"""Roofline analysis from the dry-run artifacts (§Roofline of EXPERIMENTS.md).
+
+Per (arch × shape × mesh) cell, derives the three roofline terms from the
+trip-count-aware HLO analysis (repro/launch/hlo_analysis.py):
+
+    compute    = HLO_FLOPs_per_device  / peak_FLOPs            [s]
+    memory     = HLO_bytes_per_device  / HBM_bw                [s]
+    collective = wire_bytes_per_device / link_bw               [s]
+
+Hardware: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI
+(1 link assumed per transfer: conservative).  All HLO quantities are
+per-device per-step, so dividing by per-chip bandwidths matches the spec's
+global-quantity ÷ chips formula exactly.
+
+Also reports MODEL_FLOPS = 6·N·D (train) or 2·N_active·D (inference) and
+the useful-compute ratio MODEL_FLOPS / (HLO_FLOPs × chips), plus the
+roofline fraction = ideal_model_time / dominant_term — the per-cell score.
+
+Usage:  PYTHONPATH=src python -m benchmarks.roofline [--mesh single] [--csv]
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+PEAK_FLOPS = 197e12  # bf16 per chip
+HBM_BW = 819e9
+LINK_BW = 50e9
+
+HERE = os.path.dirname(__file__)
+RESULTS = os.path.join(HERE, "dryrun_results")
+
+
+def model_flops(rec: dict) -> float:
+    """Analytic useful FLOPs per step (global)."""
+    n = rec["params"]["active_non_embed"]
+    n_emb = rec["params"]["embed"]
+    if rec["kind"] == "train":
+        tokens = rec["global_batch"] * rec["seq_len"]
+        return 6.0 * (n + n_emb) * tokens
+    if rec["kind"] == "prefill":
+        tokens = rec["global_batch"] * rec["seq_len"]
+        return 2.0 * (n + n_emb) * tokens
+    # decode: one token per sequence
+    return 2.0 * (n + n_emb) * rec["global_batch"]
+
+
+def ideal_time(rec: dict) -> float:
+    """Ideal step time: compute-ideal for train/prefill; decode is weight+
+    cache streaming-bound (every active param + cache line read once)."""
+    chips = rec["chips"]
+    mf = model_flops(rec)
+    t_flops = mf / (chips * PEAK_FLOPS)
+    if rec["kind"] != "decode":
+        return t_flops
+    weight_bytes = rec["params"]["active"] * 2  # bf16 resident weights
+    cache_bytes = rec.get("memory_analysis", {}).get("argument_size_in_bytes", 0)
+    t_stream = (weight_bytes / chips + cache_bytes) / HBM_BW
+    return max(t_flops, t_stream)
+
+
+def analyze_record(rec: dict) -> dict:
+    ha = rec["hlo_analysis"]
+    chips = rec["chips"]
+    t_compute = ha["flops"] / PEAK_FLOPS
+    t_memory = ha["memory_bytes"] / HBM_BW
+    t_coll = ha["collective_bytes"] / LINK_BW
+    terms = {"compute": t_compute, "memory": t_memory, "collective": t_coll}
+    dominant = max(terms, key=terms.get)
+    mf = model_flops(rec)
+    t_ideal = ideal_time(rec)
+    frac = t_ideal / max(terms[dominant], 1e-30)
+    return {
+        "arch": rec["arch"],
+        "shape": rec["shape"],
+        "mesh": rec["mesh"],
+        "chips": chips,
+        "t_compute_s": t_compute,
+        "t_memory_s": t_memory,
+        "t_collective_s": t_coll,
+        "dominant": dominant,
+        "model_flops": mf,
+        "hlo_flops_global": ha["flops"] * chips,
+        "useful_ratio": mf / max(ha["flops"] * chips, 1e-30),
+        "roofline_fraction": frac,
+        "hbm_temp_gb": rec.get("memory_analysis", {}).get("temp_size_in_bytes", 0) / 1e9,
+    }
+
+
+def load(mesh: str = "single", results_dir: str = RESULTS):
+    rows, skips = [], []
+    for path in sorted(glob.glob(os.path.join(results_dir, f"*__{mesh}.json"))):
+        with open(path) as f:
+            rec = json.load(f)
+        if rec["status"] == "skipped":
+            skips.append((rec["arch"], rec["shape"], rec.get("skip_reason", "")))
+            continue
+        if rec["status"] != "ok":
+            skips.append((rec["arch"], rec["shape"], "ERROR " + rec.get("error", "")[:60]))
+            continue
+        rows.append(analyze_record(rec))
+    return rows, skips
+
+
+def bottleneck_note(r: dict) -> str:
+    d = r["dominant"]
+    if d == "compute":
+        if r["useful_ratio"] < 0.5:
+            return "compute-bound but >50% of FLOPs are overhead (remat/attn masking) — cut recompute"
+        return "compute-bound near useful FLOPs — increase arithmetic intensity per chip only by scale-up"
+    if d == "memory":
+        return "HBM-bound — fuse/keep weights resident (larger per-step batch, weight-stationary layout)"
+    return "collective-bound — overlap FSDP gathers with compute / shrink TP traffic"
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="single", choices=["single", "multi"])
+    ap.add_argument("--csv", action="store_true")
+    ap.add_argument("--results", default=RESULTS)
+    args = ap.parse_args()
+
+    rows, skips = load(args.mesh, args.results)
+    rows.sort(key=lambda r: (r["arch"], r["shape"]))
+    if args.csv:
+        cols = ["arch", "shape", "mesh", "t_compute_s", "t_memory_s",
+                "t_collective_s", "dominant", "model_flops", "useful_ratio",
+                "roofline_fraction"]
+        print(",".join(cols))
+        for r in rows:
+            print(",".join(str(r[c]) for c in cols))
+        return
+
+    hdr = (f"{'arch':24s} {'shape':12s} {'compute':>10s} {'memory':>10s} "
+           f"{'collect':>10s} {'dominant':>10s} {'useful':>7s} {'roofline':>9s}")
+    print(hdr)
+    print("-" * len(hdr))
+    for r in rows:
+        print(f"{r['arch']:24s} {r['shape']:12s} "
+              f"{r['t_compute_s']:10.3e} {r['t_memory_s']:10.3e} "
+              f"{r['t_collective_s']:10.3e} {r['dominant']:>10s} "
+              f"{r['useful_ratio']:7.2f} {r['roofline_fraction']:9.3f}")
+    print(f"\n{len(rows)} cells, {len(skips)} skipped:")
+    for a, s, why in skips:
+        print(f"  skip {a} × {s}: {why}")
+
+    # hillclimb candidates
+    ranked = sorted(rows, key=lambda r: r["roofline_fraction"])
+    coll = sorted(rows, key=lambda r: -(r["t_collective_s"] /
+                                        max(r["t_compute_s"] + r["t_memory_s"], 1e-30)))
+    print("\nhillclimb candidates:")
+    print(f"  worst roofline fraction : {ranked[0]['arch']} × {ranked[0]['shape']} "
+          f"({ranked[0]['roofline_fraction']:.3f}) — {bottleneck_note(ranked[0])}")
+    print(f"  most collective-bound   : {coll[0]['arch']} × {coll[0]['shape']} "
+          f"(coll/denom {coll[0]['t_collective_s'] / max(coll[0]['t_compute_s'] + coll[0]['t_memory_s'], 1e-30):.2f})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,51 @@
+"""Framework-integration benchmark: SVC monitoring inside a training loop.
+
+Trains the phi3-family smoke model for a few steps with the SVC-maintained
+per-domain loss views ingesting every step; reports the monitoring overhead
+(SVC refresh amortized per train step) and the freshness advantage vs
+maintaining only at checkpoint cadence.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import List
+
+import jax
+import numpy as np
+
+from benchmarks.common import Row
+from repro.configs import get_smoke_config
+from repro.data.pipeline import PipelineConfig, PipelineStats, TokenPipeline
+from repro.models import get_model
+from repro.training import AdamWConfig, init_train_state, make_train_step
+
+
+def run(quick: bool = False) -> List[Row]:
+    cfg = get_smoke_config("phi3-mini-3.8b")
+    model = get_model(cfg)
+    state = init_train_state(model, jax.random.PRNGKey(0))
+    step = jax.jit(make_train_step(model, AdamWConfig(lr=1e-3)))
+    pipe = TokenPipeline(PipelineConfig(vocab=cfg.vocab, seq_len=64, global_batch=8))
+    stats = PipelineStats(m=0.25)
+
+    n_steps = 5 if quick else 12
+    t_train = t_svc = 0.0
+    for i in range(n_steps):
+        batch = pipe.batch(i)
+        t0 = time.perf_counter()
+        state, metrics = step(state, batch)
+        jax.block_until_ready(metrics["loss"])
+        t_train += time.perf_counter() - t0
+        t0 = time.perf_counter()
+        stats.ingest_step(np.asarray(metrics["domain_loss_sum"]),
+                          np.asarray(metrics["domain_count"]))
+        if i % 2 == 1:
+            stats.svc_refresh()
+        t_svc += time.perf_counter() - t0
+    est, (lo, hi) = stats.loss_estimate(0)
+    pipe.set_mixture(stats.mixture_weights())
+    return [Row("svc_training_overhead", t_svc / n_steps * 1e6,
+                f"train_step={t_train / n_steps * 1e6:.0f}us "
+                f"svc_share={t_svc / max(t_train + t_svc, 1e-9) * 100:.1f}% "
+                f"dom0_loss={est:.3f}ci=[{lo:.3f},{hi:.3f}]")]

@@ -1,0 +1,19 @@
+"""Serving example: continuous-batching decode over a pool of requests.
+
+Run:  PYTHONPATH=src python examples/serve_lm.py
+"""
+
+from repro.launch import serve as serve_mod
+
+
+def main():
+    out = serve_mod.main([
+        "--arch", "gemma-2b", "--smoke",
+        "--requests", "12", "--max-batch", "4",
+        "--max-seq", "96", "--max-new", "8",
+    ])
+    assert out["completed"] == 12
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+"""repro: Stale View Cleaning (SVC) as a production JAX framework."""
+
+__version__ = "1.0.0"

@@ -1,0 +1,155 @@
+"""Checkpointing: atomic, sharded, async, with retention and elastic restore.
+
+Layout (one directory per step):
+
+    <root>/step_000042/
+        manifest.json         # tree structure, shapes, dtypes, host count
+        host_0000.npz         # this host's param/opt shards (flattened keys)
+        ...
+        COMMITTED             # written last; partial checkpoints are ignored
+
+Writes go to ``step_X.tmp`` and are atomically renamed after COMMITTED is
+placed, so a crash mid-write can never corrupt the restore path.  An async
+mode hands the (already host-local) arrays to a writer thread so the train
+loop only blocks on device→host transfer, not on disk.
+
+Elastic restore: the manifest records every leaf's global shape; on resume
+with a different host count the loader reassembles from whatever host files
+exist (full copies in this single-process container) and the new mesh
+re-shards via the jit in_shardings — no resharding logic is needed beyond
+loading the full tree (DESIGN.md §5).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+import time
+from typing import Any, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+
+def _flatten(tree: Any) -> List[Tuple[str, np.ndarray]]:
+    flat = []
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        arr = np.asarray(leaf)
+        if arr.dtype.name == "bfloat16":  # npz has no native bf16: widen
+            arr = arr.astype(np.float32)
+        flat.append((key, arr))
+    return flat
+
+
+class CheckpointManager:
+    def __init__(self, root: str, keep: int = 3, host_id: int = 0, n_hosts: int = 1,
+                 async_write: bool = False):
+        self.root = root
+        self.keep = keep
+        self.host_id = host_id
+        self.n_hosts = n_hosts
+        self.async_write = async_write
+        self._thread: Optional[threading.Thread] = None
+        os.makedirs(root, exist_ok=True)
+
+    # -- save -----------------------------------------------------------------
+    def save(self, step: int, tree: Any, extra: Optional[dict] = None) -> str:
+        flat = _flatten(tree)  # device→host happens here
+        if self.async_write:
+            self.wait()
+            self._thread = threading.Thread(
+                target=self._write, args=(step, flat, tree, extra), daemon=True
+            )
+            self._thread.start()
+        else:
+            self._write(step, flat, tree, extra)
+        return self._dir(step)
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def _dir(self, step: int) -> str:
+        return os.path.join(self.root, f"step_{step:08d}")
+
+    def _write(self, step: int, flat, tree, extra) -> None:
+        final = self._dir(step)
+        tmp = final + ".tmp"
+        os.makedirs(tmp, exist_ok=True)
+        np.savez(os.path.join(tmp, f"host_{self.host_id:04d}.npz"),
+                 **{k: v for k, v in flat})
+        if self.host_id == 0:
+            treedef = jax.tree_util.tree_structure(tree)
+            manifest = {
+                "step": step,
+                "n_hosts": self.n_hosts,
+                "treedef": str(treedef),
+                "leaves": [
+                    {"key": k, "shape": list(v.shape), "dtype": str(v.dtype)}
+                    for k, v in flat
+                ],
+                "extra": extra or {},
+                "time": time.time(),
+            }
+            with open(os.path.join(tmp, "manifest.json"), "w") as f:
+                json.dump(manifest, f)
+        open(os.path.join(tmp, "COMMITTED"), "w").close()
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)
+        self._gc()
+
+    def _gc(self) -> None:
+        steps = self.list_steps()
+        for s in steps[: -self.keep]:
+            shutil.rmtree(self._dir(s), ignore_errors=True)
+
+    # -- restore ----------------------------------------------------------------
+    def list_steps(self) -> List[int]:
+        out = []
+        for d in sorted(os.listdir(self.root)):
+            if d.startswith("step_") and not d.endswith(".tmp"):
+                if os.path.exists(os.path.join(self.root, d, "COMMITTED")):
+                    out.append(int(d.split("_")[1]))
+        return sorted(out)
+
+    def restore(self, template: Any, step: Optional[int] = None) -> Tuple[Any, dict]:
+        steps = self.list_steps()
+        if not steps:
+            raise FileNotFoundError(f"no committed checkpoints under {self.root}")
+        step = step if step is not None else steps[-1]
+        d = self._dir(step)
+        with open(os.path.join(d, "manifest.json")) as f:
+            manifest = json.load(f)
+        data = {}
+        for fn in sorted(os.listdir(d)):
+            if fn.startswith("host_") and fn.endswith(".npz"):
+                with np.load(os.path.join(d, fn)) as z:
+                    for k in z.files:
+                        data[k] = z[k]
+        paths = jax.tree_util.tree_flatten_with_path(template)[0]
+        treedef = jax.tree_util.tree_structure(template)
+        leaves = []
+        for path, leaf in paths:
+            key = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+            if key not in data:
+                raise KeyError(f"checkpoint missing leaf {key}")
+            arr = data[key]
+            want = tuple(leaf.shape)
+            if tuple(arr.shape) != want:
+                raise ValueError(f"{key}: checkpoint shape {arr.shape} != {want}")
+            import jax.numpy as jnp
+            leaves.append(jnp.asarray(arr).astype(leaf.dtype))
+        return jax.tree_util.tree_unflatten(treedef, leaves), manifest.get("extra", {})
+
+
+def latest_step(root: str) -> Optional[int]:
+    if not os.path.isdir(root):
+        return None
+    mgr = CheckpointManager(root)
+    steps = mgr.list_steps()
+    return steps[-1] if steps else None

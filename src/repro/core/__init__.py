@@ -1,0 +1,25 @@
+"""SVC core: the paper's contribution (hashing, push-down, estimation)."""
+
+from repro.core import hashing
+from repro.core.estimators import Estimate, Query, exact, svc_aqp, svc_corr, variance_comparison
+from repro.core.maintenance import (
+    DeltaSet,
+    ViewDef,
+    change_table_strategy,
+    clean_sample,
+    cleaning_plan,
+    full_maintenance,
+    upsert,
+    delete_keys,
+    staleness_report,
+)
+from repro.core.pushdown import push_down, fully_pushed, pushdown_report
+from repro.core.bootstrap import bootstrap_aqp, bootstrap_corr
+from repro.core.minmax import svc_minmax
+from repro.core.outliers import (
+    OutlierIndex,
+    apply_hash_with_outliers,
+    build_outlier_index,
+    propagate_outlier_keys,
+    update_outlier_index,
+)

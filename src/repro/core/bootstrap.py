@@ -1,0 +1,92 @@
+"""Statistical bootstrap bounds for non-sample-mean aggregates (§5.2.5).
+
+median / percentile estimates cannot be bounded analytically; we resample
+the (clean, stale) samples with replacement B times, compute the estimate
+(or the correction c) per replicate, and report empirical percentiles.
+
+Vectorized with vmap over replicates: each replicate draws indices from the
+valid rows of a fixed-capacity relation (dynamic valid count handled by
+drawing u ~ U[0,1) and indexing floor(u·k) into the compacted valid rows).
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.estimators import Estimate, Query, _cond_mask, _values, masked_quantile
+from repro.relational.relation import Relation
+
+
+def _gather_cond(rel: Relation, query: Query) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Compact cond-row values to the front; return (values, count)."""
+    cond = _cond_mask(rel, query)
+    vals = _values(rel, query)
+    order = jnp.argsort(~cond)  # True (cond) rows first, stable
+    v = vals[order]
+    k = jnp.sum(cond.astype(jnp.int32))
+    return v, k
+
+
+def _resample_stat(values: jnp.ndarray, k: jnp.ndarray, u: jnp.ndarray, q: float) -> jnp.ndarray:
+    """One bootstrap replicate: resample k rows w/ replacement, take quantile."""
+    n = values.shape[0]
+    idx = jnp.clip((u * jnp.maximum(k, 1).astype(jnp.float32)).astype(jnp.int32), 0, n - 1)
+    sample = values[idx]
+    live = jnp.arange(n) < k  # only first k draws are "real" rows
+    return masked_quantile(sample, live, q)
+
+
+def bootstrap_aqp(
+    clean_sample: Relation,
+    query: Query,
+    rng: jax.Array,
+    B: int = 200,
+    confidence: float = 0.95,
+) -> Estimate:
+    """SVC+AQP for median/percentile with bootstrap CI."""
+    q = 0.5 if query.agg == "median" else query.q
+    values, k = _gather_cond(clean_sample, query)
+    us = jax.random.uniform(rng, (B, values.shape[0]))
+    stats = jax.vmap(lambda u: _resample_stat(values, k, u, q))(us)
+    alpha = (1.0 - confidence) / 2.0
+    lo = jnp.quantile(stats, alpha)
+    hi = jnp.quantile(stats, 1.0 - alpha)
+    point = masked_quantile(values, jnp.arange(values.shape[0]) < k, q)
+    stderr = jnp.std(stats)
+    return Estimate(point, stderr, lo, hi, "SVC+AQP(bootstrap)", confidence)
+
+
+def bootstrap_corr(
+    stale_result: jnp.ndarray,
+    clean_sample: Relation,
+    stale_sample: Relation,
+    query: Query,
+    rng: jax.Array,
+    B: int = 200,
+    confidence: float = 0.95,
+) -> Estimate:
+    """SVC+CORR bootstrap (§5.2.5): empirical distribution of the correction c.
+
+    Per replicate: resample Ŝ' and Ŝ independently with replacement, apply the
+    AQP estimate to each, record the difference; report percentiles of c.
+    """
+    q = 0.5 if query.agg == "median" else query.q
+    v_new, k_new = _gather_cond(clean_sample, query)
+    v_old, k_old = _gather_cond(stale_sample, query)
+    r1, r2 = jax.random.split(rng)
+    u_new = jax.random.uniform(r1, (B, v_new.shape[0]))
+    u_old = jax.random.uniform(r2, (B, v_old.shape[0]))
+
+    def one(un, uo):
+        return _resample_stat(v_new, k_new, un, q) - _resample_stat(v_old, k_old, uo, q)
+
+    cs = jax.vmap(one)(u_new, u_old)
+    alpha = (1.0 - confidence) / 2.0
+    c_point = jnp.median(cs)
+    lo = stale_result + jnp.quantile(cs, alpha)
+    hi = stale_result + jnp.quantile(cs, 1.0 - alpha)
+    value = stale_result + c_point
+    return Estimate(value, jnp.std(cs), lo, hi, "SVC+CORR(bootstrap)", confidence)

@@ -1,0 +1,100 @@
+"""Distributed SVC: shard_map sample cleaning over the data axis (§7.5).
+
+The paper's Spark deployment distributes both the view and the deltas; SVC's
+hashing is deterministic and row-local, so each shard cleans its partition
+independently and only the *aggregated* delta view is combined (psum) — no
+shuffle of raw rows.  This mirrors the paper's observation that sampled
+maintenance parallelizes trivially and exploits idle interconnect time.
+
+``sharded_delta_groupby`` computes η-filtered per-group partial aggregates
+on each data shard and psums them; the caller merges the (small, global)
+delta view into the stale sample exactly as in the single-node path.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.core import hashing
+
+
+def make_sharded_delta_groupby(
+    mesh: Mesh,
+    axis: str,
+    num_groups: int,
+    m: float,
+    seed: int,
+    agg_cols: Sequence[str],
+):
+    """Returns f(keys (N,), valid (N,), values dict col->(N,)) -> dict of
+    (num_groups,) global aggregates (count + per-col sums) over the hash
+    sample.  N is sharded over ``axis``; group keys must be < num_groups.
+    """
+    agg_cols = tuple(agg_cols)
+
+    def local(keys, valid, *vals):
+        keep = hashing.hash_threshold_mask_ref([keys], m, seed) & valid
+        gid = jnp.where(keep, keys, num_groups)  # overflow slot
+        count = jax.ops.segment_sum(
+            keep.astype(jnp.float32), gid, num_segments=num_groups + 1
+        )[:num_groups]
+        outs = [count]
+        for v in vals:
+            outs.append(
+                jax.ops.segment_sum(
+                    jnp.where(keep, v, 0.0).astype(jnp.float32), gid,
+                    num_segments=num_groups + 1,
+                )[:num_groups]
+            )
+        outs = [jax.lax.psum(o, axis) for o in outs]
+        return tuple(outs)
+
+    n_vals = len(agg_cols)
+    f = jax.shard_map(
+        local,
+        mesh=mesh,
+        in_specs=(P(axis), P(axis)) + (P(axis),) * n_vals,
+        out_specs=(P(),) * (n_vals + 1),
+        check_vma=False,
+    )
+
+    def run(keys: jnp.ndarray, valid: jnp.ndarray, values: Dict[str, jnp.ndarray]):
+        outs = f(keys, valid, *[values[c] for c in agg_cols])
+        res = {"count": outs[0]}
+        for i, c in enumerate(agg_cols):
+            res[c] = outs[i + 1]
+        return res
+
+    return jax.jit(run)
+
+
+def merge_delta_into_sample(
+    sample_keys: jnp.ndarray,  # (G,) keys of the sampled view rows (SENTINEL pad)
+    sample_vals: Dict[str, jnp.ndarray],
+    delta: Dict[str, jnp.ndarray],  # dense (num_groups,) per-key aggregates
+    m: float,
+    seed: int,
+    num_groups: int,
+) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    """Apply the (global, dense-keyed) delta view to the sample: existing
+    sampled groups are updated in place; groups new to the view enter the
+    sample iff their key hashes under the threshold (missing-row rule of
+    Property 1)."""
+    all_keys = jnp.arange(num_groups, dtype=jnp.int32)
+    in_sample_mask = jnp.zeros((num_groups,), bool)
+    valid_keys = jnp.where(sample_keys < num_groups, sample_keys, 0)
+    in_sample_mask = in_sample_mask.at[valid_keys].set(sample_keys < num_groups)
+    hashed = hashing.hash_threshold_mask_ref([all_keys], m, seed)
+    member = in_sample_mask | (hashed & (delta["count"] > 0))
+    out_vals = {}
+    for c, dv in delta.items():
+        base = jnp.zeros((num_groups,), jnp.float32)
+        base = base.at[valid_keys].add(
+            jnp.where(sample_keys < num_groups, sample_vals.get(c, jnp.zeros_like(sample_keys, jnp.float32)), 0.0)
+        )
+        out_vals[c] = jnp.where(member, base + dv, 0.0)
+    return jnp.where(member, all_keys, jnp.int32(2**31 - 1)), out_vals

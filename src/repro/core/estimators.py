@@ -1,0 +1,274 @@
+"""Query result estimation on corresponding samples (§5).
+
+Two estimators for q(S'):
+
+  SVC+AQP   direct:      q(S') ≈ s · q(Ŝ')
+  SVC+CORR  correction:  q(S') ≈ q(S) + (s·q(Ŝ') − s·q(Ŝ))
+
+with CLT confidence intervals for the sample-mean class (sum/count/avg,
+§5.2.1), the correspondence-subtract operator (Def. 4) for the correction,
+and the §5.2.2 variance analysis (CORR wins iff σ_S² ≤ 2·cov(S,S')).
+
+Row weights: every sampled row carries weight 1/m; rows pinned by the
+outlier index (§6) carry weight 1 and are flagged in the ``__outlier``
+column — the estimators here implement the stratified merge of §6.3
+uniformly through the per-row weight.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax.numpy as jnp
+
+from repro.relational import ops
+from repro.relational.expr import Expr, eval_expr
+from repro.relational.relation import Relation
+
+OUTLIER_COL = "__outlier"
+
+
+@dataclasses.dataclass(frozen=True)
+class Query:
+    """SELECT agg(col) FROM view WHERE pred (§3.2 Problem 2 form)."""
+
+    agg: str  # sum | count | avg | median | min | max | percentile
+    col: Optional[str] = None
+    pred: Optional[Expr] = None
+    q: float = 0.5  # for percentile
+
+
+@dataclasses.dataclass
+class Estimate:
+    value: jnp.ndarray
+    stderr: jnp.ndarray
+    ci_low: jnp.ndarray
+    ci_high: jnp.ndarray
+    method: str
+    confidence: float
+
+    def __iter__(self):  # (value, lo, hi) convenience
+        return iter((self.value, self.ci_low, self.ci_high))
+
+
+# gaussian two-sided tail values
+_GAMMA = {0.90: 1.645, 0.95: 1.96, 0.99: 2.576}
+
+
+def _gamma(confidence: float) -> float:
+    return _GAMMA.get(round(confidence, 2), 1.96)
+
+
+def _cond_mask(rel: Relation, query: Query) -> jnp.ndarray:
+    mask = rel.valid
+    if query.pred is not None:
+        mask = mask & eval_expr(query.pred, rel.columns, jnp).astype(bool)
+    return mask
+
+
+def _weights(rel: Relation, m: float) -> jnp.ndarray:
+    """Per-row inverse inclusion probability (outlier stratum = 1)."""
+    w = jnp.full(rel.valid.shape, 1.0 / m, jnp.float32)
+    if OUTLIER_COL in rel.columns:
+        w = jnp.where(rel.col(OUTLIER_COL).astype(bool), 1.0, w)
+    return w
+
+
+def _values(rel: Relation, query: Query) -> jnp.ndarray:
+    if query.agg == "count":
+        return jnp.ones(rel.valid.shape, jnp.float32)
+    if query.col is None:
+        raise ValueError(f"agg {query.agg} needs a column")
+    return jnp.asarray(rel.col(query.col), jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Exact evaluation (ground truth on a full view; also q(S) for CORR)
+# ---------------------------------------------------------------------------
+
+def exact(view: Relation, query: Query) -> jnp.ndarray:
+    cond = _cond_mask(view, query)
+    vals = _values(view, query)
+    if query.agg in ("sum", "count"):
+        return jnp.sum(jnp.where(cond, vals, 0.0))
+    if query.agg == "avg":
+        k = jnp.sum(cond.astype(jnp.float32))
+        return jnp.sum(jnp.where(cond, vals, 0.0)) / jnp.maximum(k, 1.0)
+    if query.agg in ("median", "percentile"):
+        q = 0.5 if query.agg == "median" else query.q
+        return masked_quantile(vals, cond, q)
+    if query.agg == "min":
+        return jnp.min(jnp.where(cond, vals, jnp.inf))
+    if query.agg == "max":
+        return jnp.max(jnp.where(cond, vals, -jnp.inf))
+    raise ValueError(query.agg)
+
+
+def masked_quantile(values: jnp.ndarray, mask: jnp.ndarray, q: float) -> jnp.ndarray:
+    """Quantile of values[mask] with dynamic count (sort + interpolate)."""
+    big = jnp.float32(3.4e38)
+    v = jnp.where(mask, values, big)
+    sv = jnp.sort(v)
+    k = jnp.sum(mask.astype(jnp.float32))
+    pos = q * jnp.maximum(k - 1.0, 0.0)
+    lo = jnp.clip(jnp.floor(pos).astype(jnp.int32), 0, v.shape[0] - 1)
+    hi = jnp.clip(lo + 1, 0, v.shape[0] - 1)
+    frac = pos - lo.astype(jnp.float32)
+    hi_val = jnp.where(hi.astype(jnp.float32) <= jnp.maximum(k - 1.0, 0.0), sv[hi], sv[lo])
+    return sv[lo] * (1.0 - frac) + hi_val * frac
+
+
+# ---------------------------------------------------------------------------
+# trans tables (§5.2.1) and SVC+AQP
+# ---------------------------------------------------------------------------
+
+def trans_values(rel: Relation, query: Query, m: float) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """(t_i, row_mask): the §5.2.1 rewritten per-row values.
+
+    sum:   t = w · attr · cond   over all sampled rows
+    count: t = w · cond          over all sampled rows
+    avg:   t = attr              over cond rows only
+    """
+    cond = _cond_mask(rel, query)
+    vals = _values(rel, query)
+    w = _weights(rel, m)
+    if query.agg in ("sum", "count"):
+        t = jnp.where(rel.valid, w * jnp.where(cond, vals, 0.0), 0.0)
+        return t, rel.valid
+    if query.agg == "avg":
+        return jnp.where(cond, vals, 0.0), cond
+    raise ValueError(f"trans_values: {query.agg} is not in the sample-mean class")
+
+
+def _masked_moments(t: jnp.ndarray, mask: jnp.ndarray):
+    k = jnp.sum(mask.astype(jnp.float32))
+    s = jnp.sum(jnp.where(mask, t, 0.0))
+    mean = s / jnp.maximum(k, 1.0)
+    var = jnp.sum(jnp.where(mask, (t - mean) ** 2, 0.0)) / jnp.maximum(k - 1.0, 1.0)
+    return k, s, mean, var
+
+
+def _ht_stderr(t: jnp.ndarray, mask: jnp.ndarray, rel: Relation, m: float):
+    """Horvitz-Thompson variance for hash (Poisson) sampling of totals.
+
+    Var(Σ_S x/π) = Σ_pop x²(1−π)/π, estimated from the sample as
+    Σ_S (1−π_i)·t_i² with t_i = x_i/π_i.  Rows pinned by the outlier index
+    have π=1 and contribute zero variance (§6.3 deterministic stratum).
+    The paper's §5.2.1 SQL sketch assumes a known population size; HT is
+    the correct generalization when missing rows make N' unknown
+    (deviation documented in EXPERIMENTS.md §Validation).
+    """
+    pi = jnp.full(t.shape, m, jnp.float32)
+    if OUTLIER_COL in rel.columns:
+        pi = jnp.where(rel.col(OUTLIER_COL).astype(bool), 1.0, pi)
+    var = jnp.sum(jnp.where(mask, (1.0 - pi) * t * t, 0.0))
+    return jnp.sqrt(jnp.maximum(var, 0.0))
+
+
+def svc_aqp(clean_sample: Relation, query: Query, m: float, confidence: float = 0.95) -> Estimate:
+    """Direct estimate from the clean sample (§5.1)."""
+    g = _gamma(confidence)
+    if query.agg in ("sum", "count"):
+        t, mask = trans_values(clean_sample, query, m)
+        k, s, mean, var = _masked_moments(t, mask)
+        stderr = _ht_stderr(t, mask, clean_sample, m)
+        value = s
+    elif query.agg == "avg":
+        t, mask = trans_values(clean_sample, query, m)
+        k, s, mean, var = _masked_moments(t, mask)
+        stderr = jnp.sqrt(var / jnp.maximum(k, 1.0))
+        value = mean
+    else:
+        raise ValueError(f"svc_aqp CLT path supports sum/count/avg, got {query.agg}")
+    return Estimate(value, stderr, value - g * stderr, value + g * stderr, "SVC+AQP", confidence)
+
+
+# ---------------------------------------------------------------------------
+# Correspondence subtraction (Def. 4) and SVC+CORR
+# ---------------------------------------------------------------------------
+
+def correspondence_diff(
+    clean_sample: Relation, stale_sample: Relation, query: Query, m: float
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Per-key diff table: trans(Ŝ') −̇ trans(Ŝ) with Ø→0 (Def. 4).
+
+    Returns (d_i, mask) over the full-outer-join row space.
+    """
+    pk = clean_sample.schema.pk
+    t_new, _ = trans_values(clean_sample, query, m)
+    t_old, _ = trans_values(stale_sample, query, m)
+    new_t = clean_sample.replace(columns={**clean_sample.columns, "__t": t_new})
+    old_t = stale_sample.replace(columns={**stale_sample.columns, "__t": t_old})
+    new_t = new_t.replace(schema=new_t.schema.with_columns(tuple(new_t.columns)))
+    old_t = old_t.replace(schema=old_t.schema.with_columns(tuple(old_t.columns)))
+    joined = ops.outer_join_unique(new_t, old_t, on=pk, how="outer", suffixes=("_new", "_old"))
+    d = joined.col("__t_new") - joined.col("__t_old")  # Ø filled with 0 by the join
+    return jnp.where(joined.valid, d, 0.0), joined.valid
+
+
+def svc_corr(
+    stale_result: jnp.ndarray,
+    clean_sample: Relation,
+    stale_sample: Relation,
+    query: Query,
+    m: float,
+    confidence: float = 0.95,
+) -> Estimate:
+    """Correction estimate: q(S) + ĉ with CLT bounds on the diff (§5.1/5.2.1)."""
+    g = _gamma(confidence)
+    if query.agg in ("sum", "count"):
+        d, mask = correspondence_diff(clean_sample, stale_sample, query, m)
+        k, s, mean, var = _masked_moments(d, mask)
+        c = s
+        # HT variance of the correction total: keys sampled w.p. m (pinned
+        # outlier groups appear in both samples → their diff is exact but we
+        # cannot see the flag post-join; treat all rows at π=m: conservative)
+        stderr = jnp.sqrt(jnp.maximum(jnp.sum(jnp.where(mask, (1.0 - m) * d * d, 0.0)), 0.0))
+    elif query.agg == "avg":
+        # paired diff over matched cond rows; unmatched rows enter through the
+        # two sample means (documented approximation, coverage-tested).
+        new_est = svc_aqp(clean_sample, query, m, confidence)
+        old_est = svc_aqp(stale_sample, query, m, confidence)
+        c = new_est.value - old_est.value
+        d, mask = correspondence_diff(clean_sample, stale_sample, query, m)
+        # variance of paired mean-difference
+        k, s, mean, var = _masked_moments(d, mask)
+        kc = jnp.maximum(
+            jnp.sum(_cond_mask(clean_sample, query).astype(jnp.float32)), 1.0
+        )
+        stderr = jnp.sqrt(var / kc)
+    else:
+        raise ValueError(f"svc_corr CLT path supports sum/count/avg, got {query.agg}")
+    value = stale_result + c
+    return Estimate(value, stderr, value - g * stderr, value + g * stderr, "SVC+CORR", confidence)
+
+
+# ---------------------------------------------------------------------------
+# §5.2.2: AQP vs CORR break-even analysis
+# ---------------------------------------------------------------------------
+
+def variance_comparison(
+    clean_sample: Relation, stale_sample: Relation, query: Query, m: float
+):
+    """Estimate (var_AQP, var_CORR, cov, break_even) from the samples.
+
+    CORR wins iff σ_S² ≤ 2·cov(S,S') (§5.2.2).
+    """
+    t_new, mask_new = trans_values(clean_sample, query, m)
+    _, _, _, var_new = _masked_moments(t_new, mask_new)
+    t_old, mask_old = trans_values(stale_sample, query, m)
+    _, _, _, var_old = _masked_moments(t_old, mask_old)
+    d, mask_d = correspondence_diff(clean_sample, stale_sample, query, m)
+    _, _, _, var_d = _masked_moments(d, mask_d)
+    # paper's §5.2.2 decomposition (reported for analysis)
+    cov = 0.5 * (var_old + var_new - var_d)
+    # decision rule: predicted estimator variances under hash sampling (HT)
+    ht_aqp = _ht_stderr(t_new, mask_new, clean_sample, m) ** 2
+    ht_corr = jnp.sum(jnp.where(mask_d, (1.0 - m) * d * d, 0.0))
+    return {
+        "var_aqp": ht_aqp,
+        "var_corr": ht_corr,
+        "cov": cov,
+        "corr_wins": ht_corr <= ht_aqp,
+    }

@@ -1,0 +1,99 @@
+"""The SVC hashing operator η_{a,m} (§4.4).
+
+Deterministic uniform hashing of (composite) primary keys to [0,1); rows with
+h(a) ≤ m form the sample.  Determinism is what yields the Correspondence
+property (§4.6, Prop. 2): hashing the same key in the stale and the
+up-to-date view makes the two samples correspond, for free.
+
+The paper uses MD5/SHA1 on a CPU and argues any near-uniform hash suffices
+(SUHA, §12.3).  On TPU we use the splitmix32/64 finalizer family — integer
+avalanche mixing that vectorizes on the VPU.  The hot path is implemented as
+a Pallas kernel (repro/kernels/hash_threshold); this module provides the
+reference jnp implementation and the dispatch switch.
+"""
+
+from __future__ import annotations
+
+from typing import Sequence, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+# Toggled by repro.kernels at import time if the Pallas path is requested.
+_USE_PALLAS = False
+
+
+def use_pallas(flag: bool) -> None:
+    global _USE_PALLAS
+    _USE_PALLAS = flag
+
+
+def splitmix32(x: jnp.ndarray) -> jnp.ndarray:
+    """32-bit avalanche finalizer (uint32 in, uint32 out)."""
+    x = x.astype(jnp.uint32)
+    x = x ^ (x >> 16)
+    x = x * jnp.uint32(0x7FEB352D)
+    x = x ^ (x >> 15)
+    x = x * jnp.uint32(0x846CA68B)
+    x = x ^ (x >> 16)
+    return x
+
+
+def hash_columns(cols: Sequence[jnp.ndarray], seed: int = 0) -> jnp.ndarray:
+    """Mix (composite) key columns into one uint32 hash per row."""
+    mix = np.uint32((0x9E3779B9 * (int(seed) + 1)) & 0xFFFFFFFF)
+    h = jnp.full(cols[0].shape, mix, jnp.uint32)
+    for c in cols:
+        h = splitmix32(h ^ splitmix32(c.astype(jnp.uint32)))
+    return h
+
+
+def hash_u01(cols: Sequence[jnp.ndarray], seed: int = 0) -> jnp.ndarray:
+    """Uniform [0,1) value per row (float32; ~2^-24 resolution)."""
+    h = hash_columns(cols, seed)
+    return h.astype(jnp.float32) * jnp.float32(1.0 / 4294967296.0)
+
+
+def hash_threshold_mask(
+    cols: Sequence[jnp.ndarray], m: float, seed: int = 0
+) -> jnp.ndarray:
+    """η_{a,m}: boolean keep-mask, True where h(a) ≤ m."""
+    if _USE_PALLAS:
+        from repro.kernels.hash_threshold import ops as _k
+
+        return _k.hash_threshold(tuple(cols), float(m), int(seed))
+    return hash_u01(cols, seed) < jnp.float32(m)
+
+
+def hash_threshold_mask_ref(cols: Sequence[jnp.ndarray], m: float, seed: int = 0):
+    """Pure-jnp oracle (never dispatches to Pallas)."""
+    return hash_u01(cols, seed) < jnp.float32(m)
+
+
+def apply_hash(rel, cols: Tuple[str, ...], m: float, seed: int = 0, pin=None):
+    """Apply η to a Relation: narrow validity to the hash sample.
+
+    ``pin`` (a Relation of key values, or None) pins outlier-index rows into
+    the sample with weight 1 (flagged in ``__outlier``; Def. 5 / §6.2).
+    """
+    arrays = [rel.columns[c] for c in cols]
+    mask = hash_threshold_mask(arrays, m, seed)
+    if pin is None:
+        return rel.replace(valid=rel.valid & mask)
+
+    from repro.core.outliers import member_keys
+    from repro.relational.relation import SENTINEL_KEY, Relation
+
+    pin_keys = tuple(
+        jnp.where(pin.valid, pin.col(c), jnp.asarray(SENTINEL_KEY, pin.col(c).dtype))
+        for c in pin.schema.pk
+    )
+    probe = tuple(
+        jnp.where(rel.valid, rel.col(c), jnp.asarray(SENTINEL_KEY, rel.col(c).dtype))
+        for c in cols
+    )
+    omask = member_keys(probe, pin_keys)
+    new_cols = dict(rel.columns)
+    new_cols["__outlier"] = (omask & rel.valid).astype(jnp.int8)
+    schema = rel.schema.with_columns(tuple(new_cols))
+    return Relation(new_cols, rel.valid & (mask | omask), schema)

@@ -1,0 +1,296 @@
+"""Maintenance strategies M and sample cleaning C (§3, §4.5).
+
+A *maintenance strategy* is a relational plan whose leaves are the stale
+view and the delta relations; executing it yields the up-to-date view
+S' = M(S, D, ∂D).  ``cleaning_plan`` derives the optimized expression
+C = pushdown(η_pk,m(M)) that materializes the up-to-date *sample*
+Ŝ' = C(Ŝ, D, ∂D) — Problem 1.
+
+The concrete strategy implemented is the change-table / delta-table method
+of Gupta & Mumick [22,23] used by the paper's experiments: apply the view
+definition to the deltas, full-outer-join the delta view onto the stale
+view on the group key, and merge aggregates with generalized projection
+(Example 1).  Insertions add, deletions subtract; sum/count (and avg via
+sum/count) are fully maintainable, min/max only under insert-only deltas.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Mapping, Optional, Tuple
+
+import jax.numpy as jnp
+
+from repro.core.pushdown import push_down
+from repro.relational import ops
+from repro.relational.expr import Bin, Col, Lit
+from repro.relational.plan import (
+    GroupByNode,
+    HashNode,
+    OuterJoin,
+    Plan,
+    ProjectNode,
+    Scan,
+    plan_pk,
+    substitute,
+)
+from repro.relational.execute import execute, execute_jit
+from repro.relational.relation import Relation, compact
+
+
+INS = "__ins"
+DEL = "__del"
+
+
+@dataclasses.dataclass(frozen=True)
+class ViewDef:
+    """A named materialized view: its defining plan over base relations."""
+
+    name: str
+    plan: Plan
+
+    @property
+    def pk(self) -> Tuple[str, ...]:
+        return plan_pk(self.plan)
+
+
+@dataclasses.dataclass
+class DeltaSet:
+    """∂D: per-base-relation insert and delete relations."""
+
+    inserts: Dict[str, Relation] = dataclasses.field(default_factory=dict)
+    deletes: Dict[str, Relation] = dataclasses.field(default_factory=dict)
+
+    def is_empty(self) -> bool:
+        return not self.inserts and not self.deletes
+
+
+# ---------------------------------------------------------------------------
+# Change-table strategy construction
+# ---------------------------------------------------------------------------
+
+def change_table_strategy(
+    view: ViewDef,
+    delta_bases: Tuple[str, ...],
+    delta_group_capacity: int,
+    with_deletes: bool = False,
+) -> Plan:
+    """Build M for a group-by-aggregate view (Example 1 generalized).
+
+    ``delta_bases``: names of base relations receiving deltas (e.g. the fact
+    table).  The returned plan's leaves are Scan(view.name) plus
+    Scan(base + "__ins") / Scan(base + "__del").
+    """
+    g = _find_groupby(view.plan)
+    if g is None:
+        raise ValueError("change-table strategy requires a group-by aggregate view")
+    keys = g.keys
+    agg_names = tuple(out for out, _, _ in g.aggs)
+    for _, fn, _ in g.aggs:
+        if fn not in ("sum", "count") and with_deletes:
+            raise ValueError(f"agg {fn!r} is not self-maintainable under deletes")
+
+    def delta_view(suffix: str) -> Plan:
+        mapping = {b: b + suffix for b in delta_bases}
+        return _replace_groupby_capacity(substitute(view.plan, mapping), delta_group_capacity)
+
+    plan: Plan = Scan(view.name, pk=keys)
+    plan = _merge_delta(plan, delta_view(INS), keys, agg_names, sign=+1, tag="_ins")
+    if with_deletes:
+        plan = _merge_delta(plan, delta_view(DEL), keys, agg_names, sign=-1, tag="_del")
+    return plan
+
+
+def _merge_delta(
+    stale: Plan, delta: Plan, keys: Tuple[str, ...], agg_names: Tuple[str, ...], sign: int, tag: str
+) -> Plan:
+    suffixes = ("", tag)
+    joined = OuterJoin(left=stale, right=delta, on=keys, how="outer", suffixes=suffixes)
+    outputs = [(k, k) for k in keys]
+    for a in agg_names:
+        d = Col(a + tag)
+        if sign > 0:
+            e = Bin("add", Col(a), d)
+        else:
+            e = Bin("sub", Col(a), d)
+        outputs.append((a, e))
+    return ProjectNode(child=joined, outputs=tuple(outputs), pk=keys)
+
+
+def _find_groupby(p: Plan) -> Optional[GroupByNode]:
+    if isinstance(p, GroupByNode):
+        return p
+    for f in dataclasses.fields(p):
+        v = getattr(p, f.name)
+        if isinstance(v, Plan):
+            g = _find_groupby(v)
+            if g is not None:
+                return g
+    return None
+
+
+def _replace_groupby_capacity(p: Plan, cap: int) -> Plan:
+    if isinstance(p, GroupByNode):
+        return GroupByNode(
+            child=_replace_groupby_capacity(p.child, cap),
+            keys=p.keys,
+            aggs=p.aggs,
+            num_groups=cap,
+        )
+    if isinstance(p, Scan):
+        return p
+    kw = {}
+    for f in dataclasses.fields(p):
+        v = getattr(p, f.name)
+        kw[f.name] = _replace_groupby_capacity(v, cap) if isinstance(v, Plan) else v
+    return type(p)(**kw)
+
+
+# ---------------------------------------------------------------------------
+# Problem 1: stale sample view cleaning
+# ---------------------------------------------------------------------------
+
+def cleaning_plan(
+    strategy: Plan, view_pk: Tuple[str, ...], m: float, seed: int = 0,
+    pin_name: Optional[str] = None,
+) -> Plan:
+    """C = pushdown( η_{pk,m}(M) ) — Theorem 1 guarantees sample identity.
+
+    ``pin_name`` threads the outlier-index pin set (Def. 5) through the η.
+    """
+    return push_down(
+        HashNode(child=strategy, cols=tuple(view_pk), m=m, seed=seed, pin_name=pin_name)
+    )
+
+
+def delta_env(view_name: str, view_rel: Relation, deltas: DeltaSet) -> Dict[str, Relation]:
+    env = {view_name: view_rel}
+    for b, rel in deltas.inserts.items():
+        env[b + INS] = rel
+    for b, rel in deltas.deletes.items():
+        env[b + DEL] = rel
+    return env
+
+
+def full_maintenance(
+    strategy: Plan, view_name: str, stale_view: Relation, deltas: DeltaSet,
+    extra_env: Optional[Mapping[str, Relation]] = None,
+    out_capacity: Optional[int] = None,
+) -> Relation:
+    """IVM baseline: S' = M(S, D, ∂D), compacted to capacity."""
+    env = delta_env(view_name, stale_view, deltas)
+    if extra_env:
+        env.update(extra_env)
+    out = execute_jit(strategy, env)
+    return compact(out, out_capacity or stale_view.capacity)
+
+
+def _compact_eta_leaves(plan: Plan, env, m: float, slack: float = 4.0):
+    """§Perf hillclimb C.3: materialize η(delta-leaf) COMPACTED.
+
+    After push-down the η sits directly above the delta Scans; every
+    downstream sort/join/γ still runs at the delta's full capacity.  Eagerly
+    evaluating the η leaf and compacting to an m-scaled arena makes the
+    expensive stages run at sample capacity — the paper's I/O saving
+    realized as a capacity saving (the TPU-relevant resource)."""
+    from repro.relational.plan import HashNode, Scan
+    import dataclasses as _dc
+
+    env = dict(env)
+
+    def walk(p: Plan) -> Plan:
+        if isinstance(p, HashNode) and isinstance(p.child, Scan):
+            name = p.child.name
+            if name.endswith(INS) or name.endswith(DEL):
+                rel = env[name]
+                filtered = execute_jit(p, env)
+                cap = _next_pow2_int(max(64, int(rel.capacity * m * slack)))
+                if cap < rel.capacity:
+                    new_name = name + "__eta"
+                    env[new_name] = compact(filtered, cap)
+                    return Scan(new_name, pk=p.child.pk)
+            return p
+        if isinstance(p, Scan):
+            return p
+        kw = {}
+        for f in _dc.fields(p):
+            v = getattr(p, f.name)
+            kw[f.name] = walk(v) if isinstance(v, Plan) else v
+        return type(p)(**kw)
+
+    return walk(plan), env
+
+
+def _next_pow2_int(n: int) -> int:
+    p = 1
+    while p < n:
+        p <<= 1
+    return p
+
+
+def clean_sample(
+    strategy: Plan,
+    view_name: str,
+    view_pk: Tuple[str, ...],
+    stale_sample: Relation,
+    deltas: DeltaSet,
+    m: float,
+    seed: int = 0,
+    extra_env: Optional[Mapping[str, Relation]] = None,
+    out_capacity: Optional[int] = None,
+    pin_name: Optional[str] = None,
+    compact_leaves: bool = False,  # §Perf C.3: REFUTED for single-join views
+    # (the O(n log n) compaction sort costs more than the join it shrinks);
+    # enable for deep multi-join/multi-agg pipelines where downstream >> sort.
+) -> Relation:
+    """Ŝ' = C(Ŝ, D, ∂D) — the up-to-date sample at ratio m (Problem 1).
+
+    ``stale_sample`` may be the full stale view (η will narrow it) or the
+    already-hashed sample (η is idempotent on it, §4.6).
+    """
+    plan = cleaning_plan(strategy, view_pk, m, seed, pin_name=pin_name)
+    env = delta_env(view_name, stale_sample, deltas)
+    if extra_env:
+        env.update(extra_env)
+    if compact_leaves and pin_name is None:
+        plan, env = _compact_eta_leaves(plan, env, m)
+    out = execute_jit(plan, env)
+    return compact(out, out_capacity or stale_sample.capacity)
+
+
+# ---------------------------------------------------------------------------
+# Base-relation update primitives
+# ---------------------------------------------------------------------------
+
+def upsert(rel: Relation, delta: Relation, capacity: Optional[int] = None) -> Relation:
+    """Insert-or-replace by primary key (update = delete + insert, §3.1)."""
+    merged = ops.union_keyed(delta, rel)  # left (delta) priority
+    return compact(merged, capacity or rel.capacity)
+
+
+def delete_keys(rel: Relation, gone: Relation) -> Relation:
+    """Mask out rows of ``rel`` whose pk appears in ``gone``."""
+    return ops.difference_keyed(rel, gone)
+
+
+def staleness_report(stale: Relation, fresh: Relation) -> Dict[str, jnp.ndarray]:
+    """Counts of incorrect / missing / superfluous rows (§3.1) — debugging."""
+    inner = ops.outer_join_unique(stale, fresh, on=stale.schema.pk, how="outer",
+                                  suffixes=("_stale", "_fresh"))
+    lp = inner.col("__left_present").astype(bool) & inner.valid
+    rp = inner.col("__right_present").astype(bool) & inner.valid
+    both = lp & rp
+    changed = jnp.zeros_like(both)
+    for c in stale.schema.columns:
+        if c in stale.schema.pk:
+            continue
+        a = inner.columns.get(c + "_stale", inner.columns.get(c))
+        b = inner.columns.get(c + "_fresh")
+        if a is None or b is None:
+            continue
+        changed = changed | (both & (a != b))
+    return {
+        "incorrect": jnp.sum(changed.astype(jnp.int32)),
+        "missing": jnp.sum((rp & ~lp).astype(jnp.int32)),
+        "superfluous": jnp.sum((lp & ~rp).astype(jnp.int32)),
+    }

@@ -1,0 +1,61 @@
+"""min/max correction estimates with Cantelli bounds (appendix 12.1.1).
+
+Procedure for max: (1) row-by-row difference between corresponding rows of
+Ŝ and Ŝ', (2) c = max difference, (3) estimate = max(q_max(S) + c, max(Ŝ')).
+The bound is the Cantelli probability that a larger element exists in the
+unsampled portion: P(X ≥ ε + μ) ≤ var/(var + ε²).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+
+from repro.core.estimators import Query, _cond_mask, _values, correspondence_diff
+from repro.relational.relation import Relation
+
+
+@dataclasses.dataclass
+class MinMaxEstimate:
+    value: jnp.ndarray
+    exceed_prob: jnp.ndarray  # Cantelli bound on a more extreme unsampled value
+    method: str
+
+
+def svc_minmax(
+    stale_result: jnp.ndarray,
+    clean_sample: Relation,
+    stale_sample: Relation,
+    query: Query,
+    m: float,
+) -> MinMaxEstimate:
+    if query.agg not in ("min", "max"):
+        raise ValueError(query.agg)
+    sign = 1.0 if query.agg == "max" else -1.0
+
+    # row-by-row differences over corresponding keys (Ø→0)
+    diff_query = Query(agg="avg", col=query.col, pred=query.pred)
+    d, mask = correspondence_diff(clean_sample, stale_sample, diff_query, m=1.0)
+    c = jnp.max(jnp.where(mask, sign * d, -jnp.inf)) * sign
+
+    corrected = stale_result + c
+    # the clean sample's own extremum is a certain lower bound (for max)
+    cond = _cond_mask(clean_sample, query)
+    vals = _values(clean_sample, query)
+    sample_ext = (
+        jnp.max(jnp.where(cond, vals, -jnp.inf))
+        if query.agg == "max"
+        else jnp.min(jnp.where(cond, vals, jnp.inf))
+    )
+    value = (
+        jnp.maximum(corrected, sample_ext) if query.agg == "max" else jnp.minimum(corrected, sample_ext)
+    )
+
+    # Cantelli: P(more extreme value exists) ≤ var/(var + ε²)
+    k = jnp.maximum(jnp.sum(cond.astype(jnp.float32)), 1.0)
+    mu = jnp.sum(jnp.where(cond, vals, 0.0)) / k
+    var = jnp.sum(jnp.where(cond, (vals - mu) ** 2, 0.0)) / jnp.maximum(k - 1.0, 1.0)
+    eps = jnp.abs(value - mu)
+    prob = var / (var + eps**2)
+    return MinMaxEstimate(value, prob, f"SVC+{query.agg}")

@@ -1,0 +1,142 @@
+"""Outlier indexing (§6): reduce sampling sensitivity to skew.
+
+An outlier index is a top-k / threshold index over an attribute of a *base*
+relation.  It is eligible only if the sampling operator pushes down to that
+relation (§6.2).  The index is pushed **up** the expression tree (Def. 5) by
+evaluating the view plan with the base relation restricted to the indexed
+records; the touched view keys identify the groups that must be maintained
+exactly (the γ rule of Def. 5: outlier groups are replaced by their
+full-data rows).
+
+Operationally the sample predicate becomes ``hash(key) ≤ m  OR  key ∈
+outlier_groups``; rows from outlier groups carry weight 1 and an
+``__outlier`` flag, giving precedence to the index so nothing double counts
+(§6.2), and the estimators (estimators.py) merge the deterministic stratum
+with the sampled stratum exactly as §6.3 prescribes.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import hashing
+from repro.relational import ops
+from repro.relational.execute import execute, execute_jit
+from repro.relational.plan import Plan, plan_pk
+from repro.relational.relation import SENTINEL_KEY, Relation
+
+
+@dataclasses.dataclass
+class OutlierIndex:
+    """Top-k index over ``attr`` of base relation ``base`` (threshold t)."""
+
+    base: str
+    attr: str
+    capacity: int
+    records: Relation  # the indexed base records (≤ capacity valid rows)
+    threshold: jnp.ndarray
+
+
+def build_outlier_index(rel: Relation, base: str, attr: str, k: int) -> OutlierIndex:
+    """Single-pass top-k selection (§6.1): keep the k largest by ``attr``."""
+    vals = jnp.where(rel.valid, jnp.asarray(rel.col(attr), jnp.float32), -jnp.inf)
+    order = jnp.argsort(-vals)  # descending
+    take = order[:k]
+    cols = {c: v[take] for c, v in rel.columns.items()}
+    valid = rel.valid[take]
+    records = Relation(cols, valid, rel.schema)
+    threshold = jnp.where(jnp.any(valid), jnp.min(jnp.where(valid, vals[take], jnp.inf)), jnp.inf)
+    return OutlierIndex(base=base, attr=attr, capacity=k, records=records, threshold=threshold)
+
+
+def update_outlier_index(index: OutlierIndex, delta: Relation) -> OutlierIndex:
+    """Streaming maintenance (§6.1): evict smallest when over capacity."""
+    merged_cols = {
+        c: jnp.concatenate([index.records.col(c), delta.col(c)])
+        for c in index.records.schema.columns
+    }
+    merged_valid = jnp.concatenate([index.records.valid, delta.valid])
+    merged = Relation(merged_cols, merged_valid, index.records.schema)
+    return build_outlier_index(merged, index.base, index.attr, index.capacity)
+
+
+def propagate_outlier_keys(
+    view_plan: Plan, base_env, index: OutlierIndex, key_capacity: int | None = None
+) -> Tuple[jnp.ndarray, ...]:
+    """Def. 5 push-up: view pk values of rows derived from indexed records.
+
+    Evaluates the view plan with the indexed base relation substituted for
+    ``index.base``; returns the touched view keys (the groups that must be
+    maintained exactly).
+    """
+    env = dict(base_env)
+    env[index.base] = index.records
+    touched = execute_jit(view_plan, env)
+    keys = []
+    for kcol in plan_pk(view_plan):
+        v = touched.col(kcol)
+        keys.append(jnp.where(touched.valid, v, jnp.asarray(SENTINEL_KEY, v.dtype)))
+    return tuple(keys)
+
+
+def member_keys(probe: Tuple[jnp.ndarray, ...], keys: Tuple[jnp.ndarray, ...]) -> jnp.ndarray:
+    """probe[i] ∈ keys (single-column fast path via sorted search)."""
+    if len(keys) == 1:
+        sk = jnp.sort(keys[0])
+        pos = jnp.clip(jnp.searchsorted(sk, probe[0]), 0, sk.shape[0] - 1)
+        return (sk[pos] == probe[0]) & (probe[0] != SENTINEL_KEY)
+    hit = jnp.zeros(probe[0].shape, bool)
+    for i in range(keys[0].shape[0]):
+        row = jnp.ones(probe[0].shape, bool)
+        for p, k in zip(probe, keys):
+            row = row & (p == k[i])
+        hit = hit | row & (probe[0] != SENTINEL_KEY)
+    return hit
+
+
+def flag_outliers(rel: Relation, pin: Relation | None) -> Relation:
+    """(Re)compute the view-level ``__outlier`` flag: pk ∈ pin.
+
+    The η push-down applies pin membership at the *base* relations; the flag
+    column does not survive aggregation, so samples are re-flagged at the
+    view level after cleaning (weights in estimators.py read this column).
+    """
+    if pin is None:
+        return rel
+    pin_keys = tuple(
+        jnp.where(pin.valid, pin.col(c), jnp.asarray(SENTINEL_KEY, pin.col(c).dtype))
+        for c in pin.schema.pk
+    )
+    probe = tuple(
+        jnp.where(rel.valid, rel.col(c), jnp.asarray(SENTINEL_KEY, rel.col(c).dtype))
+        for c in rel.schema.pk
+    )
+    omask = member_keys(probe, pin_keys)
+    new_cols = dict(rel.columns)
+    new_cols["__outlier"] = (omask & rel.valid).astype(np.int8)
+    return Relation(new_cols, rel.valid, rel.schema.with_columns(tuple(new_cols)))
+
+
+def apply_hash_with_outliers(
+    rel: Relation,
+    cols: Tuple[str, ...],
+    m: float,
+    seed: int,
+    outlier_keys: Tuple[jnp.ndarray, ...],
+) -> Relation:
+    """η ∨ outlier-membership; flags pinned rows with __outlier (weight 1)."""
+    arrays = [rel.columns[c] for c in cols]
+    hmask = hashing.hash_threshold_mask(arrays, m, seed)
+    probe = tuple(
+        jnp.where(rel.valid, rel.col(c), jnp.asarray(SENTINEL_KEY, rel.col(c).dtype))
+        for c in cols
+    )
+    omask = member_keys(probe, outlier_keys)
+    new_cols = dict(rel.columns)
+    new_cols["__outlier"] = (omask & rel.valid).astype(np.int8)
+    schema = rel.schema.with_columns(tuple(new_cols))
+    return Relation(new_cols, rel.valid & (hmask | omask), schema)

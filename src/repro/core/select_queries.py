@@ -1,0 +1,94 @@
+"""Select-query correction (appendix 12.1.2).
+
+Run SELECT * WHERE pred on the stale view, then patch with the clean
+sample: overwrite updated rows, union new rows, drop missing rows.  The
+approximation error is quantified by rewriting the query as three counts
+(updated / added / deleted) with their CLT intervals.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict
+
+import jax.numpy as jnp
+
+from repro.core.estimators import Estimate, Query, svc_aqp, _cond_mask
+from repro.relational import ops
+from repro.relational.expr import Expr
+from repro.relational.relation import Relation
+
+
+@dataclasses.dataclass
+class SelectResult:
+    patched: Relation  # stale selection with sampled fixes applied
+    n_updated: Estimate
+    n_added: Estimate
+    n_deleted: Estimate
+
+
+def svc_select(
+    stale_view: Relation,
+    clean_sample: Relation,
+    stale_sample: Relation,
+    pred: Expr,
+    m: float,
+    confidence: float = 0.95,
+) -> SelectResult:
+    pk = stale_view.schema.pk
+    stale_sel = ops.select(stale_view, pred)
+
+    # classify sampled keys: in Ŝ' only (added), in Ŝ only (deleted), both
+    j = ops.outer_join_unique(clean_sample, stale_sample, on=pk, how="outer",
+                              suffixes=("_new", "_old"))
+    lp = j.col("__left_present").astype(bool) & j.valid
+    rp = j.col("__right_present").astype(bool) & j.valid
+    changed = jnp.zeros_like(lp)
+    for c in clean_sample.schema.columns:
+        if c in pk or c.startswith("__"):
+            continue
+        a = j.columns.get(c + "_new", j.columns.get(c))
+        b = j.columns.get(c + "_old")
+        if a is None or b is None:
+            continue
+        changed = changed | (lp & rp & (a != b))
+
+    # patch: overwrite updated rows & union added rows (from the clean
+    # sample restricted to pred), then drop keys sampled as missing.
+    fixes = ops.select(clean_sample, pred)
+    patched = ops.union_keyed(
+        _align_schema(fixes, stale_sel), stale_sel
+    )  # clean rows take priority
+    deleted_keys = Relation(
+        {k: j.col(k) for k in pk}, rp & ~lp, dataclasses.replace(
+            stale_sample.schema, pk=pk, columns=tuple(sorted(pk)))
+    )
+    patched = ops.difference_keyed(patched, deleted_keys)
+
+    # error quantification: three scaled counts over the join row space
+    n_upd = _scaled_count(j, changed, m, confidence, "updated")
+    n_add = _scaled_count(j, lp & ~rp, m, confidence, "added")
+    n_del = _scaled_count(j, rp & ~lp, m, confidence, "deleted")
+    return SelectResult(patched=patched, n_updated=n_upd, n_added=n_add, n_deleted=n_del)
+
+
+def _scaled_count(rel: Relation, mask: jnp.ndarray, m: float, confidence: float, name: str) -> Estimate:
+    from repro.core.estimators import _gamma
+
+    g = _gamma(confidence)
+    t = jnp.where(mask & rel.valid, 1.0 / m, 0.0)
+    k = jnp.maximum(jnp.sum(rel.valid.astype(jnp.float32)), 1.0)
+    s = jnp.sum(t)
+    mean = s / k
+    var = jnp.sum(jnp.where(rel.valid, (t - mean) ** 2, 0.0)) / jnp.maximum(k - 1.0, 1.0)
+    stderr = jnp.sqrt(k * var)
+    return Estimate(s, stderr, s - g * stderr, s + g * stderr, f"count_{name}", confidence)
+
+
+def _align_schema(rel: Relation, target: Relation) -> Relation:
+    """Project rel onto target's columns (drop extras like __outlier)."""
+    cols = {c: rel.col(c) for c in target.schema.columns if c in rel.columns}
+    for c in target.schema.columns:
+        if c not in cols:
+            cols[c] = jnp.zeros(rel.valid.shape, target.col(c).dtype)
+    return Relation(cols, rel.valid, target.schema)

@@ -1,0 +1,168 @@
+"""Sharded synthetic token pipeline with SVC-maintained statistics views.
+
+The pipeline is deterministic: token content is a pure function of
+(domain, sequence id), so any host/shard can regenerate any batch — this is
+what makes checkpoint/restart and elastic re-sharding trivial (the pipeline
+state is just the step counter + mixture weights).
+
+SVC integration (the paper's technique as a first-class feature):
+  * every train step emits per-domain (loss_sum, count) deltas;
+  * a ``StepStats`` fact table ingests them; materialized views
+    (loss per domain, tokens per domain) are FULL-maintained only at
+    checkpoint cadence, while ``svc_refresh`` keeps hash-samples fresh
+    every few steps;
+  * the mixture controller re-weights domain sampling from the *fresh,
+    bounded* SVC estimates — monitoring/feedback never waits for IVM.
+
+This mirrors the paper's Conviva deployment (§7.5/7.6.2): a high-rate
+update stream, periodic batch maintenance, SVC between batches.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import Query, ViewDef
+from repro.relational.expr import Col, Lit, Cmp
+from repro.relational.plan import GroupByNode, Scan
+from repro.relational.relation import from_columns
+from repro.views import ViewManager
+
+N_DOMAINS = 16
+
+
+@dataclasses.dataclass
+class PipelineConfig:
+    vocab: int
+    seq_len: int
+    global_batch: int
+    n_domains: int = N_DOMAINS
+    seed: int = 0
+
+
+class TokenPipeline:
+    """Deterministic mixture-of-domains synthetic corpus."""
+
+    def __init__(self, cfg: PipelineConfig):
+        self.cfg = cfg
+        self.mixture = np.ones(cfg.n_domains, np.float64) / cfg.n_domains
+        # per-domain unigram tables make domains statistically distinct so
+        # per-domain loss actually differs (drives the mixture controller)
+        rng = np.random.default_rng(cfg.seed)
+        self._domain_bias = rng.integers(0, cfg.vocab, size=cfg.n_domains)
+        self._domain_spread = rng.integers(50, max(51, cfg.vocab // 2), size=cfg.n_domains)
+
+    def set_mixture(self, w: np.ndarray) -> None:
+        w = np.asarray(w, np.float64)
+        self.mixture = w / w.sum()
+
+    def batch(self, step: int) -> Dict[str, jnp.ndarray]:
+        cfg = self.cfg
+        rng = np.random.default_rng((cfg.seed, step))
+        dom = rng.choice(cfg.n_domains, size=cfg.global_batch, p=self.mixture)
+        tokens = np.empty((cfg.global_batch, cfg.seq_len), np.int32)
+        for i, d in enumerate(dom):
+            r = np.random.default_rng((cfg.seed, step, int(d), i))
+            tokens[i] = (
+                self._domain_bias[d]
+                + r.integers(0, self._domain_spread[d], size=cfg.seq_len)
+            ) % cfg.vocab
+        labels = np.roll(tokens, -1, axis=1)
+        return {
+            "tokens": jnp.asarray(tokens),
+            "labels": jnp.asarray(labels),
+            "domain": jnp.asarray(dom.astype(np.int32)),
+        }
+
+
+# ---------------------------------------------------------------------------
+# SVC-maintained statistics views
+# ---------------------------------------------------------------------------
+
+LOSS_VIEW = "domainLossView"
+
+
+class PipelineStats:
+    """StepStats fact table + SVC-managed per-domain loss view."""
+
+    def __init__(self, n_domains: int = N_DOMAINS, m: float = 0.25, seed: int = 0,
+                 capacity: int = 1 << 14):
+        self.n_domains = n_domains
+        self.vm = ViewManager()
+        self._next_id = 0
+        empty = from_columns(
+            {
+                "statId": np.zeros(0, np.int32),
+                "domain": np.zeros(0, np.int32),
+                "loss_sum": np.zeros(0, np.float32),
+                "count": np.zeros(0, np.float32),
+            },
+            pk=["statId"],
+            capacity=capacity,
+        )
+        self.vm.register_base("StepStats", empty)
+        # keyed by statId (one row per ingested stat record): high
+        # cardinality, which is what makes the view *suitable for sampling*
+        # — the paper excludes small-cardinality views (App. 12.6.4).
+        plan = GroupByNode(
+            child=Scan("StepStats", pk=("statId",)),
+            keys=("statId",),
+            aggs=(
+                ("total_loss", "sum", "loss_sum"),
+                ("total_count", "sum", "count"),
+                ("domain", "max", "domain"),
+            ),
+            num_groups=capacity,
+        )
+        self.vm.register_view(
+            ViewDef(LOSS_VIEW, plan), delta_bases=("StepStats",), m=m, seed=seed,
+            delta_group_capacity=4096,
+        )
+
+    def ingest_step(self, domain_loss_sum: np.ndarray, domain_count: np.ndarray) -> None:
+        """Feed one train step's per-domain sums as fact-table inserts."""
+        n = self.n_domains
+        ids = self._next_id + np.arange(n, dtype=np.int32)
+        self._next_id += n
+        delta = from_columns(
+            {
+                "statId": ids,
+                "domain": np.arange(n, dtype=np.int32),
+                "loss_sum": np.asarray(domain_loss_sum, np.float32),
+                "count": np.asarray(domain_count, np.float32),
+            },
+            pk=["statId"],
+        )
+        self.vm.ingest("StepStats", inserts=delta)
+
+    def svc_refresh(self) -> float:
+        return self.vm.svc_refresh(LOSS_VIEW)
+
+    def full_maintenance(self) -> float:
+        return self.vm.maintain_all()
+
+    def loss_estimate(self, domain: int):
+        """Fresh bounded estimate of a domain's mean loss (SVC)."""
+        q_sum = Query(agg="sum", col="total_loss",
+                      pred=Cmp("eq", Col("domain"), Lit(domain)))
+        q_cnt = Query(agg="sum", col="total_count",
+                      pred=Cmp("eq", Col("domain"), Lit(domain)))
+        s = self.vm.query(LOSS_VIEW, q_sum)
+        c = self.vm.query(LOSS_VIEW, q_cnt)
+        denom = max(float(c.value), 1.0)
+        return float(s.value) / denom, (float(s.ci_low) / denom, float(s.ci_high) / denom)
+
+    def mixture_weights(self, temperature: float = 1.0) -> np.ndarray:
+        """Loss-proportional mixture (sample hard domains more)."""
+        est = np.array([self.loss_estimate(d)[0] for d in range(self.n_domains)])
+        est = np.nan_to_num(est, nan=0.0, posinf=0.0, neginf=0.0)
+        if est.max() <= 0:
+            return np.ones(self.n_domains) / self.n_domains
+        z = est / max(est.mean(), 1e-9)
+        w = np.exp(z / max(temperature, 1e-6))
+        return w / w.sum()

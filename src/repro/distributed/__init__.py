@@ -1,0 +1,1 @@
+"""Distribution: sharding rules, fault tolerance, gradient compression."""

@@ -1,0 +1,123 @@
+"""Gradient compression: int8 quantization with error feedback, and a
+ppermute ring all-reduce that applies it per hop.
+
+Error feedback (1-bit Adam / EF-SGD lineage): the quantization residual is
+kept locally and added to the next step's gradient, so compression error
+does not accumulate — convergence tests in tests/test_compression.py verify
+a quadratic model still converges at int8.
+
+``ring_allreduce`` is written with shard_map + ppermute so the collective
+schedule is explicit (used by the §Perf hillclimb to compare against XLA's
+all-reduce and to overlap with compute).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+
+# ---------------------------------------------------------------------------
+# int8 quantization with error feedback
+# ---------------------------------------------------------------------------
+
+def quantize_int8(x: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Symmetric per-tensor int8; returns (q, scale)."""
+    amax = jnp.max(jnp.abs(x))
+    scale = jnp.maximum(amax / 127.0, 1e-12)
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    return q.astype(jnp.float32) * scale
+
+
+def ef_compress(grads: Any, error_state: Optional[Any]) -> Tuple[Any, Any]:
+    """Compress a gradient pytree with error feedback.
+
+    Returns (dequantized grads to feed the optimizer/collective, new error
+    state).  The caller treats the output as the 'wire format' result.
+    """
+    if error_state is None:
+        error_state = jax.tree.map(lambda g: jnp.zeros(g.shape, jnp.float32), grads)
+
+    def one(g, e):
+        corrected = g.astype(jnp.float32) + e
+        q, s = quantize_int8(corrected)
+        deq = dequantize_int8(q, s)
+        return deq, corrected - deq
+
+    flat = jax.tree.map(one, grads, error_state)
+    deq = jax.tree.map(lambda t: t[0], flat, is_leaf=lambda t: isinstance(t, tuple))
+    err = jax.tree.map(lambda t: t[1], flat, is_leaf=lambda t: isinstance(t, tuple))
+    return deq, err
+
+
+# ---------------------------------------------------------------------------
+# explicit ring all-reduce (reduce-scatter + all-gather) via ppermute
+# ---------------------------------------------------------------------------
+
+def ring_allreduce(x: jnp.ndarray, axis_name: str, n: int,
+                   quantize: bool = False) -> jnp.ndarray:
+    """Bandwidth-optimal ring all-reduce inside a shard_map region.
+
+    x: the local shard's full array; result = sum over the axis.  With
+    ``quantize`` the inter-hop payloads are int8 (+ fp32 scale), cutting
+    wire bytes ~4x at the cost of quantization noise per hop.
+    """
+    if n == 1:
+        return x
+    idx = jax.lax.axis_index(axis_name)
+    chunks = jnp.stack(jnp.split(x.reshape(-1), n))  # (n, len/n)
+    perm = [(i, (i + 1) % n) for i in range(n)]
+
+    def send(v):
+        if quantize:
+            q, s = quantize_int8(v)
+            q = jax.lax.ppermute(q, axis_name, perm)
+            s = jax.lax.ppermute(s, axis_name, perm)
+            return dequantize_int8(q, s)
+        return jax.lax.ppermute(v, axis_name, perm)
+
+    # reduce-scatter: after n−1 hops device i holds the full sum of chunk
+    # (i+1) mod n  (at hop k it receives the running partial of chunk
+    # (i−k−1) mod n from its left neighbour and adds its own piece)
+    def rs_body(k, carry):
+        chunks, acc = carry
+        incoming = send(acc)
+        acc_new = incoming + chunks[(idx - k - 1) % n]
+        return chunks, acc_new
+
+    acc = chunks[idx]
+    _, acc = jax.lax.fori_loop(0, n - 1, rs_body, (chunks, acc))
+
+    # all-gather the reduced chunks around the ring: at hop k device i
+    # receives the full sum of chunk (i−k) mod n
+    def ag_body(k, carry):
+        out, cur = carry
+        cur = send(cur)
+        out = out.at[(idx - k) % n].set(cur)
+        return out, cur
+
+    out = jnp.zeros_like(chunks).at[(idx + 1) % n].set(acc)
+    out, _ = jax.lax.fori_loop(0, n - 1, ag_body, (out, acc))
+    return out.reshape(x.shape)
+
+
+def make_compressed_allreduce(mesh: Mesh, axis: str, quantize: bool = True):
+    """jit-able f(x_local_sum) -> global sum over `axis` with int8 hops."""
+    n = mesh.shape[axis]
+
+    @functools.partial(
+        jax.shard_map, mesh=mesh, in_specs=P(axis), out_specs=P(axis),
+        check_vma=False,
+    )
+    def f(x):
+        return ring_allreduce(x, axis, n, quantize=quantize)
+
+    return f

@@ -1,0 +1,192 @@
+"""Sharding rules: parameter / batch / cache PartitionSpecs per architecture.
+
+Scheme (DESIGN.md §5):
+  * 2-D weight matrices: FSDP over ``data`` on the input dim × TP over
+    ``model`` on the output dim (transposed for down/out projections so the
+    contracting dim stays TP-sharded — one psum per block);
+  * MoE expert stacks: experts replicated along mesh axes (8/40 don't
+    divide 16), d_ff TP + FSDP storage over data;
+  * embeddings: vocab over ``model``, d_model over ``data``;
+  * batch: ``("pod","data")`` (pure DP across pods; params replicate
+    across pods and gradients all-reduce over the pod axis);
+  * KV caches: batch over dp; heads over ``model`` when divisible, else
+    the *time* axis is TP-sharded (sequence-sharded KV for MQA/GQA-8);
+  * optimizer states mirror parameter specs; scalars replicated.
+
+Every rule degrades to ``None`` (replicated) when the dim doesn't divide
+the axis — GSPMD could pad, but unpadded specs keep the roofline terms
+honest.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig, ShapeCell
+
+# leaf names whose LAST dim is the "output" (TP) dim
+_UP_NAMES = {
+    "wq", "wk", "wv", "w_gate", "w_up", "w_in", "w_gate_branch", "w_a", "w_i",
+    "W", "xq", "xk", "xv", "w_f",
+}
+# leaf names whose last dim is d_model (contracting dim first → TP on dim 0)
+_DOWN_NAMES = {"wo", "w_down", "w_out", "xo"}
+_REPL_NAMES = {
+    "ln", "ln1", "ln2", "ln_x", "b", "b_a", "b_i", "b_f", "lam", "final_norm",
+    "enc_final_norm", "conv_w", "router", "vision_proj",
+    # sLSTM recurrence weights are used INSIDE the 4096-step time scan:
+    # sharding them forces an all-gather per step (1.65 PB/step measured —
+    # EXPERIMENTS.md §Perf B.2).  ~100 MB replicated is the right trade.
+    "R",
+}
+
+
+def _axis_ok(mesh: Mesh, axis, dim: int) -> bool:
+    if axis is None:
+        return True
+    if isinstance(axis, tuple):
+        size = 1
+        for a in axis:
+            size *= mesh.shape[a]
+    else:
+        size = mesh.shape[axis]
+    return dim % size == 0
+
+
+def _maybe(mesh: Mesh, axis, dim: int):
+    return axis if _axis_ok(mesh, axis, dim) else None
+
+
+def dp_axes(multi_pod: bool) -> Tuple[str, ...]:
+    return ("pod", "data") if multi_pod else ("data",)
+
+
+def param_spec_for(path_keys, shape, cfg: ArchConfig, mesh: Mesh) -> P:
+    name = path_keys[-1] if path_keys else ""
+    nd = len(shape)
+    if name in _REPL_NAMES or nd <= 1:
+        return P()
+    if name in ("embed", "lm_head"):
+        if name == "embed":  # (V, D)
+            return P(_maybe(mesh, "model", shape[0]), _maybe(mesh, "data", shape[1]))
+        return P(_maybe(mesh, "data", shape[0]), _maybe(mesh, "model", shape[1]))
+    if name in _UP_NAMES:
+        # (..., in, out): FSDP on in (data), TP on out (model)
+        lead = (None,) * (nd - 2)
+        return P(*lead, _maybe(mesh, "data", shape[-2]), _maybe(mesh, "model", shape[-1]))
+    if name in _DOWN_NAMES:
+        lead = (None,) * (nd - 2)
+        return P(*lead, _maybe(mesh, "model", shape[-2]), _maybe(mesh, "data", shape[-1]))
+    # default: shard the two largest trailing dims as up-projection
+    if nd >= 2:
+        lead = (None,) * (nd - 2)
+        return P(*lead, _maybe(mesh, "data", shape[-2]), _maybe(mesh, "model", shape[-1]))
+    return P()
+
+
+def tree_param_specs(cfg: ArchConfig, shapes_tree: Any, mesh: Mesh,
+                     serving: bool = False) -> Any:
+    """Param specs.  ``serving=True`` drops the FSDP (data) axis so weights
+    stay TP-resident: under FSDP every decode step re-gathers each layer's
+    weights over the data axis — the dominant collective of the decode cells
+    (§Perf D).  Only applied when the bf16 weights fit per-chip HBM."""
+
+    def one(path, leaf):
+        keys = [str(getattr(p, "key", getattr(p, "idx", p))) for p in path]
+        if leaf.ndim == 0:
+            return P()
+        spec = param_spec_for(keys, leaf.shape, cfg, mesh)
+        if serving:
+            spec = P(*[None if a == "data" else a for a in spec])
+        return spec
+
+    return jax.tree_util.tree_map_with_path(one, shapes_tree)
+
+
+def serving_weights_fit(cfg: ArchConfig, mesh: Mesh, hbm_budget: float = 8e9) -> bool:
+    """Do bf16 weights fit per chip with model-axis-only sharding?"""
+    from repro.models.api import param_counts
+
+    per_chip = param_counts(cfg)["total"] * 2 / mesh.shape["model"]
+    return per_chip <= hbm_budget
+
+
+def batch_specs(cfg: ArchConfig, cell: ShapeCell, mesh: Mesh, multi_pod: bool) -> Dict[str, P]:
+    dp = _maybe(mesh, dp_axes(multi_pod), cell.global_batch)
+    specs = {"tokens": P(dp, None), "labels": P(dp, None), "domain": P(dp)}
+    if cfg.family == "vlm":
+        specs["vision_embeds"] = P(dp, None, None)
+    if cfg.family == "encdec":
+        specs["frames"] = P(dp, None, None)
+    return specs
+
+
+def cache_specs(cfg: ArchConfig, cache_shapes: Any, mesh: Mesh, multi_pod: bool) -> Any:
+    dp_full = dp_axes(multi_pod)
+
+    def one(path, leaf):
+        keys = [str(getattr(p, "key", getattr(p, "idx", p))) for p in path]
+        name = keys[0] if keys else ""
+        nd = leaf.ndim
+        # the batch axis position varies by family/leaf; find the first dim
+        # divisible by the dp extent and fall back to replication (batch=1)
+        def dpax(dim):
+            return _maybe(mesh, dp_full, dim)
+
+        dp = None  # set per-branch below via dpax(...)
+        if cfg.family in ("dense", "moe", "vlm"):
+            # (L, B, T, K, hd)
+            if nd == 5:
+                k_ax = _maybe(mesh, "model", leaf.shape[3])
+                t_ax = None if k_ax else _maybe(mesh, "model", leaf.shape[2])
+                return P(None, dpax(leaf.shape[1]), t_ax, k_ax, None)
+        if cfg.family == "encdec" and nd == 5:
+            k_ax = _maybe(mesh, "model", leaf.shape[3])
+            t_ax = None if k_ax else _maybe(mesh, "model", leaf.shape[2])
+            return P(None, dpax(leaf.shape[1]), t_ax, k_ax, None)
+        if cfg.family == "hybrid":
+            if name in ("attn_k", "attn_v") and nd == 5:  # (sb,B,W,1,hd)
+                return P(None, dpax(leaf.shape[1]), _maybe(mesh, "model", leaf.shape[2]), None, None)
+            if name == "attn_pos":
+                return P()
+            if nd == 3:  # rec h (sb,B,d)
+                return P(None, dpax(leaf.shape[1]), _maybe(mesh, "model", leaf.shape[2]))
+            if nd == 4:  # conv buf (sb,B,W-1,d)
+                return P(None, dpax(leaf.shape[1]), None, _maybe(mesh, "model", leaf.shape[3]))
+        if cfg.family == "ssm":
+            if name == "mlstm_C" and nd == 6:  # (sb,m,B,H,hd,hd)
+                return P(None, None, dpax(leaf.shape[2]), None, _maybe(mesh, "model", leaf.shape[4]), None)
+            if name == "mlstm_n" and nd == 5:
+                return P(None, None, dpax(leaf.shape[2]), None, _maybe(mesh, "model", leaf.shape[4]))
+            if name == "mlstm_m" and nd == 4:
+                return P(None, None, dpax(leaf.shape[2]), None)
+            if nd == 3:  # slstm (sb,B,d)
+                return P(None, dpax(leaf.shape[1]), _maybe(mesh, "model", leaf.shape[2]))
+        # fallback: batch-only on the first dp-sized dim
+        return P()
+
+    return jax.tree_util.tree_map_with_path(one, cache_shapes)
+
+
+def opt_state_specs(param_specs: Any) -> Dict[str, Any]:
+    return {"m": param_specs, "v": param_specs, "step": P()}
+
+
+def named(mesh: Mesh, spec_tree: Any) -> Any:
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s),
+        spec_tree,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+def with_sharding(shapes_tree: Any, sharding_tree: Any) -> Any:
+    """Attach NamedShardings to a ShapeDtypeStruct tree."""
+    return jax.tree.map(
+        lambda sds, sh: jax.ShapeDtypeStruct(sds.shape, sds.dtype, sharding=sh),
+        shapes_tree,
+        sharding_tree,
+    )

@@ -1,0 +1,32 @@
+"""Pallas TPU kernels for the SVC compute hot spots.
+
+Three kernels cover the maintenance/estimation inner loops that dominate
+the paper's profiles (§7: hashing + delta aggregation + estimation):
+
+  hash_threshold  — η_{a,m}: splitmix32 key hashing + threshold mask (VPU)
+  segment_aggsum  — group-by partial aggregation as one-hot × values matmul
+                    (MXU-native group-by; the TPU adaptation of hash groups)
+  corr_diff       — fused correspondence-subtract + moment accumulation
+                    (the SVC+CORR inner loop: Σd, Σd², count in one pass)
+  flash_attention — causal online-softmax attention (GQA/MQA aware): the
+                    §Roofline memory-term lever — scores stay in VMEM
+
+Each kernel ships ``kernel.py`` (pl.pallas_call + explicit BlockSpec VMEM
+tiling), ``ops.py`` (jit'd padding/reshaping wrapper; interpret=True on
+CPU), and ``ref.py`` (pure-jnp oracle).  Tests sweep shapes/dtypes against
+the oracle.
+
+Call ``enable()`` to route repro.core.hashing through the Pallas path.
+"""
+
+
+def enable() -> None:
+    from repro.core import hashing
+
+    hashing.use_pallas(True)
+
+
+def disable() -> None:
+    from repro.core import hashing
+
+    hashing.use_pallas(False)

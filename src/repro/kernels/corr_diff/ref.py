@@ -1,0 +1,12 @@
+"""Pure-jnp oracle for the fused CORR moments."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def corr_diff_ref(t_new: jnp.ndarray, t_old: jnp.ndarray, mask: jnp.ndarray):
+    """Returns (Σd, Σd², count) with d = (t_new − t_old)·mask."""
+    m = mask.astype(jnp.float32)
+    d = (t_new - t_old) * m
+    return jnp.sum(d), jnp.sum(d * d), jnp.sum(m)

@@ -1,0 +1,90 @@
+"""Pallas kernel: causal flash attention (online-softmax, VMEM-resident).
+
+The roofline analysis (EXPERIMENTS.md §Roofline) shows 30/32 cells are
+HBM-bound on the streamed S×T score/probability tensors of the XLA-level
+chunked attention.  This kernel keeps the score tile in VMEM and carries the
+online-softmax statistics (running max m, normalizer l, accumulator acc)
+across key blocks — scores never touch HBM.
+
+Tiling: grid (batch·heads, S/BLOCK_Q); per step the kernel holds
+  q tile   (BLOCK_Q, hd)
+  k/v      (T, hd) each           — VMEM bound: T·hd·2·4B ≤ ~8 MB
+  acc/m/l  (BLOCK_Q, hd) + 2×(BLOCK_Q,)
+and loops over T in BLOCK_K slices with lax.fori_loop.  For T beyond the
+VMEM bound a third grid axis over key blocks (revisited output + scratch
+accumulators) is the standard extension; the assigned shapes' hot cells
+(4k train) fit the single-pass form.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+BLOCK_Q = 128
+BLOCK_K = 128
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, *, sm_scale: float, causal: bool,
+                  block_k: int, t_valid: int):
+    qi = pl.program_id(1)
+    q = q_ref[0].astype(jnp.float32) * sm_scale  # (BQ, hd)
+    BQ, hd = q.shape
+    T = k_ref.shape[1]
+    n_k = T // block_k
+
+    q_pos = qi * BQ + jax.lax.broadcasted_iota(jnp.int32, (BQ, block_k), 0)
+
+    def body(j, carry):
+        acc, m, l = carry
+        k = jax.lax.dynamic_slice_in_dim(k_ref[0], j * block_k, block_k, 0)
+        v = jax.lax.dynamic_slice_in_dim(v_ref[0], j * block_k, block_k, 0)
+        s = q @ k.astype(jnp.float32).T  # (BQ, BK)
+        k_pos = j * block_k + jax.lax.broadcasted_iota(jnp.int32, (BQ, block_k), 1)
+        mask = k_pos < t_valid
+        if causal:
+            mask = mask & (k_pos <= q_pos)
+        s = jnp.where(mask, s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        alpha = jnp.exp(m - m_new)
+        l_new = l * alpha + jnp.sum(p, axis=1)
+        acc_new = acc * alpha[:, None] + p @ v.astype(jnp.float32)
+        return acc_new, m_new, l_new
+
+    acc0 = jnp.zeros((BQ, hd), jnp.float32)
+    m0 = jnp.full((BQ,), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((BQ,), jnp.float32)
+    acc, m, l = jax.lax.fori_loop(0, n_k, body, (acc0, m0, l0))
+    o_ref[0, ...] = (acc / jnp.maximum(l, 1e-30)[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("sm_scale", "causal", "block_q", "block_k",
+                              "t_valid", "interpret")
+)
+def flash_tiles(q, k, v, sm_scale: float, causal: bool, t_valid: int,
+                block_q: int = BLOCK_Q, block_k: int = BLOCK_K,
+                interpret: bool = True):
+    """q (BH, S, hd); k/v (BH, T, hd) → o (BH, S, hd).  S, T padded to blocks."""
+    BH, S, hd = q.shape
+    T = k.shape[1]
+    grid = (BH, S // block_q)
+    return pl.pallas_call(
+        functools.partial(_flash_kernel, sm_scale=sm_scale, causal=causal,
+                          block_k=block_k, t_valid=t_valid),
+        out_shape=jax.ShapeDtypeStruct((BH, S, hd), q.dtype),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q, hd), lambda b, i: (b, i, 0)),
+            pl.BlockSpec((1, T, hd), lambda b, i: (b, 0, 0)),
+            pl.BlockSpec((1, T, hd), lambda b, i: (b, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, hd), lambda b, i: (b, i, 0)),
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,21 @@
+"""Pure-jnp oracle: causal softmax attention (scores materialized)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def flash_ref(q, k, v, causal: bool = True, sm_scale=None):
+    """q (BH, S, hd); k/v (BH, T, hd) → (BH, S, hd)."""
+    BH, S, hd = q.shape
+    T = k.shape[1]
+    sm_scale = sm_scale if sm_scale is not None else 1.0 / np.sqrt(hd)
+    s = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32), k.astype(jnp.float32))
+    s = s * sm_scale
+    if causal:
+        mask = jnp.arange(T)[None, :] <= jnp.arange(S)[:, None]
+        s = jnp.where(mask[None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", p, v.astype(jnp.float32)).astype(q.dtype)

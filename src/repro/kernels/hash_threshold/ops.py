@@ -1,0 +1,34 @@
+"""jit wrapper: pad/reshape 1-D key columns to VPU tiles and dispatch."""
+
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.hash_threshold.kernel import BLOCK_R, LANES, hash_threshold_tiles
+
+# CPU containers run the kernel body in interpret mode; on TPU set False.
+INTERPRET = jax.default_backend() != "tpu"
+
+
+def hash_threshold(cols: Sequence[jnp.ndarray], m: float, seed: int = 0) -> jnp.ndarray:
+    """η_{a,m} keep-mask over 1-D (composite) key columns."""
+    n = cols[0].shape[0]
+    tile = BLOCK_R * LANES
+    padded = ((n + tile - 1) // tile) * tile
+    rows = padded // LANES
+
+    def pad2d(c):
+        c = jnp.asarray(c)
+        c = jnp.pad(c, (0, padded - n))
+        return c.reshape(rows, LANES)
+
+    cols2d = tuple(pad2d(c) for c in cols)
+    seed_mix = (0x9E3779B9 * (int(seed) + 1)) & 0xFFFFFFFF
+    out = hash_threshold_tiles(
+        cols2d, seed_mix, float(m), n_cols=len(cols2d), interpret=INTERPRET
+    )
+    return out.reshape(padded)[:n].astype(bool)

@@ -1,0 +1,3 @@
+from repro.kernels.segment_aggsum import kernel, ops, ref
+
+__all__ = ["kernel", "ops", "ref"]

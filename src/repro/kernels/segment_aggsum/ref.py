@@ -1,0 +1,11 @@
+"""Pure-jnp oracle: jax.ops.segment_sum."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def segment_sum_ref(gid: jnp.ndarray, vals: jnp.ndarray, num_groups: int) -> jnp.ndarray:
+    """gid (R,) int32; vals (R, C) f32; out (num_groups, C)."""
+    return jax.ops.segment_sum(vals, gid, num_segments=num_groups)

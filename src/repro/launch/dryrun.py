@@ -1,0 +1,206 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+The two lines above MUST run before any other import (jax locks the device
+count at first init).  For every cell we:
+
+  1. build the production mesh (16×16 or 2×16×16),
+  2. construct ShapeDtypeStruct inputs with NamedShardings (specs.py),
+  3. jit(step).lower(...).compile(),
+  4. record memory_analysis / cost_analysis and the trip-count-aware HLO
+     analysis (FLOPs, bytes, collective traffic) for §Roofline,
+  5. append the record to benchmarks/dryrun_results/<cell>.json.
+
+Failures (sharding mismatch, OOM at compile, unsupported collective) are
+recorded, not swallowed — they are bugs in the system.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch gemma-2b --shape train_4k --mesh single
+  PYTHONPATH=src python -m repro.launch.dryrun --arch all --shape all --mesh both
+"""
+
+import argparse
+import json
+import time
+import traceback
+from typing import Optional
+
+import jax
+
+from repro.configs import ALL_SHAPES, ARCH_IDS, get_config
+from repro.configs.base import shape_applicable
+from repro.launch import hlo_analysis
+from repro.launch.mesh import make_production_mesh
+from repro.launch.specs import input_specs, make_ctx
+from repro.models.api import get_model, param_counts
+from repro.training.optim import AdamWConfig
+from repro.training.train_step import make_train_step
+
+OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                       "benchmarks", "dryrun_results")
+
+
+TRAIN_MICROBATCHES = 4  # gradient accumulation: bounds the live activation
+                        # set (incl. the vocab-sharded logits block) per micro
+
+
+def build_step(arch: str, cell, ctx, microbatches: int = TRAIN_MICROBATCHES):
+    cfg = get_config(arch)
+    model = get_model(cfg)
+    if cell.kind == "train":
+        step = make_train_step(model, AdamWConfig(), ctx=ctx, microbatches=microbatches)
+        return step
+    if cell.kind == "prefill":
+        return lambda params, batch: model.prefill(
+            params, batch, cache_len=cell.seq_len, ctx=ctx
+        )
+    if cell.kind == "decode":
+        return lambda params, cache, tokens, pos: model.decode_step(
+            params, cache, tokens, pos, ctx
+        )
+    raise ValueError(cell.kind)
+
+
+def run_cell(arch: str, cell, multi_pod: bool, out_dir: str,
+             skip_existing: bool = False) -> dict:
+    mesh_name = "multi" if multi_pod else "single"
+    cell_id = f"{arch}__{cell.name}__{mesh_name}"
+    path = os.path.join(out_dir, cell_id + ".json")
+    if skip_existing and os.path.exists(path):
+        with open(path) as f:
+            return json.load(f)
+    cfg = get_config(arch)
+    rec = {
+        "arch": arch, "shape": cell.name, "mesh": mesh_name,
+        "kind": cell.kind, "seq_len": cell.seq_len,
+        "global_batch": cell.global_batch,
+        "chips": 512 if multi_pod else 256,
+        "params": param_counts(cfg),
+        "status": "pending",
+    }
+    ok, reason = shape_applicable(cfg, cell)
+    if not ok:
+        rec["status"] = "skipped"
+        rec["skip_reason"] = reason
+        _write(path, rec)
+        return rec
+    t0 = time.time()
+    try:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        ctx = make_ctx(mesh, multi_pod)
+        step = build_step(arch, cell, ctx)
+        specs = input_specs(arch, cell, mesh, multi_pod)
+        with mesh:
+            if cell.kind == "train":
+                lowered = jax.jit(step).lower(specs["state"], specs["batch"])
+            elif cell.kind == "prefill":
+                lowered = jax.jit(step).lower(specs["params"], specs["batch"])
+            else:
+                lowered = jax.jit(step).lower(
+                    specs["params"], specs["cache"], specs["tokens"], specs["pos"]
+                )
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+
+            rec["lower_s"] = round(t_lower, 2)
+            rec["compile_s"] = round(t_compile, 2)
+            rec["memory_analysis"] = _memory(compiled)
+            rec["cost_analysis_raw"] = _cost(compiled)
+            hlo = compiled.as_text()
+            rec["hlo_analysis"] = _prune(hlo_analysis.analyze(hlo))
+            rec["status"] = "ok"
+    except Exception as e:  # noqa: BLE001 — record and continue
+        rec["status"] = "error"
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-4000:]
+    rec["total_s"] = round(time.time() - t0, 2)
+    _write(path, rec)
+    return rec
+
+
+def _memory(compiled) -> Optional[dict]:
+    try:
+        ma = compiled.memory_analysis()
+        if ma is None:
+            return None
+        out = {}
+        for attr in ("argument_size_in_bytes", "output_size_in_bytes",
+                     "temp_size_in_bytes", "generated_code_size_in_bytes",
+                     "alias_size_in_bytes"):
+            if hasattr(ma, attr):
+                out[attr] = int(getattr(ma, attr))
+        return out or {"repr": str(ma)[:500]}
+    except Exception as e:  # noqa: BLE001
+        return {"error": str(e)[:200]}
+
+
+def _cost(compiled) -> Optional[dict]:
+    try:
+        ca = compiled.cost_analysis()
+        if not ca:
+            return None
+        return {k: float(v) for k, v in ca.items()
+                if isinstance(v, (int, float)) and "{" not in k}
+    except Exception as e:  # noqa: BLE001
+        return {"error": str(e)[:200]}
+
+
+def _prune(analysis: dict) -> dict:
+    out = dict(analysis)
+    out["loop_multipliers"] = {
+        k: v for k, v in analysis.get("loop_multipliers", {}).items()
+    } or {}
+    # keep the record compact: top 12 loop multipliers by value
+    lm = sorted(out["loop_multipliers"].items(), key=lambda kv: -kv[1])[:12]
+    out["loop_multipliers"] = dict(lm)
+    return out
+
+
+def _write(path: str, rec: dict) -> None:
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=1)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all", help="arch id or 'all'")
+    ap.add_argument("--shape", default="all", help="shape cell name or 'all'")
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--out", default=os.path.abspath(OUT_DIR))
+    ap.add_argument("--skip-existing", action="store_true")
+    args = ap.parse_args()
+
+    archs = ARCH_IDS if args.arch == "all" else (args.arch,)
+    shapes = ALL_SHAPES if args.shape == "all" else tuple(
+        s for s in ALL_SHAPES if s.name == args.shape
+    )
+    meshes = {"single": (False,), "multi": (True,), "both": (False, True)}[args.mesh]
+
+    n_ok = n_skip = n_err = 0
+    for arch in archs:
+        for cell in shapes:
+            for mp in meshes:
+                rec = run_cell(arch, cell, mp, args.out, args.skip_existing)
+                tag = rec["status"]
+                n_ok += tag == "ok"
+                n_skip += tag == "skipped"
+                n_err += tag == "error"
+                msg = f"[{tag:7s}] {arch} × {cell.name} × {rec['mesh']}"
+                if tag == "ok":
+                    ha = rec["hlo_analysis"]
+                    msg += (f"  flops={ha['flops']:.3e} coll={ha['collective_bytes']:.3e}B"
+                            f" compile={rec['compile_s']}s")
+                elif tag == "error":
+                    msg += "  " + rec["error"][:120]
+                print(msg, flush=True)
+    print(f"\ndone: {n_ok} ok, {n_skip} skipped, {n_err} errors")
+    if n_err:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,238 @@
+"""Post-SPMD HLO analysis: trip-count-aware FLOPs, bytes, collective traffic.
+
+``compiled.cost_analysis()`` counts each while-loop body ONCE — useless for
+scan-over-layers programs (verified empirically; see tests).  We therefore
+parse the optimized HLO text ourselves:
+
+  * call graph + loop trip counts: lax.scan lowers to a while whose
+    condition compares the induction variable against an integer constant;
+    every computation's execution multiplier is propagated through
+    while/call/fusion edges;
+  * FLOPs: 2 × |result| × |contracting dims| per ``dot`` (operand shapes
+    resolved through a per-computation symbol table) — elementwise FLOPs
+    are ignored (sub-percent for these models);
+  * memory bytes: Σ (result + operands) over top-level instructions that
+    plausibly touch HBM (fusion/dot/copy/collectives/dynamic-slice...) —
+    an approximation, but trip-count-correct and consistent across archs;
+  * collective bytes: result-shape bytes per collective instruction —
+    per-device wire traffic per step.
+
+All values are per-device, per executed step.
+"""
+
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from typing import Dict, List, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_INSTR_RE = re.compile(
+    r"^(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*(\(?[a-z0-9\[\],\s()]+\)?\{?[^=]*?)\s+([a-z][\w\-]*)\("
+)
+_COLLECTIVES = (
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+_SKIP_OPS = {
+    "parameter", "constant", "get-tuple-element", "tuple", "bitcast",
+    "after-all", "partition-id", "replica-id", "iota",
+}
+# ops whose RESULT plausibly materializes in HBM on TPU (elementwise chains
+# are fused into these); layout-only ops (reshape/transpose/broadcast) and
+# raw elementwise ops are excluded — a TPU fuses them into producers.
+_HBM_OPS = {
+    "fusion", "dot", "convolution", "copy", "dynamic-update-slice",
+    "dynamic-slice", "slice", "reduce", "reduce-window", "scatter", "gather",
+    "concatenate", "pad", "sort", "custom-call", "select-and-scatter",
+}
+
+
+def shape_bytes(text: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _shape_dims(text: str) -> List[int]:
+    m = _SHAPE_RE.search(text)
+    if not m:
+        return []
+    return [int(d) for d in m.group(2).split(",") if d]
+
+
+class Computation:
+    def __init__(self, name: str):
+        self.name = name
+        self.lines: List[str] = []
+        self.shapes: Dict[str, str] = {}  # instr name -> result type text
+
+
+def _parse(hlo: str) -> Tuple[Dict[str, Computation], str]:
+    comps: Dict[str, Computation] = {}
+    cur = None
+    entry = ""
+    for line in hlo.splitlines():
+        m = re.match(r"^(ENTRY\s+)?%?([\w\.\-]+)\s*\(.*\)\s*->.*\{", line)
+        if m and not line.startswith(" "):
+            cur = Computation(m.group(2))
+            comps[cur.name] = cur
+            if m.group(1):
+                entry = cur.name
+            continue
+        if line.startswith("}"):
+            cur = None
+            continue
+        if cur is None:
+            continue
+        s = line.strip()
+        cur.lines.append(s)
+        im = _INSTR_RE.match(s)
+        if im:
+            cur.shapes[im.group(1)] = im.group(2)
+    return comps, entry
+
+
+_CALL_RE = re.compile(r"(?:condition=|body=|to_apply=|calls=)%?([\w\.\-]+)")
+
+
+def _trip_count(lines: List[str]) -> int:
+    best = 1
+    for ln in lines:
+        for m in re.finditer(r"constant\((\d+)\)", ln):
+            best = max(best, int(m.group(1)))
+    return best
+
+
+def _multipliers(comps: Dict[str, Computation], entry: str) -> Dict[str, float]:
+    mult: Dict[str, float] = defaultdict(float)
+    mult[entry] = 1.0
+    order = [entry]
+    visited = {entry}
+    # BFS in call order; accumulate multiplicities (call graph is a DAG)
+    i = 0
+    while i < len(order):
+        cur = order[i]
+        i += 1
+        for ln in comps[cur].lines:
+            refs = _CALL_RE.findall(ln)
+            if not refs:
+                continue
+            is_while = " while(" in ln or re.search(r"=\s*\S+\s+while\(", ln)
+            trip = 1
+            if is_while:
+                cm = re.search(r"condition=%?([\w\.\-]+)", ln)
+                if cm and cm.group(1) in comps:
+                    trip = _trip_count(comps[cm.group(1)].lines)
+            for r in set(refs):
+                if r not in comps:
+                    continue
+                mult[r] += mult[cur] * (trip if is_while else 1)
+                if r not in visited:
+                    visited.add(r)
+                    order.append(r)
+    return mult
+
+
+def _operand_names(ln: str) -> List[str]:
+    m = re.search(r"\(([^)]*)\)", ln.split("=", 1)[1] if "=" in ln else ln)
+    if not m:
+        return []
+    names = []
+    for tok in m.group(1).split(","):
+        tok = tok.strip()
+        nm = re.match(r"%?([\w\.\-]+)$", tok)
+        if nm:
+            names.append(nm.group(1))
+    return names
+
+
+def analyze(hlo: str) -> Dict[str, object]:
+    comps, entry = _parse(hlo)
+    mult = _multipliers(comps, entry)
+
+    flops = 0.0
+    mem_bytes = 0.0
+    param_bytes = 0.0
+    coll = {k: 0.0 for k in _COLLECTIVES}
+    coll_count: Dict[str, float] = defaultdict(float)
+    trip_info = {}
+
+    for name, comp in comps.items():
+        m = mult.get(name, 0.0)
+        if m == 0.0:
+            continue
+        is_entry = name == entry
+        for ln in comp.lines:
+            im = _INSTR_RE.match(ln)
+            if not im:
+                continue
+            _, result_type, op = im.groups()
+            if op == "parameter" and is_entry:
+                param_bytes += shape_bytes(result_type)  # weights/caches read
+            if op in _SKIP_OPS:
+                continue
+            # ---- FLOPs from dots -------------------------------------------
+            if op == "dot":
+                dims = _shape_dims(result_type)
+                csz = 1
+                cm = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", ln)
+                ops = _operand_names(ln)
+                if cm and ops:
+                    lhs_type = comp.shapes.get(ops[0], "")
+                    lhs_dims = _shape_dims(lhs_type)
+                    for ci in cm.group(1).split(","):
+                        if ci and int(ci) < len(lhs_dims):
+                            csz *= lhs_dims[int(ci)]
+                n = 1
+                for d in dims:
+                    n *= d
+                flops += 2.0 * n * csz * m
+            # ---- memory traffic --------------------------------------------
+            # count WRITES of HBM-materializing results; ×2 below for the
+            # matching reads (every result is read downstream ~once)
+            rb = shape_bytes(result_type)
+            if op in _HBM_OPS or op in _COLLECTIVES or op.rstrip("-start") in _COLLECTIVES:
+                mem_bytes += rb * m
+            # ---- collectives -----------------------------------------------
+            for kind in _COLLECTIVES:
+                if op == kind or op == kind + "-start":
+                    coll[kind] += rb * m
+                    coll_count[kind] += m
+                    break
+        if m > 1:
+            trip_info[name] = m
+
+    total_coll = sum(coll.values())
+    mem_bytes = 2.0 * mem_bytes + param_bytes  # reads ≈ writes; params read once
+    return {
+        "flops": flops,
+        "memory_bytes": mem_bytes,
+        "collective_bytes": total_coll,
+        "collectives": coll,
+        "collective_counts": dict(coll_count),
+        "loop_multipliers": trip_info,
+    }
+
+
+def collective_bytes(hlo: str) -> Dict[str, float]:
+    """Back-compat wrapper: just the collective traffic."""
+    a = analyze(hlo)
+    out = dict(a["collectives"])
+    out["total"] = a["collective_bytes"]
+    out["instructions"] = a["collective_counts"]
+    return out

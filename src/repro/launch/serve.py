@@ -1,0 +1,58 @@
+"""Serving driver: continuous-batching decode with SVC-monitored telemetry.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch gemma-2b --smoke \
+        --requests 16 --max-new 12
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_config, get_smoke_config
+from repro.models import get_model
+from repro.serving import Request, ServeEngine
+
+
+def main(argv=None) -> dict:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="gemma-2b")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--requests", type=int, default=16)
+    ap.add_argument("--max-batch", type=int, default=4)
+    ap.add_argument("--max-seq", type=int, default=128)
+    ap.add_argument("--max-new", type=int, default=12)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    model = get_model(cfg)
+    params = model.init(jax.random.PRNGKey(args.seed))
+    engine = ServeEngine(model, params, max_batch=args.max_batch, max_seq=args.max_seq)
+
+    rng = np.random.default_rng(args.seed)
+    t0 = time.time()
+    for rid in range(args.requests):
+        plen = int(rng.integers(4, 16))
+        prompt = rng.integers(0, cfg.vocab, plen).astype(np.int32)
+        engine.submit(Request(rid=rid, prompt=prompt, max_new=args.max_new))
+    done = engine.run()
+    wall = time.time() - t0
+    toks = sum(len(r.out_tokens) for r in done)
+    lat = [r.t_done - r.t_submit for r in done if r.t_done]
+    out = {
+        "completed": len(done),
+        "tokens": toks,
+        "tok_per_s": toks / wall,
+        "p50_latency_s": float(np.median(lat)) if lat else None,
+        "ticks": engine.ticks,
+    }
+    print(f"[serve] {out}")
+    return out
+
+
+if __name__ == "__main__":
+    main()

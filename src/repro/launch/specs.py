@@ -1,0 +1,126 @@
+"""ShapeDtypeStruct stand-ins for every model input (no allocation).
+
+``input_specs(arch, shape, mesh, multi_pod)`` returns the exact pytrees the
+dry-run lowers against: sharded SDS for the train state / params / caches /
+batch, per (architecture × input-shape × mesh) cell.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs import get_config
+from repro.configs.base import ArchConfig, ShapeCell
+from repro.distributed import sharding as shd
+from repro.models.api import Model, get_model
+from repro.models.parallel import ParallelCtx
+from repro.training.train_step import TrainState, init_train_state
+
+VISION_STUB_DIM = 1024
+
+
+def make_ctx(mesh: Mesh, multi_pod: bool) -> ParallelCtx:
+    return ParallelCtx(mesh=mesh, dp_axes=shd.dp_axes(multi_pod), tp_axis="model")
+
+
+def _sds(shape, dtype, mesh, spec) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct(shape, dtype, sharding=NamedSharding(mesh, spec))
+
+
+def batch_sds(cfg: ArchConfig, cell: ShapeCell, mesh: Mesh, multi_pod: bool,
+              decode: bool = False) -> Dict[str, jax.ShapeDtypeStruct]:
+    dp = shd.dp_axes(multi_pod)
+    B = cell.global_batch
+    S = 1 if decode else cell.seq_len
+    out = {
+        "tokens": _sds((B, S), jnp.int32, mesh, P(dp, None)),
+        "labels": _sds((B, S), jnp.int32, mesh, P(dp, None)),
+        "domain": _sds((B,), jnp.int32, mesh, P(dp)),
+    }
+    if cfg.family == "vlm" and not decode:
+        out["vision_embeds"] = _sds(
+            (B, cfg.n_vision_tokens, VISION_STUB_DIM), jnp.float32, mesh, P(dp, None, None)
+        )
+    if cfg.family == "encdec" and not decode:
+        out["frames"] = _sds(
+            (B, cell.seq_len, cfg.d_model), jnp.float32, mesh, P(dp, None, None)
+        )
+    return out
+
+
+def state_sds(model: Model, mesh: Mesh, multi_pod: bool) -> Tuple[Any, Any]:
+    """(TrainState SDS tree with shardings, spec tree) via eval_shape."""
+    shapes = jax.eval_shape(lambda k: init_train_state(model, k), jax.random.PRNGKey(0))
+    pspecs = shd.tree_param_specs(model.cfg, shapes.params, mesh)
+    ospecs = {
+        "m": pspecs["m"] if isinstance(pspecs, dict) and "m" in pspecs else pspecs,
+        "v": pspecs,
+        "step": P(),
+    }
+    ospecs = {"m": pspecs, "v": pspecs, "step": P()}
+    specs = TrainState(params=pspecs, opt_state=ospecs, step=P())
+    sds = jax.tree.map(
+        lambda s, sp: _sds(s.shape, s.dtype, mesh, sp),
+        (shapes.params, shapes.opt_state, shapes.step),
+        (pspecs, ospecs, P()),
+        is_leaf=lambda x: isinstance(x, P) or hasattr(x, "shape"),
+    )
+    state = TrainState(params=sds[0], opt_state=sds[1], step=sds[2])
+    return state, specs
+
+
+def params_sds(model: Model, mesh: Mesh, multi_pod: bool,
+               serving: bool = False) -> Tuple[Any, Any]:
+    """Param SDS.  ``serving=True``: bf16 weights, TP-resident (no FSDP)
+    when they fit per-chip HBM — decode stops re-gathering weights per
+    token (§Perf hillclimb D)."""
+    shapes = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    serve = serving and shd.serving_weights_fit(model.cfg, mesh)
+    pspecs = shd.tree_param_specs(model.cfg, shapes, mesh, serving=serve)
+
+    def leaf_sds(s, sp):
+        dt = jnp.bfloat16 if (serve and s.dtype == jnp.float32 and s.ndim >= 2) else s.dtype
+        return _sds(s.shape, dt, mesh, sp)
+
+    sds = jax.tree.map(
+        leaf_sds, shapes, pspecs,
+        is_leaf=lambda x: hasattr(x, "shape") and not isinstance(x, P),
+    )
+    return sds, pspecs
+
+
+def cache_sds(model: Model, cell: ShapeCell, mesh: Mesh, multi_pod: bool) -> Any:
+    shapes = jax.eval_shape(
+        lambda: model.init_cache(cell.global_batch, cell.seq_len)
+    )
+    cspecs = shd.cache_specs(model.cfg, shapes, mesh, multi_pod)
+    return jax.tree.map(
+        lambda s, sp: _sds(s.shape, s.dtype, mesh, sp), shapes, cspecs,
+        is_leaf=lambda x: hasattr(x, "shape") and not isinstance(x, P),
+    )
+
+
+def input_specs(arch: str, cell: ShapeCell, mesh: Mesh, multi_pod: bool) -> Dict[str, Any]:
+    """All SDS inputs for the cell's step function."""
+    cfg = get_config(arch)
+    model = get_model(cfg)
+    if cell.kind == "train":
+        state, _ = state_sds(model, mesh, multi_pod)
+        return {"state": state, "batch": batch_sds(cfg, cell, mesh, multi_pod)}
+    if cell.kind == "prefill":
+        params, _ = params_sds(model, mesh, multi_pod)
+        return {"params": params, "batch": batch_sds(cfg, cell, mesh, multi_pod)}
+    if cell.kind == "decode":
+        params, _ = params_sds(model, mesh, multi_pod, serving=True)
+        dp = shd._maybe(mesh, shd.dp_axes(multi_pod), cell.global_batch)
+        return {
+            "params": params,
+            "cache": cache_sds(model, cell, mesh, multi_pod),
+            "tokens": _sds((cell.global_batch, 1), jnp.int32, mesh, P(dp, None)),
+            "pos": _sds((), jnp.int32, mesh, P()),
+        }
+    raise ValueError(cell.kind)

@@ -1,0 +1,112 @@
+"""Uniform model interface over the architecture families.
+
+``get_model(cfg)`` returns a ``Model`` whose functions share one signature
+across families so the trainer / server / dry-run never branch:
+
+  batch (LM):     {"tokens": (B,S) i32, "labels": (B,S) i32}
+  batch (vlm):    + {"vision_embeds": (B, n_vis, 1024) f32 stub}
+  batch (encdec): {"frames": (B,S,d) f32 stub, "tokens", "labels"}
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import encdec, rglru, transformer, xlstm
+from repro.models.parallel import ParallelCtx
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ArchConfig
+    init: Callable[..., Any]
+    forward: Callable[..., Any]  # (params, batch, ctx) -> (logits, aux)
+    init_cache: Callable[..., Any]  # (B, T) -> cache
+    prefill: Callable[..., Any]  # (params, batch, cache_len, ctx) -> (logits, cache)
+    decode_step: Callable[..., Any]  # (params, cache, tokens, pos, ctx) -> (logits, cache)
+
+
+def _lm_family(mod, cfg: ArchConfig) -> Model:
+    def fwd(params, batch, ctx: Optional[ParallelCtx] = None):
+        return mod.forward(params, batch["tokens"], cfg, ctx,
+                           vision_embeds=batch.get("vision_embeds"))
+
+    def pre(params, batch, cache_len=None, ctx=None):
+        return mod.prefill(params, batch["tokens"], cfg, cache_len, ctx,
+                           vision_embeds=batch.get("vision_embeds"))
+
+    return Model(
+        cfg=cfg,
+        init=lambda rng: mod.init_params(rng, cfg),
+        forward=fwd,
+        init_cache=lambda B, T: mod.init_cache(cfg, B, T),
+        prefill=pre,
+        decode_step=lambda params, cache, tokens, pos, ctx=None: mod.decode_step(
+            params, cache, tokens, pos, cfg, ctx
+        ),
+    )
+
+
+def _encdec_family(cfg: ArchConfig) -> Model:
+    return Model(
+        cfg=cfg,
+        init=lambda rng: encdec.init_params(rng, cfg),
+        forward=lambda params, batch, ctx=None: encdec.forward(params, batch, cfg, ctx),
+        init_cache=lambda B, T: encdec.init_cache(cfg, B, T),
+        prefill=lambda params, batch, cache_len=None, ctx=None: encdec.prefill(
+            params, batch, cfg, cache_len, ctx
+        ),
+        decode_step=lambda params, cache, tokens, pos, ctx=None: encdec.decode_step(
+            params, cache, tokens, pos, cfg, ctx
+        ),
+    )
+
+
+def get_model(cfg: ArchConfig) -> Model:
+    if cfg.family in ("dense", "moe", "vlm"):
+        return _lm_family(transformer, cfg)
+    if cfg.family == "hybrid":
+        return _lm_family(rglru, cfg)
+    if cfg.family == "ssm":
+        return _lm_family(xlstm, cfg)
+    if cfg.family == "encdec":
+        return _encdec_family(cfg)
+    raise ValueError(cfg.family)
+
+
+# ---------------------------------------------------------------------------
+# analytic parameter counts from shapes (exact; no allocation)
+# ---------------------------------------------------------------------------
+
+def param_counts(cfg: ArchConfig) -> Dict[str, int]:
+    """(total, embed, moe_expert, active) param counts via eval_shape."""
+    model = get_model(cfg)
+    shapes = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    total = 0
+    embed = 0
+    expert = 0
+    for path, leaf in jax.tree_util.tree_flatten_with_path(shapes)[0]:
+        n = 1
+        for s in leaf.shape:
+            n *= s
+        total += n
+        keys = [getattr(k, "key", "") for k in path]
+        if "embed" in keys or "lm_head" in keys:
+            embed += n
+        if cfg.moe_experts and any(k in ("w_gate", "w_up", "w_down") for k in keys):
+            expert += n
+    active = total
+    if cfg.moe_experts:
+        active = total - expert + int(expert * cfg.moe_top_k / cfg.moe_experts)
+    return {
+        "total": int(total),
+        "embed": int(embed),
+        "non_embed": int(total - embed),
+        "active": int(active),
+        "active_non_embed": int(active - embed),
+    }

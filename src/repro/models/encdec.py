@@ -1,0 +1,220 @@
+"""Encoder-decoder backbone (seamless-m4t-large-v2 text/audio backbone).
+
+Per the spec, the modality frontend is a STUB: ``input_specs`` provides
+precomputed audio-frame embeddings (B, S_src, d_model) that feed the
+encoder directly.  The decoder is a standard causal transformer with
+cross-attention over the encoder memory; decode_step carries a self-attn
+KV cache plus precomputed cross-attention K/V from the memory.
+
+Layer split: enc_layers + dec_layers (= the spec's 24L total), each stack
+scanned over depth.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.models import layers as L
+from repro.models.parallel import ParallelCtx
+from repro.models.transformer import _remat, build_positions, chunked_attention
+
+
+def _attn_mlp_init(rng, cfg: ArchConfig, n: int, cross: bool) -> Dict[str, jnp.ndarray]:
+    d = cfg.d_model
+    ks = jax.random.split(rng, 12)
+    p = {
+        "ln1": jnp.ones((n, d), jnp.float32),
+        "wq": L.dense_init(ks[0], (n, d, cfg.q_dim)),
+        "wk": L.dense_init(ks[1], (n, d, cfg.kv_dim)),
+        "wv": L.dense_init(ks[2], (n, d, cfg.kv_dim)),
+        "wo": L.dense_init(ks[3], (n, cfg.q_dim, d)),
+        "ln2": jnp.ones((n, d), jnp.float32),
+        "w_gate": L.dense_init(ks[4], (n, d, cfg.d_ff)),
+        "w_up": L.dense_init(ks[5], (n, d, cfg.d_ff)),
+        "w_down": L.dense_init(ks[6], (n, cfg.d_ff, d), scale=1.0 / np.sqrt(cfg.d_ff)),
+    }
+    if cross:
+        p.update({
+            "ln_x": jnp.ones((n, d), jnp.float32),
+            "xq": L.dense_init(ks[7], (n, d, cfg.q_dim)),
+            "xk": L.dense_init(ks[8], (n, d, cfg.kv_dim)),
+            "xv": L.dense_init(ks[9], (n, d, cfg.kv_dim)),
+            "xo": L.dense_init(ks[10], (n, cfg.q_dim, d)),
+        })
+    return p
+
+
+def init_params(rng: jax.Array, cfg: ArchConfig) -> Dict[str, Any]:
+    k0, k1, k2, k3 = jax.random.split(rng, 4)
+    return {
+        "embed": L.embed_init(k0, cfg.vocab, cfg.d_model),
+        "final_norm": jnp.ones((cfg.d_model,), jnp.float32),
+        "enc": _attn_mlp_init(k1, cfg, cfg.enc_layers, cross=False),
+        "dec": _attn_mlp_init(k2, cfg, cfg.dec_layers, cross=True),
+        "enc_final_norm": jnp.ones((cfg.d_model,), jnp.float32),
+    }
+
+
+def _self_attn(x, lp, positions, cfg, causal: bool):
+    B, S, d = x.shape
+    dt = x.dtype
+    h = L.rmsnorm(x, lp["ln1"], cfg.norm_eps)
+    q, k, v = L.qkv_project(h, lp["wq"].astype(dt), lp["wk"].astype(dt), lp["wv"].astype(dt),
+                            cfg.n_heads, cfg.n_kv_heads, cfg.head_dim)
+    q = L.apply_rope(q, positions, cfg.rope_theta)
+    k = L.apply_rope(k, positions, cfg.rope_theta)
+    if causal:
+        attn = chunked_attention(q, k, v)
+    else:
+        attn = L.gqa_attention(q, k, v, mask=None)  # bidirectional
+    return x + attn.reshape(B, S, cfg.q_dim) @ lp["wo"].astype(dt), (k, v)
+
+
+def _cross_attn(x, lp, mem_k, mem_v, cfg):
+    B, S, d = x.shape
+    dt = x.dtype
+    h = L.rmsnorm(x, lp["ln_x"], cfg.norm_eps)
+    q = (h @ lp["xq"].astype(dt)).reshape(B, S, cfg.n_heads, cfg.head_dim)
+    attn = L.gqa_attention(q, mem_k, mem_v, mask=None)
+    return x + attn.reshape(B, S, cfg.q_dim) @ lp["xo"].astype(dt)
+
+
+def _mlp(x, lp, cfg):
+    dt = x.dtype
+    h = L.rmsnorm(x, lp["ln2"], cfg.norm_eps)
+    return x + L.glu_mlp(h, lp["w_gate"].astype(dt), lp["w_up"].astype(dt),
+                         lp["w_down"].astype(dt), cfg.act)
+
+
+def encode(params, frames, cfg: ArchConfig):
+    """frames: (B, S_src, d_model) stub embeddings → encoder memory."""
+    B, S, _ = frames.shape
+    x = frames.astype(jnp.dtype(cfg.compute_dtype))
+    positions = build_positions(cfg, B, S)
+
+    def body(carry, lp):
+        y, _ = _self_attn(carry, lp, positions, cfg, causal=False)
+        y = _mlp(y, lp, cfg)
+        return y, None
+
+    x, _ = jax.lax.scan(_remat(body, cfg), x, params["enc"])
+    return L.rmsnorm(x, params["enc_final_norm"], cfg.norm_eps)
+
+
+def _mem_kv(params, memory, cfg):
+    """Precompute cross-attention K/V per decoder layer: (L,B,S,K,hd)."""
+    dt = memory.dtype
+    B, S, d = memory.shape
+
+    def body(_, lp):
+        k = (memory @ lp["xk"].astype(dt)).reshape(B, S, cfg.n_kv_heads, cfg.head_dim)
+        v = (memory @ lp["xv"].astype(dt)).reshape(B, S, cfg.n_kv_heads, cfg.head_dim)
+        return None, (k, v)
+
+    _, (mk, mv) = jax.lax.scan(body, None, params["dec"])
+    return mk, mv
+
+
+def decode_train(params, tokens, memory, cfg: ArchConfig):
+    """Teacher-forced decoder over target tokens with cross-attn to memory."""
+    B, S = tokens.shape
+    dt = jnp.dtype(cfg.compute_dtype)
+    x = jnp.take(params["embed"], tokens, axis=0).astype(dt)
+    positions = build_positions(cfg, B, S)
+    mk, mv = _mem_kv(params, memory, cfg)
+
+    def body(carry, xs):
+        lp, k_l, v_l = xs
+        y, _ = _self_attn(carry, lp, positions, cfg, causal=True)
+        y = _cross_attn(y, lp, k_l, v_l, cfg)
+        y = _mlp(y, lp, cfg)
+        return y, None
+
+    x, _ = jax.lax.scan(_remat(body, cfg), x, (params["dec"], mk, mv))
+    x = L.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    return x @ params["embed"].T.astype(dt)
+
+
+def forward(params, batch, cfg: ArchConfig, ctx: Optional[ParallelCtx] = None,
+            vision_embeds=None):
+    """batch: dict(frames (B,S_src,d), tokens (B,S_tgt)) → decoder logits."""
+    memory = encode(params, batch["frames"], cfg)
+    logits = decode_train(params, batch["tokens"], memory, cfg)
+    return logits, {}
+
+
+def init_cache(cfg: ArchConfig, B: int, T: int, mem_len: Optional[int] = None):
+    dt = jnp.dtype(cfg.compute_dtype)
+    Lk = (cfg.dec_layers, B, T, cfg.n_kv_heads, cfg.head_dim)
+    mem = mem_len or T
+    Mk = (cfg.dec_layers, B, mem, cfg.n_kv_heads, cfg.head_dim)
+    return {
+        "k": jnp.zeros(Lk, dt),
+        "v": jnp.zeros(Lk, dt),
+        "mem_k": jnp.zeros(Mk, dt),
+        "mem_v": jnp.zeros(Mk, dt),
+    }
+
+
+def prefill(params, batch, cfg: ArchConfig, cache_len: Optional[int] = None,
+            ctx: Optional[ParallelCtx] = None, vision_embeds=None):
+    """Encode source + teacher-forced prefix → logits + decode cache."""
+    memory = encode(params, batch["frames"], cfg)
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    T = cache_len or S
+    mk, mv = _mem_kv(params, memory, cfg)
+    dt = jnp.dtype(cfg.compute_dtype)
+    positions = build_positions(cfg, B, S)
+    x = jnp.take(params["embed"], tokens, axis=0).astype(dt)
+
+    def body(carry, xs):
+        lp, k_l, v_l = xs
+        y, (k, v) = _self_attn(carry, lp, positions, cfg, causal=True)
+        y = _cross_attn(y, lp, k_l, v_l, cfg)
+        y = _mlp(y, lp, cfg)
+        if T > S:
+            pad = [(0, 0), (0, T - S), (0, 0), (0, 0)]
+            k, v = jnp.pad(k, pad), jnp.pad(v, pad)
+        return y, (k.astype(dt), v.astype(dt))
+
+    x, (ks, vs) = jax.lax.scan(body, x, (params["dec"], mk, mv))
+    x = L.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    logits = x @ params["embed"].T.astype(dt)
+    return logits, {"k": ks, "v": vs, "mem_k": mk, "mem_v": mv}
+
+
+def decode_step(params, cache, tokens, pos, cfg: ArchConfig,
+                ctx: Optional[ParallelCtx] = None):
+    B, S = tokens.shape
+    dt = jnp.dtype(cfg.compute_dtype)
+    x = jnp.take(params["embed"], tokens, axis=0).astype(dt)
+    positions = build_positions(cfg, B, S, offset=pos)
+
+    def body(carry, xs):
+        lp, kc, vc, mk, mv = xs
+        h = L.rmsnorm(carry, lp["ln1"], cfg.norm_eps)
+        q, k, v = L.qkv_project(h, lp["wq"].astype(dt), lp["wk"].astype(dt),
+                                lp["wv"].astype(dt), cfg.n_heads, cfg.n_kv_heads, cfg.head_dim)
+        q = L.apply_rope(q, positions, cfg.rope_theta)
+        k = L.apply_rope(k, positions, cfg.rope_theta)
+        kc = jax.lax.dynamic_update_slice_in_dim(kc, k.astype(kc.dtype), pos, axis=1)
+        vc = jax.lax.dynamic_update_slice_in_dim(vc, v.astype(vc.dtype), pos, axis=1)
+        mask = L.decode_mask(kc.shape[1], pos)
+        attn = L.gqa_attention(q, kc, vc, mask)
+        y = carry + attn.reshape(B, S, cfg.q_dim) @ lp["wo"].astype(dt)
+        y = _cross_attn(y, lp, mk, mv, cfg)
+        y = _mlp(y, lp, cfg)
+        return y, (kc, vc)
+
+    x, (ks, vs) = jax.lax.scan(
+        body, x, (params["dec"], cache["k"], cache["v"], cache["mem_k"], cache["mem_v"])
+    )
+    x = L.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    logits = x @ params["embed"].T.astype(dt)
+    return logits, {"k": ks, "v": vs, "mem_k": cache["mem_k"], "mem_v": cache["mem_v"]}

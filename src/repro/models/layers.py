@@ -1,0 +1,170 @@
+"""Shared model layers: norms, rotary embeddings, attention, GLU MLPs.
+
+Everything is a pure function over explicit parameter pytrees (no framework
+dependency).  Math follows the assigned architectures: RMSNorm, RoPE and
+M-RoPE (Qwen2-VL), GQA/MQA attention with KV caches, local (banded)
+attention for the hybrid family, SwiGLU/GeGLU MLPs.
+
+Dtype policy: parameters live in fp32 (master copies for the optimizer);
+``compute_dtype`` casts activations/weights at use (bf16 on TPU).
+Attention softmax and norms accumulate in fp32.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# init helpers
+# ---------------------------------------------------------------------------
+
+def dense_init(rng, shape, scale: Optional[float] = None) -> jnp.ndarray:
+    fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+    scale = scale if scale is not None else 1.0 / np.sqrt(fan_in)
+    return (jax.random.normal(rng, shape, jnp.float32) * scale).astype(jnp.float32)
+
+
+def embed_init(rng, vocab: int, d: int) -> jnp.ndarray:
+    return jax.random.normal(rng, (vocab, d), jnp.float32) * 0.02
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+def rmsnorm(x: jnp.ndarray, w: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps) * (w.astype(jnp.float32))
+    return out.astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# rotary position embeddings
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float) -> np.ndarray:
+    return 1.0 / (theta ** (np.arange(0, head_dim, 2, dtype=np.float32) / head_dim))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float = 1e4) -> jnp.ndarray:
+    """x: (..., S, n, head_dim); positions: broadcastable to (..., S)."""
+    hd = x.shape[-1]
+    freqs = jnp.asarray(rope_freqs(hd, theta))  # (hd/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (..., S, hd/2)
+    cos = jnp.cos(ang)[..., None, :]  # (..., S, 1, hd/2)
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(
+    x: jnp.ndarray, positions: jnp.ndarray, sections: Tuple[int, ...], theta: float = 1e4
+) -> jnp.ndarray:
+    """Multimodal RoPE (Qwen2-VL): positions (3, ..., S) for (t, h, w) axes.
+
+    The half-dim frequency bands are partitioned into ``sections`` (summing
+    to head_dim/2); each band rotates by its own positional axis.
+    """
+    hd = x.shape[-1]
+    half = hd // 2
+    assert sum(sections) == half, (sections, half)
+    freqs = jnp.asarray(rope_freqs(hd, theta))  # (half,)
+    # per-band positional angle
+    angs = []
+    start = 0
+    for axis, sec in enumerate(sections):
+        f = freqs[start : start + sec]
+        p = positions[axis]  # (..., S)
+        angs.append(p[..., None].astype(jnp.float32) * f)
+        start += sec
+    ang = jnp.concatenate(angs, axis=-1)  # (..., S, half)
+    cos = jnp.cos(ang)[..., None, :]
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# attention
+# ---------------------------------------------------------------------------
+
+def gqa_attention(
+    q: jnp.ndarray,  # (B, S, H, hd)
+    k: jnp.ndarray,  # (B, T, K, hd)
+    v: jnp.ndarray,  # (B, T, K, hd)
+    mask: Optional[jnp.ndarray],  # broadcastable to (B, 1, 1, S, T) or None
+    scale: Optional[float] = None,
+) -> jnp.ndarray:
+    """Grouped-query attention; returns (B, S, H, hd).  Softmax in fp32."""
+    B, S, H, hd = q.shape
+    K = k.shape[2]
+    G = H // K
+    scale = scale if scale is not None else 1.0 / np.sqrt(hd)
+    qg = q.reshape(B, S, K, G, hd)
+    scores = jnp.einsum("bskgh,btkh->bkgst", qg, k).astype(jnp.float32) * scale
+    if mask is not None:
+        scores = jnp.where(mask, scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bkgst,btkh->bskgh", probs, v)
+    return out.reshape(B, S, H, hd)
+
+
+def causal_mask(S: int, T: int, offset: int = 0) -> jnp.ndarray:
+    """(1,1,1,S,T) boolean mask; query i attends keys j ≤ i + offset."""
+    qi = jnp.arange(S)[:, None] + offset
+    kj = jnp.arange(T)[None, :]
+    return (kj <= qi)[None, None, None]
+
+
+def local_mask(S: int, T: int, window: int, offset: int = 0) -> jnp.ndarray:
+    """Banded causal mask: attend to the last ``window`` positions."""
+    qi = jnp.arange(S)[:, None] + offset
+    kj = jnp.arange(T)[None, :]
+    return ((kj <= qi) & (kj > qi - window))[None, None, None]
+
+
+def decode_mask(T: int, pos: jnp.ndarray, window: int = 0) -> jnp.ndarray:
+    """Mask for one-token decode against a cache of length T at ``pos``."""
+    kj = jnp.arange(T)[None, :]
+    ok = kj <= pos
+    if window:
+        ok = ok & (kj > pos - window)
+    return ok[None, None, None]
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+def glu_mlp(x: jnp.ndarray, w_gate, w_up, w_down, act: str) -> jnp.ndarray:
+    """SwiGLU / GeGLU: act(x·w_gate) ⊙ (x·w_up) · w_down."""
+    g = x @ w_gate
+    u = x @ w_up
+    if act == "swiglu":
+        h = jax.nn.silu(g) * u
+    elif act == "geglu":
+        h = jax.nn.gelu(g, approximate=True) * u
+    elif act == "gelu":
+        h = jax.nn.gelu(g, approximate=True)  # w_up unused pattern, kept uniform
+    else:
+        raise ValueError(act)
+    return h @ w_down
+
+
+def qkv_project(x, wq, wk, wv, H, K, hd):
+    B, S, _ = x.shape
+    q = (x @ wq).reshape(B, S, H, hd)
+    k = (x @ wk).reshape(B, S, K, hd)
+    v = (x @ wv).reshape(B, S, K, hd)
+    return q, k, v

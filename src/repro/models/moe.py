@@ -1,0 +1,83 @@
+"""Mixture-of-Experts FFN with capacity-based local dispatch.
+
+Design (DESIGN.md §5): tokens never cross data shards — each data shard
+sorts its local tokens by routed expert, packs them into per-expert
+capacity buffers, runs the expert GLU on the (E, Cap, d) block, and
+scatters results back.  Expert weights are *storage*-sharded over the data
+axis (ZeRO-style, all-gathered by XLA at use) and *compute*-sharded over
+the model axis on d_ff (neither 8 nor 40 experts divides the 16-way model
+axis, so expert-parallelism over `model` is not available for the assigned
+archs; d_ff TP is).
+
+Under a mesh, the dispatch runs inside shard_map over the data axes so the
+sort/scatter stay shard-local (no global sort collectives); the d_ff
+partial products are reduced with psum over the model axis.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+
+
+def moe_capacity(cfg: ArchConfig, n_tokens: int) -> int:
+    cap = int(np.ceil(n_tokens * cfg.moe_top_k / cfg.moe_experts * cfg.moe_capacity_factor))
+    return max(8, cap)
+
+
+def moe_ffn_local(
+    x: jnp.ndarray,  # (T, d) local tokens
+    router_w: jnp.ndarray,  # (d, E)
+    w_gate: jnp.ndarray,  # (E, d, F) — F may be a TP shard
+    w_up: jnp.ndarray,  # (E, d, F)
+    w_down: jnp.ndarray,  # (E, F, d)
+    cfg: ArchConfig,
+    capacity: int,
+    tp_axis: Optional[str] = None,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Returns (y (T, d), aux_load (E,)) — aux is the per-expert load for
+    the router balance loss and the SVC routing-load views."""
+    T, d = x.shape
+    E, k = cfg.moe_experts, cfg.moe_top_k
+
+    logits = (x @ router_w).astype(jnp.float32)  # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_e = jax.lax.top_k(probs, k)  # (T, k)
+    top_p = top_p / jnp.maximum(jnp.sum(top_p, axis=-1, keepdims=True), 1e-9)
+
+    # flatten (token, slot) pairs and sort by expert — local, O(Tk log Tk)
+    flat_e = top_e.reshape(-1)  # (T*k,)
+    flat_p = top_p.reshape(-1)
+    flat_t = jnp.repeat(jnp.arange(T, dtype=jnp.int32), k)
+    order = jnp.argsort(flat_e, stable=True)
+    se, sp, st = flat_e[order], flat_p[order], flat_t[order]
+    # position within expert = rank − first-rank-of-expert
+    idx = jnp.arange(se.shape[0], dtype=jnp.int32)
+    first_of_e = jnp.searchsorted(se, jnp.arange(E, dtype=jnp.int32))
+    pos_in_e = idx - first_of_e[se]
+    keep = pos_in_e < capacity  # overflow tokens are dropped (std. practice)
+    slot = jnp.where(keep, se * capacity + pos_in_e, E * capacity)  # overflow slot
+
+    buf = jnp.zeros((E * capacity + 1, d), x.dtype).at[slot].set(x[st])
+    buf = buf[:-1].reshape(E, capacity, d)
+
+    # expert GLU on the packed block (MXU): (E, Cap, d) @ (E, d, F)
+    g = jnp.einsum("ecd,edf->ecf", buf, w_gate.astype(x.dtype))
+    u = jnp.einsum("ecd,edf->ecf", buf, w_up.astype(x.dtype))
+    h = jax.nn.silu(g) * u if cfg.act == "swiglu" else jax.nn.gelu(g, approximate=True) * u
+    out = jnp.einsum("ecf,efd->ecd", h, w_down.astype(x.dtype))  # (E, Cap, d)
+    if tp_axis is not None:
+        out = jax.lax.psum(out, tp_axis)  # reduce d_ff TP partials
+
+    flat_out = out.reshape(E * capacity, d)
+    safe_slot = jnp.minimum(slot, E * capacity - 1)
+    gathered = jnp.where(keep[:, None], flat_out[safe_slot], 0.0)
+    y = jnp.zeros((T, d), x.dtype).at[st].add(gathered * sp[:, None].astype(x.dtype))
+
+    load = jnp.sum(jax.nn.one_hot(top_e, E, dtype=jnp.float32), axis=(0, 1))  # (E,)
+    return y, load

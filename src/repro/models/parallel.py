@@ -1,0 +1,43 @@
+"""Parallelism context threaded through model forward functions.
+
+``ParallelCtx`` names the mesh axes so models can place shard_map regions
+(MoE dispatch) and sharding constraints without global state.  ``None``
+means single-device execution (CPU smoke tests).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class ParallelCtx:
+    mesh: Mesh
+    dp_axes: Tuple[str, ...]  # batch axes, e.g. ("data",) or ("pod", "data")
+    tp_axis: str = "model"
+
+    @property
+    def dp_size(self) -> int:
+        s = 1
+        for a in self.dp_axes:
+            s *= self.mesh.shape[a]
+        return s
+
+    @property
+    def tp_size(self) -> int:
+        return self.mesh.shape[self.tp_axis]
+
+    def batch_spec(self, *rest) -> P:
+        return P(self.dp_axes, *rest)
+
+
+def constrain(x, ctx: Optional[ParallelCtx], spec: P):
+    if ctx is None:
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, jax.sharding.NamedSharding(ctx.mesh, spec)
+    )

@@ -1,0 +1,391 @@
+"""Decoder-only transformer LM (dense + MoE + M-RoPE/VLM variants).
+
+Covers phi3-mini, gemma-2b/7b, granite-3-2b (dense GQA/MQA), qwen2-vl-72b
+(M-RoPE + patch-embedding stub), grok-1-314b and granite-moe (MoE blocks).
+
+Implementation notes:
+  * scan-over-layers with stacked (L, ...) parameter leaves keeps the HLO
+    O(1) in depth (MaxText-style) — required for 314B dry-run compiles;
+  * attention is computed in query chunks (lax.scan) so the S×T score
+    matrix never materializes — O(chunk·T) live memory at 32k prefill;
+  * KV caches are (L, B, T, K, hd) bf16, updated via dynamic_update_slice
+    inside the layer scan;
+  * MoE uses capacity-based local dispatch (repro/models/moe.py), wrapped
+    in shard_map over the data axes when a ParallelCtx is given.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+from repro.models import layers as L
+from repro.models.moe import moe_capacity, moe_ffn_local
+from repro.models.parallel import ParallelCtx, constrain
+
+ATTN_CHUNK = 512  # query-chunk size for flash-style chunked attention
+ATTN_UNROLL = False  # unrolling the chunk scan did NOT remove the per-chunk
+                     # gathers (refuted hypothesis, EXPERIMENTS.md §Perf A.1):
+                     # the traffic was T-sharded scores gathered for softmax,
+                     # not loop-invariant KV.
+VISION_STUB_DIM = 1024  # patch-embedding stub width (frontend is external)
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def init_params(rng: jax.Array, cfg: ArchConfig) -> Dict[str, Any]:
+    ks = jax.random.split(rng, 16)
+    d, F, V, Lr = cfg.d_model, cfg.d_ff, cfg.vocab, cfg.n_layers
+
+    def stack(key, shape, scale=None):
+        return L.dense_init(key, (Lr,) + shape, scale)
+
+    p: Dict[str, Any] = {
+        "embed": L.embed_init(ks[0], V, d),
+        "final_norm": jnp.ones((d,), jnp.float32),
+        "layers": {
+            "ln1": jnp.ones((Lr, d), jnp.float32),
+            "ln2": jnp.ones((Lr, d), jnp.float32),
+            "wq": stack(ks[1], (d, cfg.q_dim)),
+            "wk": stack(ks[2], (d, cfg.kv_dim)),
+            "wv": stack(ks[3], (d, cfg.kv_dim)),
+            "wo": stack(ks[4], (cfg.q_dim, d)),
+        },
+    }
+    if cfg.moe_experts:
+        E = cfg.moe_experts
+        p["layers"]["router"] = stack(ks[5], (d, E))
+        p["layers"]["w_gate"] = stack(ks[6], (E, d, F))
+        p["layers"]["w_up"] = stack(ks[7], (E, d, F))
+        p["layers"]["w_down"] = stack(ks[8], (E, F, d), scale=1.0 / np.sqrt(F))
+    else:
+        p["layers"]["w_gate"] = stack(ks[6], (d, F))
+        p["layers"]["w_up"] = stack(ks[7], (d, F))
+        p["layers"]["w_down"] = stack(ks[8], (F, d))
+    if not cfg.tie_embeddings:
+        p["lm_head"] = L.dense_init(ks[9], (d, V))
+    if cfg.n_vision_tokens:
+        p["vision_proj"] = L.dense_init(ks[10], (VISION_STUB_DIM, d))
+    return p
+
+
+# ---------------------------------------------------------------------------
+# positions (RoPE / M-RoPE)
+# ---------------------------------------------------------------------------
+
+def build_positions(cfg: ArchConfig, B: int, S: int, offset=0):
+    """Returns positions for rope: (B,S) or (3,B,S) for m-rope.
+
+    ``offset`` is the absolute position of the first token (decode steps
+    pass the cache position); M-RoPE classifies vision/text by absolute
+    index so decode tokens always fall in the text regime.
+    """
+    ai = jnp.arange(S, dtype=jnp.int32) + offset  # absolute indices (S,)
+    pos = jnp.broadcast_to(ai[None, :], (B, S))
+    if not cfg.m_rope:
+        return pos
+    nv = cfg.n_vision_tokens
+    side = max(1, int(np.sqrt(max(nv, 1))))
+    is_vis = ai < nv
+    t = jnp.where(is_vis, 0, ai - nv + 1)
+    h = jnp.where(is_vis, ai // side, ai - nv + 1)
+    w = jnp.where(is_vis, ai % side, ai - nv + 1)
+    grid = jnp.stack([t, h, w])[:, None, :]  # (3,1,S)
+    return jnp.broadcast_to(grid, (3, B, S))
+
+
+def _rope(cfg: ArchConfig, x, positions):
+    if cfg.m_rope:
+        return L.apply_mrope(x, positions, cfg.mrope_sections, cfg.rope_theta)
+    return L.apply_rope(x, positions, cfg.rope_theta)
+
+
+# ---------------------------------------------------------------------------
+# attention (chunked, flash-style at the XLA level)
+# ---------------------------------------------------------------------------
+
+def chunked_attention(q, k, v, window: int = 0, chunk: int = ATTN_CHUNK):
+    """Causal (optionally banded) attention scanned over query chunks."""
+    B, S, H, hd = q.shape
+    if S <= chunk:
+        mask = (
+            L.local_mask(S, S, window) if window else L.causal_mask(S, S)
+        )
+        return L.gqa_attention(q, k, v, mask)
+    n = S // chunk
+    qc = q.reshape(B, n, chunk, H, hd)
+
+    def body(carry, xs):
+        qblk, i = xs
+        off = i * chunk
+        mask = (
+            L.local_mask(chunk, S, window, offset=off)
+            if window
+            else L.causal_mask(chunk, S, offset=off)
+        )
+        out = L.gqa_attention(qblk, k, v, mask)
+        return carry, out
+
+    _, outs = jax.lax.scan(
+        body, None, (jnp.moveaxis(qc, 1, 0), jnp.arange(n, dtype=jnp.int32)),
+        unroll=True if ATTN_UNROLL else 1,
+    )
+    return jnp.moveaxis(outs, 0, 1).reshape(B, S, H, hd)
+
+
+# ---------------------------------------------------------------------------
+# layer bodies
+# ---------------------------------------------------------------------------
+
+def _ffn(x2d, lp, cfg: ArchConfig, ctx: Optional[ParallelCtx]):
+    """Dense GLU or MoE FFN on (B, S, d) input."""
+    if not cfg.moe_experts:
+        return L.glu_mlp(x2d, lp["w_gate"].astype(x2d.dtype), lp["w_up"].astype(x2d.dtype),
+                         lp["w_down"].astype(x2d.dtype), cfg.act), None
+    B, S, d = x2d.shape
+    if ctx is None:
+        cap = moe_capacity(cfg, B * S)
+        y, load = moe_ffn_local(
+            x2d.reshape(B * S, d), lp["router"], lp["w_gate"], lp["w_up"], lp["w_down"],
+            cfg, cap,
+        )
+        return y.reshape(B, S, d), load
+
+    dp, tp = ctx.dp_axes, ctx.tp_axis
+    local_tokens = (B // ctx.dp_size) * S
+    cap = moe_capacity(cfg, local_tokens)
+
+    def inner(xb, router, wg, wu, wd):
+        Bl, Sl, _ = xb.shape
+        y, load = moe_ffn_local(
+            xb.reshape(Bl * Sl, d), router, wg, wu, wd, cfg, cap, tp_axis=tp
+        )
+        load = jax.lax.psum(load, dp)
+        return y.reshape(Bl, Sl, d), load
+
+    y, load = jax.shard_map(
+        inner,
+        mesh=ctx.mesh,
+        in_specs=(
+            P(dp, None, None),
+            P(),  # router replicated
+            P(None, None, tp),  # w_gate: d_ff TP
+            P(None, None, tp),
+            P(None, tp, None),
+        ),
+        out_specs=(P(dp, None, None), P()),
+        check_vma=False,
+    )(x2d, lp["router"], lp["w_gate"].astype(x2d.dtype), lp["w_up"].astype(x2d.dtype),
+      lp["w_down"].astype(x2d.dtype))
+    return y, load
+
+
+def _act_spec(ctx, ndim: int, head_axis: int = -1, n_heads: int = 0):
+    """Batch over dp; heads over model when divisible (Megatron TP)."""
+    if ctx is None:
+        return None
+    parts = [ctx.dp_axes] + [None] * (ndim - 1)
+    if head_axis >= 0 and n_heads and n_heads % ctx.tp_size == 0:
+        parts[head_axis] = ctx.tp_axis
+    return P(*parts)
+
+
+def _pin(x, ctx, head_axis: int = -1, n_heads: int = 0):
+    if ctx is None:
+        return x
+    return constrain(x, ctx, _act_spec(ctx, x.ndim, head_axis, n_heads))
+
+
+def _pin_kv(x, ctx, n_kv: int):
+    """K/V (B,T,K,hd): heads over model when divisible; otherwise shard the
+    *time* axis over model (context parallelism) — used only when q-heads
+    are ALSO unshardable (see _maybe_repeat_kv; hillclimb A.2)."""
+    if ctx is None:
+        return x
+    if n_kv % ctx.tp_size == 0:
+        return constrain(x, ctx, P(ctx.dp_axes, None, ctx.tp_axis, None))
+    return constrain(x, ctx, P(ctx.dp_axes, ctx.tp_axis, None, None))
+
+
+def _maybe_repeat_kv(k, v, cfg: ArchConfig, ctx):
+    """Hillclimb A.2 (EXPERIMENTS.md §Perf): when kv-heads don't divide the
+    model axis but q-heads do, repeat KV to full heads and run head-parallel
+    MHA.  The grouped (K,G) einsum with T-sharded KV forced XLA to gather
+    the S×T score rows for the softmax (14 TB/step on qwen2-vl); repeated
+    KV keeps every head's scores device-local — attention does zero
+    collectives.  Per-device KV bytes: H/tp heads vs K replicated, i.e.
+    64/16=4 < 8 for qwen — strictly cheaper too."""
+    if ctx is None:
+        return k, v, False
+    tp = ctx.tp_size
+    if cfg.n_kv_heads % tp == 0 or cfg.n_heads % tp != 0:
+        return k, v, False
+    G = cfg.n_heads // cfg.n_kv_heads
+    k = jnp.repeat(k, G, axis=2)
+    v = jnp.repeat(v, G, axis=2)
+    k = constrain(k, ctx, P(ctx.dp_axes, None, ctx.tp_axis, None))
+    v = constrain(v, ctx, P(ctx.dp_axes, None, ctx.tp_axis, None))
+    return k, v, True
+
+
+def _layer_full(x, lp, positions, cfg: ArchConfig, ctx):
+    """One transformer block over a full sequence (train / prefill).
+
+    Activation sharding is pinned at the layer boundary and on q/k/v:
+    without these constraints GSPMD can lose the batch sharding through
+    the grouped-query einsum chain and replicate the S×T score tensor on
+    every device (observed on the MQA archs — see EXPERIMENTS.md §Perf).
+    """
+    B, S, d = x.shape
+    x = _pin(x, ctx)
+    h = L.rmsnorm(x, lp["ln1"], cfg.norm_eps)
+    q, k, v = L.qkv_project(
+        h, lp["wq"].astype(x.dtype), lp["wk"].astype(x.dtype), lp["wv"].astype(x.dtype),
+        cfg.n_heads, cfg.n_kv_heads, cfg.head_dim,
+    )
+    q = _pin(q, ctx, head_axis=2, n_heads=cfg.n_heads)
+    q = _rope(cfg, q, positions)
+    k = _rope(cfg, k, positions)
+    k, v, repeated = _maybe_repeat_kv(k, v, cfg, ctx)
+    if not repeated:
+        k = _pin_kv(k, ctx, cfg.n_kv_heads)
+        v = _pin_kv(v, ctx, cfg.n_kv_heads)
+    attn = chunked_attention(q, k, v, window=cfg.attn_window)
+    attn = _pin(attn, ctx, head_axis=2, n_heads=cfg.n_heads)
+    x = x + attn.reshape(B, S, cfg.q_dim) @ lp["wo"].astype(x.dtype)
+    x = _pin(x, ctx)
+    h2 = L.rmsnorm(x, lp["ln2"], cfg.norm_eps)
+    f, load = _ffn(h2, lp, cfg, ctx)
+    return _pin(x + f, ctx), (k, v, load)
+
+
+def _layer_decode(x, lp, k_cache, v_cache, pos, positions, cfg: ArchConfig, ctx):
+    """One block for a single decode token against the KV cache."""
+    B, S, d = x.shape  # S == 1
+    h = L.rmsnorm(x, lp["ln1"], cfg.norm_eps)
+    q, k, v = L.qkv_project(
+        h, lp["wq"].astype(x.dtype), lp["wk"].astype(x.dtype), lp["wv"].astype(x.dtype),
+        cfg.n_heads, cfg.n_kv_heads, cfg.head_dim,
+    )
+    q = _pin(q, ctx, head_axis=2, n_heads=cfg.n_heads)
+    q = _rope(cfg, q, positions)
+    k = _rope(cfg, k, positions)
+    k_cache = jax.lax.dynamic_update_slice_in_dim(k_cache, k.astype(k_cache.dtype), pos, axis=1)
+    v_cache = jax.lax.dynamic_update_slice_in_dim(v_cache, v.astype(v_cache.dtype), pos, axis=1)
+    T = k_cache.shape[1]
+    mask = L.decode_mask(T, pos, window=cfg.attn_window)
+    attn = L.gqa_attention(q, k_cache, v_cache, mask)
+    attn = _pin(attn, ctx, head_axis=2, n_heads=cfg.n_heads)
+    x = x + attn.reshape(B, S, cfg.q_dim) @ lp["wo"].astype(x.dtype)
+    h2 = L.rmsnorm(x, lp["ln2"], cfg.norm_eps)
+    f, _ = _ffn(h2, lp, cfg, ctx)
+    return _pin(x + f, ctx), k_cache, v_cache
+
+
+def _remat(fn, cfg: ArchConfig):
+    if cfg.remat == "none":
+        return fn
+    if cfg.remat == "dots":
+        pol = jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+    elif cfg.remat == "full":
+        pol = jax.checkpoint_policies.nothing_saveable
+    else:
+        raise ValueError(cfg.remat)
+    return jax.checkpoint(fn, policy=pol)
+
+
+# ---------------------------------------------------------------------------
+# public API
+# ---------------------------------------------------------------------------
+
+def _embed(params, tokens, cfg: ArchConfig, vision_embeds=None):
+    dt = jnp.dtype(cfg.compute_dtype)
+    x = jnp.take(params["embed"], tokens, axis=0).astype(dt)
+    if cfg.name.startswith("gemma") or cfg.family == "hybrid":
+        x = x * jnp.asarray(np.sqrt(cfg.d_model), dt)  # gemma-style embed scale
+    if cfg.n_vision_tokens and vision_embeds is not None:
+        vis = (vision_embeds.astype(dt) @ params["vision_proj"].astype(dt))
+        x = jax.lax.dynamic_update_slice(x, vis, (0, 0, 0))
+    return x
+
+
+def _unembed(params, x, cfg: ArchConfig):
+    x = L.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    return x @ head.astype(x.dtype)
+
+
+def forward(params, tokens, cfg: ArchConfig, ctx: Optional[ParallelCtx] = None,
+            vision_embeds=None):
+    """Full-sequence logits (train path).  tokens (B, S) int32."""
+    B, S = tokens.shape
+    x = _pin(_embed(params, tokens, cfg, vision_embeds), ctx)
+    positions = build_positions(cfg, B, S)
+
+    def body(carry, lp):
+        y, (k, v, load) = _layer_full(carry, lp, positions, cfg, ctx)
+        aux = load if load is not None else jnp.zeros((1,), jnp.float32)
+        return y, aux
+
+    if cfg.scan_layers:
+        x, loads = jax.lax.scan(_remat(body, cfg), x, params["layers"])
+    else:
+        loads = []
+        for i in range(cfg.n_layers):
+            lp = jax.tree.map(lambda a: a[i], params["layers"])
+            x, aux = _remat(body, cfg)(x, lp)
+            loads.append(aux)
+        loads = jnp.stack(loads)
+    logits = _unembed(params, x, cfg)
+    return logits, {"moe_load": loads}
+
+
+def init_cache(cfg: ArchConfig, B: int, T: int):
+    dt = jnp.dtype(cfg.compute_dtype)
+    shape = (cfg.n_layers, B, T, cfg.n_kv_heads, cfg.head_dim)
+    return {"k": jnp.zeros(shape, dt), "v": jnp.zeros(shape, dt)}
+
+
+def prefill(params, tokens, cfg: ArchConfig, cache_len: Optional[int] = None,
+            ctx: Optional[ParallelCtx] = None, vision_embeds=None):
+    """Process the prompt; returns (logits, cache filled up to S)."""
+    B, S = tokens.shape
+    T = cache_len or S
+    x = _pin(_embed(params, tokens, cfg, vision_embeds), ctx)
+    positions = build_positions(cfg, B, S)
+
+    def body(carry, lp):
+        y, (k, v, _) = _layer_full(carry, lp, positions, cfg, ctx)
+        if T > S:
+            pad = [(0, 0), (0, T - S), (0, 0), (0, 0)]
+            k, v = jnp.pad(k, pad), jnp.pad(v, pad)
+        return y, (k.astype(jnp.dtype(cfg.compute_dtype)), v.astype(jnp.dtype(cfg.compute_dtype)))
+
+    x, (ks, vs) = jax.lax.scan(body, x, params["layers"])
+    logits = _unembed(params, x, cfg)
+    return logits, {"k": ks, "v": vs}
+
+
+def decode_step(params, cache, tokens, pos, cfg: ArchConfig,
+                ctx: Optional[ParallelCtx] = None):
+    """One new token per sequence against the cache.  tokens (B, 1)."""
+    B, S = tokens.shape
+    x = _pin(_embed(params, tokens, cfg), ctx)
+    positions = build_positions(cfg, B, S, offset=pos)
+
+    def body(carry, xs):
+        lp, kc, vc = xs
+        y, kc, vc = _layer_decode(carry, lp, kc, vc, pos, positions, cfg, ctx)
+        return y, (kc, vc)
+
+    x, (ks, vs) = jax.lax.scan(body, x, (params["layers"], cache["k"], cache["v"]))
+    logits = _unembed(params, x, cfg)
+    return logits, {"k": ks, "v": vs}

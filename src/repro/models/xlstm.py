@@ -1,0 +1,342 @@
+"""xLSTM LM: alternating mLSTM (matrix-memory) and sLSTM blocks
+(arXiv:2405.04517).
+
+mLSTM has no hidden-to-hidden recurrence, so training/prefill uses the
+*stabilized parallel form* (an attention-like S×S computation with an
+exponential-gating decay matrix, chunked over queries like flash
+attention), while decode updates the O(1) per-head matrix memory
+``C_t = f' C_{t−1} + i' (k ⊗ v)`` — which is what makes the arch eligible
+for the long_500k cell.
+
+sLSTM keeps true hidden recurrence (R matrices) and therefore runs as a
+sequential lax.scan over time with the stabilizer state m (exp-gating).
+
+Stacking: one super-block = (slstm_every − 1) mLSTM layers + 1 sLSTM layer;
+super-blocks are scanned over depth (48 = 6 × (7 mLSTM + 1 sLSTM)).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.models import layers as L
+from repro.models.parallel import ParallelCtx, constrain
+from jax.sharding import PartitionSpec as P
+from repro.models.transformer import _pin, _remat, _unembed
+
+MLSTM_PF = 2  # up-projection factor
+CHUNK = 256
+
+
+def _inner_dim(cfg: ArchConfig) -> int:
+    return MLSTM_PF * cfg.d_model
+
+
+def _head_dim(cfg: ArchConfig) -> int:
+    return _inner_dim(cfg) // cfg.mlstm_heads
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def _mlstm_init(rng, cfg: ArchConfig, shape_prefix) -> Dict[str, jnp.ndarray]:
+    d, di, H = cfg.d_model, _inner_dim(cfg), cfg.mlstm_heads
+    ks = jax.random.split(rng, 8)
+
+    def mk(key, s, scale=None):
+        return L.dense_init(key, shape_prefix + s, scale)
+
+    return {
+        "ln": jnp.ones(shape_prefix + (d,), jnp.float32),
+        "w_up": mk(ks[0], (d, di)),
+        "w_gate": mk(ks[1], (d, di)),
+        # per-head block-diagonal projections (xLSTM paper §4): (H, hd, hd)
+        "wq": mk(ks[2], (H, di // H, di // H)),
+        "wk": mk(ks[3], (H, di // H, di // H)),
+        "wv": mk(ks[4], (H, di // H, di // H)),
+        "w_i": mk(ks[5], (di, H)),
+        "w_f": mk(ks[6], (di, H)),
+        "b_f": jnp.full(shape_prefix + (H,), 3.0, jnp.float32),  # open forget gates
+        "w_down": mk(ks[7], (di, d), scale=1.0 / np.sqrt(di)),
+    }
+
+
+def _slstm_init(rng, cfg: ArchConfig, shape_prefix) -> Dict[str, jnp.ndarray]:
+    d = cfg.d_model
+    ks = jax.random.split(rng, 4)
+    return {
+        "ln": jnp.ones(shape_prefix + (d,), jnp.float32),
+        "W": L.dense_init(ks[0], shape_prefix + (d, 4 * d)),
+        # block-diagonal recurrence, 4 heads: (4, d/4, 4*(d/4))
+        "R": L.dense_init(ks[1], shape_prefix + (4, d // 4, d), scale=0.5 / np.sqrt(d)),
+        "b": jnp.zeros(shape_prefix + (4 * d,), jnp.float32),
+        "w_out": L.dense_init(ks[2], shape_prefix + (d, d)),
+    }
+
+
+def n_superblocks(cfg: ArchConfig) -> int:
+    return cfg.n_layers // cfg.slstm_every
+
+
+def init_params(rng: jax.Array, cfg: ArchConfig) -> Dict[str, Any]:
+    sb = n_superblocks(cfg)
+    m_per = cfg.slstm_every - 1
+    k0, k1, k2 = jax.random.split(rng, 3)
+    return {
+        "embed": L.embed_init(k0, cfg.vocab, cfg.d_model),
+        "final_norm": jnp.ones((cfg.d_model,), jnp.float32),
+        "mlstm": _mlstm_init(k1, cfg, (sb, m_per)),
+        "slstm": _slstm_init(k2, cfg, (sb,)),
+    }
+
+
+# ---------------------------------------------------------------------------
+# mLSTM parallel (train/prefill) — stabilized chunked form
+# ---------------------------------------------------------------------------
+
+def _mlstm_gates(xu, lp, dtype):
+    itil = (xu @ lp["w_i"].astype(dtype)).astype(jnp.float32)  # (B,S,H)
+    ftil = (xu @ lp["w_f"].astype(dtype)).astype(jnp.float32) + lp["b_f"]
+    logf = jax.nn.log_sigmoid(ftil)
+    return itil, logf
+
+
+def _mlstm_parallel(q, k, v, itil, logf):
+    """q,k,v (B,S,H,hd); itil/logf (B,S,H) → h (B,S,H,hd).
+
+    dlog[t,s] = cum[t] − cum[s] + itil[s]  (s ≤ t), stabilized by row max.
+    Chunked over queries to bound the live S×S block.
+    """
+    B, S, H, hd = q.shape
+    cum = jnp.cumsum(logf, axis=1)  # (B,S,H)
+    kt = k / np.sqrt(hd)
+
+    def one_chunk(q_c, cum_c, t0):
+        # q_c (B,C,H,hd); cum_c (B,C,H)
+        # §Perf hillclimb B (EXPERIMENTS.md): the naive form materialized 4
+        # fp32 (B,C,S,H) tensors (dlog, masked dlog, row-max bcast, w) plus
+        # fp32 scores — the memory term dominated every xlstm cell.  The
+        # stabilization (row max) stays fp32; the *materialized* decay and
+        # score tensors are bf16, and the two contractions accumulate fp32
+        # via preferred_element_type (flash-style mixed precision).
+        C = q_c.shape[1]
+        s_idx = jnp.arange(S)
+        t_idx = t0 + jnp.arange(C)
+        causal = (s_idx[None, :] <= t_idx[:, None])[None, :, :, None]  # (1,C,S,1)
+        dlog = cum_c[:, :, None, :] - cum[:, None, :, :] + itil[:, None, :, :]
+        dlog = jnp.where(causal, dlog, -jnp.inf)  # (B,C,S,H) fp32 (stab.)
+        mrow = jnp.max(dlog, axis=2, keepdims=True)  # (B,C,1,H)
+        wdt = q_c.dtype  # compute dtype: bf16 in production, fp32 in smoke
+        w = jnp.exp(dlog - mrow).astype(wdt)
+        qk = jnp.einsum("bchd,bshd->bcsh", q_c, kt.astype(wdt),
+                        preferred_element_type=wdt)
+        scores = qk * w  # (B,C,S,H) compute dtype
+        num = jnp.einsum("bcsh,bshd->bchd", scores, v.astype(wdt),
+                         preferred_element_type=jnp.float32)
+        den = jnp.maximum(
+            jnp.abs(jnp.sum(scores.astype(jnp.float32), axis=2)),
+            jnp.exp(-mrow[:, :, 0, :]),
+        )
+        return num / den[..., None]
+
+    if S <= CHUNK:
+        return one_chunk(q, cum, 0).astype(q.dtype)
+    n = S // CHUNK
+    qc = jnp.moveaxis(q.reshape(B, n, CHUNK, H, hd), 1, 0)
+    cc = jnp.moveaxis(cum.reshape(B, n, CHUNK, H), 1, 0)
+
+    def body(_, xs):
+        qb, cb, i = xs
+        return None, one_chunk(qb, cb, i * CHUNK)
+
+    _, outs = jax.lax.scan(body, None, (qc, cc, jnp.arange(n)))
+    return jnp.moveaxis(outs, 0, 1).reshape(B, S, H, hd).astype(q.dtype)
+
+
+def _mlstm_block_full(x, lp, cfg: ArchConfig):
+    B, S, d = x.shape
+    dt = x.dtype
+    H, hd = cfg.mlstm_heads, _head_dim(cfg)
+    h = L.rmsnorm(x, lp["ln"], cfg.norm_eps)
+    xu = h @ lp["w_up"].astype(dt)  # (B,S,di)
+    gate = jax.nn.silu(h @ lp["w_gate"].astype(dt))
+    xh = xu.reshape(B, S, H, hd)
+    q = jnp.einsum("bshd,hde->bshe", xh, lp["wq"].astype(dt))
+    k = jnp.einsum("bshd,hde->bshe", xh, lp["wk"].astype(dt))
+    v = jnp.einsum("bshd,hde->bshe", xh, lp["wv"].astype(dt))
+    itil, logf = _mlstm_gates(xu, lp, dt)
+    out = _mlstm_parallel(q, k, v, itil, logf).reshape(B, S, -1)
+    return x + (gate * out) @ lp["w_down"].astype(dt)
+
+
+def _mlstm_block_decode(x, lp, state, cfg: ArchConfig):
+    """state = (C (B,H,hd,hd) f32, n (B,H,hd) f32, m (B,H) f32)."""
+    B, S, d = x.shape
+    dt = x.dtype
+    H, hd = cfg.mlstm_heads, _head_dim(cfg)
+    Cm, nm, mm = state
+    h = L.rmsnorm(x, lp["ln"], cfg.norm_eps)
+    xu = (h @ lp["w_up"].astype(dt))[:, 0]  # (B,di)
+    gate = jax.nn.silu((h @ lp["w_gate"].astype(dt))[:, 0])
+    xh = xu.reshape(B, H, hd)
+    q = jnp.einsum("bhd,hde->bhe", xh, lp["wq"].astype(dt)).astype(jnp.float32)
+    k = jnp.einsum("bhd,hde->bhe", xh, lp["wk"].astype(dt)).astype(jnp.float32) / np.sqrt(hd)
+    v = jnp.einsum("bhd,hde->bhe", xh, lp["wv"].astype(dt)).astype(jnp.float32)
+    itil = (xu @ lp["w_i"].astype(dt)).astype(jnp.float32)  # (B,H)
+    ftil = (xu @ lp["w_f"].astype(dt)).astype(jnp.float32) + lp["b_f"]
+    logf = jax.nn.log_sigmoid(ftil)
+    m_new = jnp.maximum(logf + mm, itil)
+    fprime = jnp.exp(logf + mm - m_new)
+    iprime = jnp.exp(itil - m_new)
+    Cm = fprime[..., None, None] * Cm + iprime[..., None, None] * (
+        k[..., :, None] * v[..., None, :]
+    )  # (B,H,hd,hd)
+    nm = fprime[..., None] * nm + iprime[..., None] * k
+    num = jnp.einsum("bhd,bhde->bhe", q, Cm)
+    # stabilized normalizer floor is exp(−m_t), matching the parallel form
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", q, nm)), jnp.exp(-m_new))
+    out = (num / den[..., None]).reshape(B, -1).astype(dt)
+    y = x + ((gate * out) @ lp["w_down"].astype(dt))[:, None]
+    return y, (Cm, nm, m_new)
+
+
+# ---------------------------------------------------------------------------
+# sLSTM (sequential scan; true recurrence)
+# ---------------------------------------------------------------------------
+
+def _slstm_cell(carry, g):
+    h, c, n, m = carry  # (B,d) each, f32
+    z, i, f, o = jnp.split(g, 4, axis=-1)
+    z = jnp.tanh(z)
+    o = jax.nn.sigmoid(o)
+    logf = jax.nn.log_sigmoid(f)
+    m_new = jnp.maximum(logf + m, i)
+    iprime = jnp.exp(i - m_new)
+    fprime = jnp.exp(logf + m - m_new)
+    c = fprime * c + iprime * z
+    n = fprime * n + iprime
+    h = o * c / jnp.maximum(n, 1.0)
+    return (h, c, n, m_new), h
+
+
+def _slstm_block_full(x, lp, cfg: ArchConfig, ctx=None):
+    """§Perf hillclimb B.3: every per-step tensor is pinned to BATCH-ONLY
+    sharding — the 4096-step recurrence over model-sharded (B,d) tensors
+    produced ~36 collective-permutes + 3 all-gathers PER STEP (3.5M
+    permutes/step total, EXPERIMENTS.md).  Replicating this tiny layer's
+    state over the model axis removes every in-loop collective."""
+    B, S, d = x.shape
+    dt = x.dtype
+    hin = L.rmsnorm(x, lp["ln"], cfg.norm_eps)
+    wx = (hin @ lp["W"].astype(dt)).astype(jnp.float32) + lp["b"]  # (B,S,4d)
+    if ctx is not None:
+        wx = constrain(wx, ctx, P(ctx.dp_axes, None, None))
+    R = lp["R"]
+
+    def step(carry, wx_t):
+        h = carry[0]  # (B, d)
+        B_ = h.shape[0]
+        hh = h.reshape(B_, 4, d // 4)
+        rec = jnp.einsum("bhd,hde->bhe", hh, R).reshape(B_, 4 * d)
+        g = wx_t + rec
+        new_carry, out = _slstm_cell(carry, g)
+        if ctx is not None:
+            spec = P(ctx.dp_axes, None)
+            new_carry = tuple(constrain(c, ctx, spec) for c in new_carry)
+            out = constrain(out, ctx, spec)
+        return new_carry, out
+
+    init = tuple(jnp.zeros((B, d), jnp.float32) for _ in range(4))
+    _, hs = jax.lax.scan(step, init, jnp.moveaxis(wx, 1, 0))
+    hs = jnp.moveaxis(hs, 0, 1).astype(dt)  # (B,S,d)
+    return x + hs @ lp["w_out"].astype(dt)
+
+
+def _slstm_block_decode(x, lp, state, cfg: ArchConfig):
+    B, S, d = x.shape
+    dt = x.dtype
+    hin = L.rmsnorm(x, lp["ln"], cfg.norm_eps)
+    wx = (hin @ lp["W"].astype(dt))[:, 0].astype(jnp.float32) + lp["b"]
+    hh = state[0].reshape(B, 4, d // 4)
+    rec = jnp.einsum("bhd,hde->bhe", hh, lp["R"]).reshape(B, 4 * d)
+    g = wx + rec
+    new_state, h = _slstm_cell(state, g)
+    y = x + (h.astype(dt) @ lp["w_out"].astype(dt))[:, None]
+    return y, new_state
+
+
+# ---------------------------------------------------------------------------
+# public API
+# ---------------------------------------------------------------------------
+
+def forward(params, tokens, cfg: ArchConfig, ctx: Optional[ParallelCtx] = None,
+            vision_embeds=None):
+    B, S = tokens.shape
+    dt = jnp.dtype(cfg.compute_dtype)
+    x = jnp.take(params["embed"], tokens, axis=0).astype(dt)
+
+    def sb_body(carry, lps):
+        mls, sls = lps
+
+        def m_body(c2, mlp):
+            return _pin(_mlstm_block_full(c2, mlp, cfg), ctx), None
+
+        y, _ = jax.lax.scan(m_body, carry, mls)
+        y = _slstm_block_full(y, sls, cfg, ctx)
+        return _pin(y, ctx), None
+
+    x, _ = jax.lax.scan(_remat(sb_body, cfg), x, (params["mlstm"], params["slstm"]))
+    logits = _unembed(params, x, cfg)
+    return logits, {}
+
+
+def init_cache(cfg: ArchConfig, B: int, T: int):
+    sb = n_superblocks(cfg)
+    m_per = cfg.slstm_every - 1
+    H, hd, d = cfg.mlstm_heads, _head_dim(cfg), cfg.d_model
+    return {
+        "mlstm_C": jnp.zeros((sb, m_per, B, H, hd, hd), jnp.float32),
+        "mlstm_n": jnp.zeros((sb, m_per, B, H, hd), jnp.float32),
+        "mlstm_m": jnp.zeros((sb, m_per, B, H), jnp.float32),
+        "slstm": tuple(jnp.zeros((sb, B, d), jnp.float32) for _ in range(4)),
+    }
+
+
+def decode_step(params, cache, tokens, pos, cfg: ArchConfig,
+                ctx: Optional[ParallelCtx] = None):
+    B, S = tokens.shape
+    dt = jnp.dtype(cfg.compute_dtype)
+    x = jnp.take(params["embed"], tokens, axis=0).astype(dt)
+
+    def sb_body(carry, xs):
+        mls, sls, mC, mn, mm, s0, s1, s2, s3 = xs
+
+        def m_body(c2, xs2):
+            mlp, C_, n_, m_ = xs2
+            y, (C_, n_, m_) = _mlstm_block_decode(c2, mlp, (C_, n_, m_), cfg)
+            return y, (C_, n_, m_)
+
+        y, (mC, mn, mm) = jax.lax.scan(m_body, carry, (mls, mC, mn, mm))
+        y, s_new = _slstm_block_decode(y, sls, (s0, s1, s2, s3), cfg)
+        return y, (mC, mn, mm) + s_new
+
+    xs = (params["mlstm"], params["slstm"], cache["mlstm_C"], cache["mlstm_n"],
+          cache["mlstm_m"]) + cache["slstm"]
+    x, (mC, mn, mm, s0, s1, s2, s3) = jax.lax.scan(sb_body, x, xs)
+    logits = _unembed(params, x, cfg)
+    return logits, {
+        "mlstm_C": mC, "mlstm_n": mn, "mlstm_m": mm, "slstm": (s0, s1, s2, s3)
+    }
+
+
+def prefill(params, tokens, cfg: ArchConfig, cache_len: Optional[int] = None,
+            ctx: Optional[ParallelCtx] = None, vision_embeds=None):
+    logits, _ = forward(params, tokens, cfg, ctx)
+    B, S = tokens.shape
+    return logits, init_cache(cfg, B, cache_len or S)

@@ -1,0 +1,45 @@
+"""Columnar, static-shape relational engine (the MV substrate for SVC).
+
+Relations are pytrees of fixed-capacity device arrays plus a validity mask.
+All operators are pure, jittable functions.  See DESIGN.md §2/§3.
+"""
+
+from repro.relational.relation import (
+    Relation,
+    Schema,
+    SENTINEL_KEY,
+    from_columns,
+    empty,
+    compact,
+    num_valid,
+)
+from repro.relational.expr import (
+    Col,
+    Lit,
+    Bin,
+    Cmp,
+    Boolean,
+    IsNotNull,
+    eval_expr,
+    expr_columns,
+)
+from repro.relational import ops
+
+__all__ = [
+    "Relation",
+    "Schema",
+    "SENTINEL_KEY",
+    "from_columns",
+    "empty",
+    "compact",
+    "num_valid",
+    "Col",
+    "Lit",
+    "Bin",
+    "Cmp",
+    "Boolean",
+    "IsNotNull",
+    "eval_expr",
+    "expr_columns",
+    "ops",
+]

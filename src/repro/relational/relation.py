@@ -1,0 +1,179 @@
+"""Fixed-capacity columnar relations.
+
+JAX requires static shapes, so a relation is a set of equal-length columns
+plus a boolean ``valid`` mask.  Deleted rows are masked out; insertions write
+into free slots (or extend capacity at trace boundaries).  Primary-key columns
+are int32; the reserved value ``SENTINEL_KEY`` (int32 max) marks invalid keys
+so that sorts push dead rows to the end.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Mapping, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# Largest int32; real keys must be < SENTINEL_KEY.
+SENTINEL_KEY = np.int32(np.iinfo(np.int32).max)
+
+
+@dataclasses.dataclass(frozen=True)
+class Schema:
+    """Static relation metadata (pytree aux data)."""
+
+    pk: Tuple[str, ...]  # primary-key column names (composite allowed)
+    columns: Tuple[str, ...]  # all column names, sorted
+
+    def __post_init__(self):
+        for k in self.pk:
+            if k not in self.columns:
+                raise ValueError(f"pk column {k!r} not in columns {self.columns}")
+
+    def with_columns(self, columns: Sequence[str]) -> "Schema":
+        return Schema(pk=self.pk, columns=tuple(sorted(columns)))
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class Relation:
+    """Columnar relation: dict of (capacity,) arrays + validity mask."""
+
+    columns: Dict[str, jnp.ndarray]
+    valid: jnp.ndarray  # bool (capacity,)
+    schema: Schema
+
+    # -- pytree protocol ----------------------------------------------------
+    def tree_flatten(self):
+        names = tuple(sorted(self.columns))
+        children = tuple(self.columns[n] for n in names) + (self.valid,)
+        return children, (names, self.schema)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        names, schema = aux
+        cols = dict(zip(names, children[:-1]))
+        return cls(columns=cols, valid=children[-1], schema=schema)
+
+    # -- conveniences --------------------------------------------------------
+    @property
+    def capacity(self) -> int:
+        return int(self.valid.shape[0])
+
+    def col(self, name: str) -> jnp.ndarray:
+        return self.columns[name]
+
+    def pk_columns(self) -> Tuple[jnp.ndarray, ...]:
+        return tuple(self.columns[k] for k in self.schema.pk)
+
+    def replace(self, **kw) -> "Relation":
+        return dataclasses.replace(self, **kw)
+
+    def __repr__(self):  # pragma: no cover - debugging aid
+        return (
+            f"Relation(pk={self.schema.pk}, cols={self.schema.columns}, "
+            f"capacity={self.capacity})"
+        )
+
+
+# ---------------------------------------------------------------------------
+# Constructors
+# ---------------------------------------------------------------------------
+
+def from_columns(
+    columns: Mapping[str, jnp.ndarray | np.ndarray | Sequence],
+    pk: Sequence[str],
+    valid=None,
+    capacity: int | None = None,
+) -> Relation:
+    """Build a relation from host or device columns, padding to ``capacity``."""
+    cols = {k: jnp.asarray(v) for k, v in columns.items()}
+    n = next(iter(cols.values())).shape[0] if cols else 0
+    for k, v in cols.items():
+        if v.shape[0] != n:
+            raise ValueError(f"ragged column {k!r}: {v.shape[0]} != {n}")
+    if valid is None:
+        valid = jnp.ones((n,), dtype=bool)
+    else:
+        valid = jnp.asarray(valid, dtype=bool)
+    cap = capacity if capacity is not None else n
+    if cap < n:
+        raise ValueError(f"capacity {cap} < data rows {n}")
+    pad = cap - n
+    if pad:
+        def pad_col(name, v):
+            fill = SENTINEL_KEY if name in tuple(pk) else jnp.zeros((), v.dtype)
+            return jnp.concatenate([v, jnp.full((pad,), fill, dtype=v.dtype)])
+
+        cols = {k: pad_col(k, v) for k, v in cols.items()}
+        valid = jnp.concatenate([valid, jnp.zeros((pad,), dtype=bool)])
+    schema = Schema(pk=tuple(pk), columns=tuple(sorted(cols)))
+    return Relation(columns=cols, valid=valid, schema=schema)
+
+
+def empty(column_dtypes: Mapping[str, np.dtype], pk: Sequence[str], capacity: int) -> Relation:
+    cols = {}
+    for k, dt in column_dtypes.items():
+        fill = SENTINEL_KEY if k in tuple(pk) else jnp.zeros((), dt)
+        cols[k] = jnp.full((capacity,), fill, dtype=dt)
+    valid = jnp.zeros((capacity,), dtype=bool)
+    return Relation(cols, valid, Schema(pk=tuple(pk), columns=tuple(sorted(cols))))
+
+
+# ---------------------------------------------------------------------------
+# Key utilities
+# ---------------------------------------------------------------------------
+
+def masked_keys(rel: Relation) -> Tuple[jnp.ndarray, ...]:
+    """PK columns with invalid rows replaced by the sentinel (sorts last)."""
+    out = []
+    for k in rel.schema.pk:
+        c = rel.columns[k]
+        out.append(jnp.where(rel.valid, c, jnp.asarray(SENTINEL_KEY, c.dtype)))
+    return tuple(out)
+
+
+def lexsort_indices(keys: Tuple[jnp.ndarray, ...], *tiebreak: jnp.ndarray) -> jnp.ndarray:
+    """Stable sort order by composite key (last array = primary key)."""
+    arrays = tuple(tiebreak) + tuple(reversed(keys))
+    return jnp.lexsort(arrays)
+
+
+def keys_equal(a: Tuple[jnp.ndarray, ...], b: Tuple[jnp.ndarray, ...]) -> jnp.ndarray:
+    eq = jnp.ones(a[0].shape, dtype=bool)
+    for x, y in zip(a, b):
+        eq = eq & (x == y)
+    return eq
+
+
+def num_valid(rel: Relation) -> jnp.ndarray:
+    return jnp.sum(rel.valid.astype(jnp.int32))
+
+
+def compact(rel: Relation, capacity: int | None = None) -> Relation:
+    """Sort valid rows (by key) to the front and optionally resize capacity."""
+    cap = capacity if capacity is not None else rel.capacity
+    keys = masked_keys(rel)
+    order = lexsort_indices(keys)
+    take = order[:cap] if cap <= rel.capacity else order
+    cols = {k: v[take] for k, v in rel.columns.items()}
+    valid = rel.valid[take]
+    if cap > rel.capacity:  # grow: pad
+        pad = cap - rel.capacity
+        for k in cols:
+            fill = (
+                SENTINEL_KEY
+                if k in rel.schema.pk
+                else jnp.zeros((), cols[k].dtype)
+            )
+            cols[k] = jnp.concatenate([cols[k], jnp.full((pad,), fill, cols[k].dtype)])
+        valid = jnp.concatenate([valid, jnp.zeros((pad,), bool)])
+    return Relation(cols, valid, rel.schema)
+
+
+def to_host(rel: Relation) -> Dict[str, np.ndarray]:
+    """Valid rows as host arrays (test/debug helper; not jittable)."""
+    mask = np.asarray(rel.valid)
+    return {k: np.asarray(v)[mask] for k, v in rel.columns.items()}

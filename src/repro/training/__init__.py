@@ -1,0 +1,12 @@
+from repro.training.optim import AdamWConfig, adamw_init, adamw_update, cosine_schedule
+from repro.training.train_step import TrainState, make_train_step, init_train_state
+
+__all__ = [
+    "AdamWConfig",
+    "adamw_init",
+    "adamw_update",
+    "cosine_schedule",
+    "TrainState",
+    "make_train_step",
+    "init_train_state",
+]

@@ -1,0 +1,122 @@
+"""Train step: CE loss, microbatch gradient accumulation, mixed precision.
+
+The step is a pure function (state, batch) → (state, metrics) suitable for
+jit with in/out shardings (launch/dryrun.py, launch/train.py).  Gradient
+accumulation runs as a lax.scan over microbatches so the HLO stays O(1) in
+the accumulation factor.  Per-domain loss sums are emitted as **SVC delta
+feeds**: the training loop ingests them into the ViewManager's loss views
+(the paper's technique operating on training telemetry).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.api import Model
+from repro.models.parallel import ParallelCtx, constrain
+from repro.training.optim import AdamWConfig, adamw_init, adamw_update
+from jax.sharding import PartitionSpec as P
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class TrainState:
+    params: Any
+    opt_state: Any
+    step: jnp.ndarray
+
+    def tree_flatten(self):
+        return (self.params, self.opt_state, self.step), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+
+def init_train_state(model: Model, rng: jax.Array) -> TrainState:
+    params = model.init(rng)
+    return TrainState(params=params, opt_state=adamw_init(params), step=jnp.zeros((), jnp.int32))
+
+
+def cross_entropy(logits: jnp.ndarray, labels: jnp.ndarray, z_loss: float = 1e-4):
+    """Token-mean CE with z-loss; accumulates in fp32 over a sharded vocab."""
+    lf = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(lf, axis=-1)  # (B,S)
+    gold = jnp.take_along_axis(lf, labels[..., None], axis=-1)[..., 0]
+    nll = lse - gold
+    loss = jnp.mean(nll) + z_loss * jnp.mean(lse**2)
+    return loss, nll
+
+
+def _split_micro(batch: Dict[str, jnp.ndarray], n: int) -> Dict[str, jnp.ndarray]:
+    def sp(x):
+        return x.reshape((n, x.shape[0] // n) + x.shape[1:])
+
+    return {k: sp(v) for k, v in batch.items()}
+
+
+def make_train_step(
+    model: Model,
+    opt_cfg: AdamWConfig,
+    ctx: Optional[ParallelCtx] = None,
+    microbatches: int = 1,
+    moe_balance_coeff: float = 1e-2,
+) -> Callable:
+    cfg = model.cfg
+
+    def loss_fn(params, mb) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+        logits, aux = model.forward(params, mb, ctx)
+        if ctx is not None:
+            logits = constrain(logits, ctx, P(ctx.dp_axes, None, ctx.tp_axis))
+        loss, nll = cross_entropy(logits, mb["labels"])
+        extras: Dict[str, jnp.ndarray] = {}
+        if cfg.moe_experts and "moe_load" in aux and aux["moe_load"] is not None:
+            load = aux["moe_load"]  # (L, E)
+            frac = load / jnp.maximum(jnp.sum(load, -1, keepdims=True), 1.0)
+            balance = jnp.mean(jnp.sum(frac * frac, -1)) * cfg.moe_experts
+            loss = loss + moe_balance_coeff * balance
+            extras["moe_load"] = jnp.sum(load, axis=0)  # (E,) delta feed for SVC
+            extras["moe_balance"] = balance
+        # per-domain loss sums (SVC delta feed): domain id in mb when present
+        if "domain" in mb:
+            dom = mb["domain"]  # (B,)
+            per_seq = jnp.mean(nll, axis=-1)  # (B,)
+            n_dom = 16
+            onehot = jax.nn.one_hot(dom, n_dom, dtype=jnp.float32)
+            extras["domain_loss_sum"] = onehot.T @ per_seq
+            extras["domain_count"] = jnp.sum(onehot, axis=0)
+        return loss, extras
+
+    def train_step(state: TrainState, batch: Dict[str, jnp.ndarray]):
+        if microbatches > 1:
+            micro = _split_micro(batch, microbatches)
+
+            def acc_body(carry, mb):
+                gsum, lsum = carry
+                (loss, extras), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+                    state.params, mb
+                )
+                gsum = jax.tree.map(lambda a, g: a + g.astype(jnp.float32), gsum, grads)
+                return (gsum, lsum + loss), extras
+
+            zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), state.params)
+            (gsum, lsum), extras = jax.lax.scan(acc_body, (zeros, 0.0), micro)
+            grads = jax.tree.map(lambda g: g / microbatches, gsum)
+            loss = lsum / microbatches
+            extras = jax.tree.map(lambda x: jnp.sum(x, axis=0), extras)
+        else:
+            (loss, extras), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+                state.params, batch
+            )
+        new_params, new_opt, opt_metrics = adamw_update(
+            opt_cfg, state.params, grads, state.opt_state
+        )
+        metrics = {"loss": loss, **opt_metrics, **extras}
+        return TrainState(new_params, new_opt, state.step + 1), metrics
+
+    return train_step

@@ -1,0 +1,3 @@
+from repro.views.manager import ManagedView, ViewManager
+
+__all__ = ["ManagedView", "ViewManager"]

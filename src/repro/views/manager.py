@@ -1,0 +1,304 @@
+"""ViewManager: the production face of SVC (§3.2 workflow).
+
+Owns base relations, registered materialized views, their hash samples and
+optional outlier indices.  Deltas are ingested continuously; **full IVM runs
+only at maintenance periods** (in a training framework: at checkpoint
+cadence), while ``svc_refresh`` cleans just the samples in between so that
+``query`` always answers from fresh, bounded estimates.
+
+Estimator selection follows the §5.2.2 break-even analysis: SVC+CORR while
+σ_S² ≤ 2·cov(S,S'), SVC+AQP beyond it (or force with ``prefer=``).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, Optional, Tuple
+
+import jax.numpy as jnp
+
+from repro.core import hashing
+from repro.core.bootstrap import bootstrap_aqp, bootstrap_corr
+from repro.core.estimators import Estimate, Query, exact, svc_aqp, svc_corr, variance_comparison
+from repro.core.maintenance import (
+    INS,
+    DEL,
+    DeltaSet,
+    ViewDef,
+    change_table_strategy,
+    clean_sample,
+    full_maintenance,
+    upsert,
+    delete_keys,
+    _replace_groupby_capacity,
+)
+from repro.core.minmax import svc_minmax
+from repro.core.outliers import (OutlierIndex, build_outlier_index, flag_outliers,
+    propagate_outlier_keys, update_outlier_index)
+from repro.relational.execute import execute
+from repro.relational.relation import Relation, compact, from_columns
+from repro.relational.relation import empty as empty_relation
+import numpy as np
+
+
+@dataclasses.dataclass
+class ManagedView:
+    view: ViewDef
+    strategy: object  # maintenance plan M
+    sampled_strategy: object  # M with m-scaled group arenas (§Perf C.2)
+    m: float
+    seed: int
+    materialized: Relation  # the (possibly stale) full view S
+    stale_sample: Relation  # Ŝ = η(S)
+    clean_sample: Relation  # Ŝ' after last svc_refresh
+    sample_capacity: int
+    delta_bases: Tuple[str, ...]
+    outlier_index: Optional[OutlierIndex] = None
+    outlier_pin: Optional[Relation] = None  # view-key pin set from push-up
+    stale_since_ivm: bool = False
+    maintenance_s: float = 0.0  # last maintenance wall time (for benchmarks)
+
+
+class ViewManager:
+    def __init__(self):
+        self.base: Dict[str, Relation] = {}
+        self.views: Dict[str, ManagedView] = {}
+        self.pending = DeltaSet()
+
+    # -- registration --------------------------------------------------------
+    def register_base(self, name: str, rel: Relation) -> None:
+        self.base[name] = rel
+
+    def register_view(
+        self,
+        view: ViewDef,
+        delta_bases: Tuple[str, ...],
+        m: float,
+        seed: int = 0,
+        delta_group_capacity: int = 1024,
+        sample_capacity: Optional[int] = None,
+        with_deletes: bool = False,
+    ) -> ManagedView:
+        strategy = change_table_strategy(
+            view, delta_bases, delta_group_capacity, with_deletes=with_deletes
+        )
+        materialized = execute(view.plan, self.base)
+        materialized = compact(materialized)
+        stale_sample = hashing.apply_hash(materialized, view.pk, m, seed)
+        # §Perf hillclimb C.2: the cleaning pipeline's sorts/merges run at
+        # relation CAPACITY, so sample-side arenas are m-scaled (4x slack
+        # against binomial overflow) instead of inheriting the full view
+        # capacity — the sampling saving becomes a *capacity* saving.
+        cap = sample_capacity or _next_pow2(
+            max(64, int(materialized.capacity * m * 4))
+        )
+        sampled_strategy = _replace_groupby_capacity(
+            strategy, _next_pow2(max(64, int(delta_group_capacity * m * 4)))
+        )
+        mv = ManagedView(
+            view=view,
+            strategy=strategy,
+            sampled_strategy=sampled_strategy,
+            m=m,
+            seed=seed,
+            materialized=materialized,
+            stale_sample=compact(stale_sample, cap),
+            clean_sample=compact(stale_sample, cap),
+            sample_capacity=cap,
+            delta_bases=delta_bases,
+        )
+        self.views[view.name] = mv
+        return mv
+
+    def register_outlier_index(self, view_name: str, base: str, attr: str, k: int) -> None:
+        """§6: index top-k of base[attr]; push keys up into the view pin set."""
+        mv = self.views[view_name]
+        idx = build_outlier_index(self.base[base], base, attr, k)
+        mv.outlier_index = idx
+        self._refresh_pin(mv)
+
+    def _refresh_pin(self, mv: ManagedView) -> None:
+        idx = mv.outlier_index
+        if idx is None:
+            return
+        keys = propagate_outlier_keys(mv.view.plan, self.base, idx)
+        pin_cols = {c: keys[i] for i, c in enumerate(mv.view.pk)}
+        mv.outlier_pin = from_columns(
+            pin_cols, pk=mv.view.pk, valid=keys[0] != np.iinfo(np.int32).max
+        )
+        # re-derive both samples with the pin so strata stay consistent
+        mv.stale_sample = compact(
+            hashing.apply_hash(mv.materialized, mv.view.pk, mv.m, mv.seed, pin=mv.outlier_pin),
+            mv.sample_capacity,
+        )
+        mv.clean_sample = mv.stale_sample
+
+    # -- delta ingestion -----------------------------------------------------
+    def ingest(self, base: str, inserts: Optional[Relation] = None, deletes: Optional[Relation] = None):
+        if inserts is not None:
+            cur = self.pending.inserts.get(base)
+            self.pending.inserts[base] = _concat(cur, inserts) if cur is not None else inserts
+        if deletes is not None:
+            cur = self.pending.deletes.get(base)
+            self.pending.deletes[base] = _concat(cur, deletes) if cur is not None else deletes
+        for mv in self.views.values():
+            if base in mv.delta_bases:
+                mv.stale_since_ivm = True
+            if mv.outlier_index is not None and mv.outlier_index.base == base and inserts is not None:
+                mv.outlier_index = update_outlier_index(mv.outlier_index, inserts)
+
+    def _deltas_for(self, mv: ManagedView) -> DeltaSet:
+        """Pending deltas, with EMPTY stand-ins for quiet delta bases so the
+        cleaning/maintenance plans always find their Scan leaves."""
+        out = DeltaSet(inserts=dict(self.pending.inserts),
+                       deletes=dict(self.pending.deletes))
+        for b in mv.delta_bases:
+            if b not in out.inserts:
+                base = self.base[b]
+                dtypes = {c: base.col(c).dtype for c in base.schema.columns}
+                out.inserts[b] = empty_relation(dtypes, base.schema.pk, capacity=8)
+        return out
+
+    # -- SVC: clean the samples only (cheap, between maintenance periods) ----
+    def svc_refresh(self, view_name: str) -> float:
+        mv = self.views[view_name]
+        t0 = time.perf_counter()
+        if mv.outlier_index is not None:
+            self._refresh_pin_keys_only(mv)
+        extra = dict(self.base)
+        pin_name = None
+        if mv.outlier_pin is not None:
+            pin_name = "__pin__" + view_name
+            extra[pin_name] = mv.outlier_pin
+        mv.clean_sample = clean_sample(
+            mv.sampled_strategy,
+            mv.view.name,
+            mv.view.pk,
+            mv.stale_sample,
+            self._deltas_for(mv),
+            mv.m,
+            mv.seed,
+            extra_env=extra,
+            out_capacity=mv.sample_capacity,
+            pin_name=pin_name,
+        )
+        mv.clean_sample = flag_outliers(mv.clean_sample, mv.outlier_pin)
+        mv.stale_sample = flag_outliers(mv.stale_sample, mv.outlier_pin)
+        jnp.asarray(mv.clean_sample.valid).block_until_ready()
+        dt = time.perf_counter() - t0
+        mv.maintenance_s = dt
+        return dt
+
+    def _refresh_pin_keys_only(self, mv: ManagedView) -> None:
+        idx = mv.outlier_index
+        env = dict(self.base)
+        # include pending inserts so new outliers pin their groups too
+        keys = propagate_outlier_keys(mv.view.plan, env, idx)
+        pin_cols = {c: keys[i] for i, c in enumerate(mv.view.pk)}
+        mv.outlier_pin = from_columns(
+            pin_cols, pk=mv.view.pk, valid=keys[0] != np.iinfo(np.int32).max
+        )
+
+    # -- full IVM (the expensive path; runs at maintenance periods) ----------
+    def maintain(self, view_name: str) -> float:
+        mv = self.views[view_name]
+        t0 = time.perf_counter()
+        mv.materialized = full_maintenance(
+            mv.strategy,
+            mv.view.name,
+            mv.materialized,
+            self._deltas_for(mv),
+            extra_env=self.base,
+            out_capacity=mv.materialized.capacity,
+        )
+        jnp.asarray(mv.materialized.valid).block_until_ready()
+        dt = time.perf_counter() - t0
+        mv.stale_sample = compact(
+            hashing.apply_hash(mv.materialized, mv.view.pk, mv.m, mv.seed, pin=mv.outlier_pin),
+            mv.sample_capacity,
+        )
+        mv.clean_sample = mv.stale_sample
+        mv.stale_since_ivm = False
+        mv.maintenance_s = dt
+        return dt
+
+    def maintain_all(self) -> float:
+        total = 0.0
+        for name in self.views:
+            total += self.maintain(name)
+        self._apply_deltas_to_base()
+        self.pending = DeltaSet()
+        return total
+
+    def _apply_deltas_to_base(self) -> None:
+        for b, rel in self.pending.inserts.items():
+            grown = max(self.base[b].capacity, _next_pow2(int(np.asarray(self.base[b].valid.sum())) + rel.capacity))
+            self.base[b] = upsert(self.base[b], rel, capacity=grown)
+        for b, rel in self.pending.deletes.items():
+            self.base[b] = delete_keys(self.base[b], rel)
+
+    # -- query API ------------------------------------------------------------
+    def query(
+        self,
+        view_name: str,
+        q: Query,
+        confidence: float = 0.95,
+        prefer: Optional[str] = None,  # "corr" | "aqp" | None (auto, §5.2.2)
+        rng=None,
+    ) -> Estimate:
+        mv = self.views[view_name]
+        stale_result = exact(mv.materialized, q)
+        if q.agg in ("sum", "count", "avg"):
+            if prefer is None:
+                cmp = variance_comparison(mv.clean_sample, mv.stale_sample, q, mv.m)
+                prefer = "corr" if bool(cmp["corr_wins"]) else "aqp"
+            if prefer == "corr":
+                return svc_corr(stale_result, mv.clean_sample, mv.stale_sample, q, mv.m, confidence)
+            return svc_aqp(mv.clean_sample, q, mv.m, confidence)
+        if q.agg in ("median", "percentile"):
+            import jax
+
+            rng = rng if rng is not None else jax.random.PRNGKey(0)
+            if prefer == "aqp":
+                return bootstrap_aqp(mv.clean_sample, q, rng, confidence=confidence)
+            return bootstrap_corr(stale_result, mv.clean_sample, mv.stale_sample, q, rng, confidence=confidence)
+        if q.agg in ("min", "max"):
+            mm = svc_minmax(stale_result, mv.clean_sample, mv.stale_sample, q, mv.m)
+            return Estimate(mm.value, mm.exceed_prob, mm.value, mm.value, mm.method, confidence)
+        raise ValueError(q.agg)
+
+    def query_stale(self, view_name: str, q: Query) -> jnp.ndarray:
+        """No-maintenance baseline answer."""
+        return exact(self.views[view_name].materialized, q)
+
+    def query_exact_fresh(self, view_name: str, q: Query) -> jnp.ndarray:
+        """Ground truth: full IVM into a scratch copy (test/benchmark helper)."""
+        mv = self.views[view_name]
+        fresh = full_maintenance(
+            mv.strategy, mv.view.name, mv.materialized, self._deltas_for(mv),
+            extra_env=self.base, out_capacity=mv.materialized.capacity,
+        )
+        return exact(fresh, q)
+
+
+def _concat(a: Relation, b: Relation) -> Relation:
+    """Concatenate delta buffers into a size-bucketed arena.
+
+    Capacity is sized by the VALID row count (next pow2, ≥4096), so a
+    steady ingest stream keeps one stable shape → the compiled cleaning
+    plan is reused across refreshes instead of retracing every step."""
+    cols = {c: jnp.concatenate([a.col(c), b.col(c)]) for c in a.schema.columns}
+    valid = jnp.concatenate([a.valid, b.valid])
+    merged = Relation(cols, valid, a.schema)
+    n_valid = int(np.asarray(valid).sum())  # host sync at ingest: acceptable
+    cap = _next_pow2(max(n_valid, 4096))
+    from repro.relational.relation import compact as _compact
+    return _compact(merged, cap)
+
+
+def _next_pow2(n: int) -> int:
+    p = 1
+    while p < n:
+        p <<= 1
+    return p

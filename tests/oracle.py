@@ -1,0 +1,81 @@
+"""Independent pure-Python oracle for relational semantics.
+
+Relations are lists of dict rows; operators are implemented with plain
+loops/sets so they share no code with the JAX engine under test.
+"""
+
+from __future__ import annotations
+
+from collections import defaultdict
+from typing import Callable, Dict, List, Sequence
+
+import numpy as np
+
+Row = Dict[str, float]
+
+
+def from_relation(rel) -> List[Row]:
+    """Valid rows of a repro Relation as plain dicts."""
+    mask = np.asarray(rel.valid)
+    cols = {k: np.asarray(v) for k, v in rel.columns.items() if not k.startswith("__")}
+    return [
+        {k: v[i].item() for k, v in cols.items()} for i in range(mask.shape[0]) if mask[i]
+    ]
+
+
+def select(rows: List[Row], pred: Callable[[Row], bool]) -> List[Row]:
+    return [r for r in rows if pred(r)]
+
+
+def project(rows: List[Row], outputs: Dict[str, Callable[[Row], float]]) -> List[Row]:
+    return [{k: f(r) for k, f in outputs.items()} for r in rows]
+
+
+def fk_join(fact: List[Row], dim: List[Row], fact_key: str, dim_key: str) -> List[Row]:
+    index = {r[dim_key]: r for r in dim}
+    out = []
+    for f in fact:
+        d = index.get(f[fact_key])
+        if d is None:
+            continue
+        merged = dict(f)
+        for k, v in d.items():
+            merged[k if k not in merged else k + "_r"] = v
+        out.append(merged)
+    return out
+
+
+def groupby(rows: List[Row], keys: Sequence[str], aggs: Dict[str, tuple]) -> List[Row]:
+    groups = defaultdict(list)
+    for r in rows:
+        groups[tuple(r[k] for k in keys)].append(r)
+    out = []
+    for kv, rs in groups.items():
+        row = dict(zip(keys, kv))
+        for out_name, (fn, col) in aggs.items():
+            if fn == "count":
+                row[out_name] = float(len(rs))
+            elif fn == "sum":
+                row[out_name] = float(sum(r[col] for r in rs))
+            elif fn == "mean":
+                row[out_name] = float(sum(r[col] for r in rs) / len(rs))
+            elif fn == "min":
+                row[out_name] = float(min(r[col] for r in rs))
+            elif fn == "max":
+                row[out_name] = float(max(r[col] for r in rs))
+        out.append(row)
+    return out
+
+
+def rows_equal(a: List[Row], b: List[Row], keys: Sequence[str], atol=1e-3) -> bool:
+    """Set equality on key, then value equality per matched row."""
+    ka = {tuple(r[k] for k in keys): r for r in a}
+    kb = {tuple(r[k] for k in keys): r for r in b}
+    if set(ka) != set(kb):
+        return False
+    for k, ra in ka.items():
+        rb = kb[k]
+        for c in ra:
+            if c in rb and abs(float(ra[c]) - float(rb[c])) > atol * max(1.0, abs(float(ra[c]))):
+                return False
+    return True

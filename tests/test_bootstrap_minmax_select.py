@@ -1,0 +1,87 @@
+"""Bootstrap CIs (§5.2.5), min/max Cantelli (app. 12.1.1), select patching."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import Query, exact
+from repro.core.bootstrap import bootstrap_aqp, bootstrap_corr
+from repro.core.hashing import apply_hash
+from repro.core.minmax import svc_minmax
+from repro.core.select_queries import svc_select
+from repro.relational import from_columns
+from repro.relational.expr import Col, Lit, Cmp
+
+from tests import oracle
+
+
+def _views(rng, n=800, drift=1.0):
+    base = rng.normal(50.0, 10.0, n).astype(np.float32)
+    stale = from_columns({"k": np.arange(n, dtype=np.int32), "v": base},
+                         pk=["k"], capacity=n + 100)
+    fresh = from_columns({"k": np.arange(n, dtype=np.int32),
+                          "v": base + rng.normal(drift, 2.0, n).astype(np.float32)},
+                         pk=["k"], capacity=n + 100)
+    return stale, fresh
+
+
+def test_bootstrap_median_coverage():
+    rng = np.random.default_rng(0)
+    stale, fresh = _views(rng)
+    q = Query(agg="median", col="v")
+    truth = float(exact(fresh, q))
+    covered = 0
+    trials = 20
+    for seed in range(trials):
+        f_hat = apply_hash(fresh, ("k",), 0.25, seed)
+        est = bootstrap_aqp(f_hat, q, jax.random.PRNGKey(seed), B=150)
+        covered += float(est.ci_low) - 0.5 <= truth <= float(est.ci_high) + 0.5
+    assert covered / trials >= 0.8
+
+
+def test_bootstrap_corr_tracks_truth():
+    rng = np.random.default_rng(1)
+    stale, fresh = _views(rng, drift=5.0)
+    q = Query(agg="median", col="v")
+    truth = float(exact(fresh, q))
+    stale_res = exact(stale, q)
+    f_hat = apply_hash(fresh, ("k",), 0.25, 3)
+    s_hat = apply_hash(stale, ("k",), 0.25, 3)
+    est = bootstrap_corr(stale_res, f_hat, s_hat, q, jax.random.PRNGKey(0), B=200)
+    assert abs(float(est.value) - truth) < 2.0  # |median drift| ≈ 5 captured
+
+
+def test_minmax_correction():
+    rng = np.random.default_rng(2)
+    stale, fresh = _views(rng, drift=8.0)
+    for agg in ("max", "min"):
+        q = Query(agg=agg, col="v")
+        truth = float(exact(fresh, q))
+        stale_res = exact(stale, q)
+        f_hat = apply_hash(fresh, ("k",), 0.3, 5)
+        s_hat = apply_hash(stale, ("k",), 0.3, 5)
+        est = svc_minmax(stale_res, f_hat, s_hat, q, 0.3)
+        stale_err = abs(float(stale_res) - truth)
+        est_err = abs(float(est.value) - truth)
+        assert est_err <= stale_err + 1e-3
+        assert 0.0 <= float(est.exceed_prob) <= 1.0
+
+
+def test_select_query_patching():
+    rng = np.random.default_rng(3)
+    n = 300
+    base = rng.normal(0.0, 1.0, n).astype(np.float32)
+    stale = from_columns({"k": np.arange(n, dtype=np.int32), "v": base},
+                         pk=["k"], capacity=n + 50)
+    fresh_v = base.copy()
+    fresh_v[:30] += 10.0  # updated rows now satisfy the predicate
+    fresh = from_columns({"k": np.arange(n, dtype=np.int32), "v": fresh_v},
+                         pk=["k"], capacity=n + 50)
+    pred = Cmp("gt", Col("v"), Lit(5.0))
+    f_hat = apply_hash(fresh, ("k",), 1.0, 0)  # full "sample" → exact patch
+    s_hat = apply_hash(stale, ("k",), 1.0, 0)
+    res = svc_select(stale, f_hat, s_hat, pred, m=1.0)
+    got = {int(r["k"]) for r in oracle.from_relation(res.patched)}
+    want = {i for i in range(n) if fresh_v[i] > 5.0}
+    assert got == want
+    assert float(res.n_updated.value) >= 25  # ~30 rows changed

@@ -1,0 +1,64 @@
+"""Property 1 / Prop. 2: deterministic hashing yields corresponding samples."""
+
+import numpy as np
+
+from repro.core.hashing import apply_hash, hash_threshold_mask_ref
+from repro.relational import from_columns
+
+from tests import oracle
+
+
+def test_correspondence_properties():
+    rng = np.random.default_rng(0)
+    n = 500
+    # fresh: some keys deleted, some updated, some inserted
+    stale = from_columns(
+        {"k": np.arange(n, dtype=np.int32),
+         "v": rng.normal(size=n).astype(np.float32)},
+        pk=["k"], capacity=n + 200,
+    )
+    deleted = set(rng.choice(n, 40, replace=False).tolist())
+    keep = np.array([k for k in range(n) if k not in deleted], np.int32)
+    inserted = np.arange(n, n + 120, dtype=np.int32)
+    fresh_keys = np.concatenate([keep, inserted])
+    fresh = from_columns(
+        {"k": fresh_keys, "v": rng.normal(size=len(fresh_keys)).astype(np.float32)},
+        pk=["k"], capacity=n + 200,
+    )
+    m, seed = 0.3, 11
+    s_hat = oracle.from_relation(apply_hash(stale, ("k",), m, seed))
+    f_hat = oracle.from_relation(apply_hash(fresh, ("k",), m, seed))
+    s_keys = {int(r["k"]) for r in s_hat}
+    f_keys = {int(r["k"]) for r in f_hat}
+
+    # 1. uniformity: realized ratios near m
+    assert abs(len(s_keys) / n - m) < 0.08
+    assert abs(len(f_keys) / len(fresh_keys) - m) < 0.08
+    # 2. removal of superfluous rows: no deleted key in the fresh sample
+    assert not (f_keys & deleted)
+    # 3. sampling of missing rows: inserted keys appear at ≈ rate m
+    got_ins = f_keys & set(inserted.tolist())
+    assert abs(len(got_ins) / len(inserted) - m) < 0.15
+    # 4. key preservation: surviving stale-sample keys stay sampled
+    assert (s_keys - deleted) <= f_keys
+
+    # determinism: identical masks on identical keys
+    a = np.asarray(hash_threshold_mask_ref([np.arange(64, dtype=np.int32)], m, seed))
+    b = np.asarray(hash_threshold_mask_ref([np.arange(64, dtype=np.int32)], m, seed))
+    assert np.array_equal(a, b)
+
+
+def test_hash_uniformity():
+    """Realized sampling ratio tracks m across the range (SUHA check)."""
+    keys = np.arange(50_000, dtype=np.int32)
+    for m in (0.05, 0.25, 0.5, 0.9):
+        frac = float(np.mean(np.asarray(hash_threshold_mask_ref([keys], m, 3))))
+        assert abs(frac - m) < 0.01, (m, frac)
+
+
+def test_different_seeds_decorrelate():
+    keys = np.arange(20_000, dtype=np.int32)
+    a = np.asarray(hash_threshold_mask_ref([keys], 0.5, 1))
+    b = np.asarray(hash_threshold_mask_ref([keys], 0.5, 2))
+    agree = float(np.mean(a == b))
+    assert 0.45 < agree < 0.55  # independent coins agree ~50%

@@ -1,0 +1,91 @@
+"""Dry-run machinery: HLO analyzer correctness + produced artifacts sanity.
+
+The 512-device sweep itself runs via ``python -m repro.launch.dryrun``
+(minutes); here we verify the analyzer on a known program and validate the
+committed result JSONs (all 40 cells × 2 meshes: ok or spec-skip).
+"""
+
+import glob
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+from repro.configs import ALL_SHAPES, ARCH_IDS, get_config
+from repro.configs.base import shape_applicable
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "benchmarks", "dryrun_results")
+
+
+def test_hlo_analyzer_trip_counts_subprocess():
+    child = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax, jax.numpy as jnp
+from jax.sharding import PartitionSpec as P, NamedSharding
+from repro.launch.hlo_analysis import analyze
+mesh = jax.make_mesh((2, 4), ("data", "model"),
+                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+L, D, B = 12, 256, 16
+Ws = jax.ShapeDtypeStruct((L, D, D), jnp.float32,
+                          sharding=NamedSharding(mesh, P(None, "data", "model")))
+X = jax.ShapeDtypeStruct((B, D), jnp.float32,
+                         sharding=NamedSharding(mesh, P("data", None)))
+def f(ws, x):
+    def body(c, w):
+        return jnp.tanh(c @ w), None
+    y, _ = jax.lax.scan(body, x, ws)
+    return y
+a = analyze(jax.jit(f).lower(Ws, X).compile().as_text())
+exp = 12 * 2 * (B // 2) * D * (D // 4)
+assert abs(a["flops"] - exp) / exp < 0.01, (a["flops"], exp)
+assert a["collective_bytes"] > 0
+print("OK")
+"""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.abspath("src")
+    env.pop("XLA_FLAGS", None)
+    r = subprocess.run([sys.executable, "-c", child], capture_output=True,
+                       text=True, env=env, timeout=600)
+    assert r.returncode == 0 and "OK" in r.stdout, r.stderr[-2000:]
+
+
+@pytest.mark.skipif(not os.path.isdir(RESULTS), reason="dry-run sweep not run yet")
+def test_dryrun_matrix_complete():
+    recs = {}
+    for path in glob.glob(os.path.join(RESULTS, "*.json")):
+        with open(path) as f:
+            r = json.load(f)
+        recs[(r["arch"], r["shape"], r["mesh"])] = r
+    missing, bad = [], []
+    for arch in ARCH_IDS:
+        cfg = get_config(arch)
+        for cell in ALL_SHAPES:
+            for mesh in ("single", "multi"):
+                r = recs.get((arch, cell.name, mesh))
+                if r is None:
+                    missing.append((arch, cell.name, mesh))
+                    continue
+                ok, _ = shape_applicable(cfg, cell)
+                if ok and r["status"] != "ok":
+                    bad.append((arch, cell.name, mesh, r.get("error", r["status"])))
+                if not ok and r["status"] != "skipped":
+                    bad.append((arch, cell.name, mesh, "expected spec-skip"))
+    assert not missing, f"missing cells: {missing[:5]}"
+    assert not bad, f"bad cells: {bad[:5]}"
+
+
+@pytest.mark.skipif(not os.path.isdir(RESULTS), reason="dry-run sweep not run yet")
+def test_dryrun_records_have_roofline_inputs():
+    for path in glob.glob(os.path.join(RESULTS, "*__single.json")):
+        with open(path) as f:
+            r = json.load(f)
+        if r["status"] != "ok":
+            continue
+        ha = r["hlo_analysis"]
+        assert ha["flops"] > 0, path
+        assert ha["memory_bytes"] > 0, path
+        assert r["memory_analysis"]["temp_size_in_bytes"] >= 0, path
+        assert r["params"]["total"] > 1e8, path

@@ -1,0 +1,109 @@
+"""Estimator statistics: unbiasedness, CI coverage, break-even, selectivity."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import Query, exact, svc_aqp, svc_corr, variance_comparison
+from repro.core.hashing import apply_hash
+from repro.relational import from_columns
+from repro.relational.expr import Col, Lit, Cmp
+
+
+def make_view(rng, n, drift=0.0):
+    """(stale, fresh) views over the same keys; fresh has value drift and
+    extra rows (missing in the stale view)."""
+    base_vals = rng.normal(10.0, 3.0, n).astype(np.float32)
+    stale = from_columns(
+        {"k": np.arange(n, dtype=np.int32), "v": base_vals}, pk=["k"],
+        capacity=int(n * 1.3),
+    )
+    fresh_vals = base_vals + rng.normal(drift, 1.0, n).astype(np.float32)
+    extra = int(n * 0.15)
+    fresh = from_columns(
+        {"k": np.arange(n + extra, dtype=np.int32),
+         "v": np.concatenate([fresh_vals, rng.normal(10.0 + drift, 3.0, extra).astype(np.float32)])},
+        pk=["k"], capacity=int(n * 1.3),
+    )
+    return stale, fresh
+
+
+@pytest.mark.parametrize("agg,col", [("sum", "v"), ("count", None), ("avg", "v")])
+def test_unbiasedness(agg, col):
+    """Mean of estimates over many seeds ≈ truth (Lemma 1)."""
+    rng = np.random.default_rng(0)
+    stale, fresh = make_view(rng, 400, drift=2.0)
+    q = Query(agg=agg, col=col, pred=Cmp("gt", Col("v"), Lit(8.0)))
+    truth = float(exact(fresh, q))
+    stale_res = exact(stale, q)
+    m = 0.2
+    ests_aqp, ests_corr = [], []
+    for seed in range(40):
+        s_hat = apply_hash(stale, ("k",), m, seed)
+        f_hat = apply_hash(fresh, ("k",), m, seed)
+        ests_aqp.append(float(svc_aqp(f_hat, q, m).value))
+        ests_corr.append(float(svc_corr(stale_res, f_hat, s_hat, q, m).value))
+    for name, ests in (("aqp", ests_aqp), ("corr", ests_corr)):
+        rel_bias = abs(np.mean(ests) - truth) / abs(truth)
+        assert rel_bias < 0.05, f"{name} biased: mean {np.mean(ests)} vs truth {truth}"
+
+
+def test_ci_coverage():
+    """~95% CIs should cover truth in ≳85% of trials (CLT approximation)."""
+    rng = np.random.default_rng(1)
+    stale, fresh = make_view(rng, 600, drift=1.0)
+    q = Query(agg="sum", col="v")
+    truth = float(exact(fresh, q))
+    stale_res = exact(stale, q)
+    m = 0.2
+    cover_aqp = cover_corr = 0
+    trials = 60
+    for seed in range(trials):
+        f_hat = apply_hash(fresh, ("k",), m, seed)
+        s_hat = apply_hash(stale, ("k",), m, seed)
+        e = svc_aqp(f_hat, q, m)
+        cover_aqp += float(e.ci_low) <= truth <= float(e.ci_high)
+        e2 = svc_corr(stale_res, f_hat, s_hat, q, m)
+        cover_corr += float(e2.ci_low) <= truth <= float(e2.ci_high)
+    assert cover_aqp / trials >= 0.85, f"AQP coverage {cover_aqp / trials}"
+    assert cover_corr / trials >= 0.85, f"CORR coverage {cover_corr / trials}"
+
+
+def test_breakeven_small_vs_large_updates():
+    """§5.2.2: CORR beats AQP for small drift; AQP wins for huge drift."""
+    rng = np.random.default_rng(2)
+    q = Query(agg="sum", col="v")
+
+    def rmse(drift):
+        stale, fresh = make_view(rng, 500, drift=drift)
+        truth = float(exact(fresh, q))
+        stale_res = exact(stale, q)
+        errs_a, errs_c = [], []
+        for seed in range(25):
+            f_hat = apply_hash(fresh, ("k",), 0.15, seed)
+            s_hat = apply_hash(stale, ("k",), 0.15, seed)
+            errs_a.append((float(svc_aqp(f_hat, q, 0.15).value) - truth) ** 2)
+            errs_c.append((float(svc_corr(stale_res, f_hat, s_hat, q, 0.15).value) - truth) ** 2)
+        return np.sqrt(np.mean(errs_a)), np.sqrt(np.mean(errs_c))
+
+    a_small, c_small = rmse(0.2)
+    assert c_small < a_small, "CORR should win when the view is barely stale"
+    # variance_comparison should agree with the empirical ordering
+    stale, fresh = make_view(rng, 500, drift=0.2)
+    cmp_small = variance_comparison(
+        apply_hash(fresh, ("k",), 0.15, 0), apply_hash(stale, ("k",), 0.15, 0), q, 0.15
+    )
+    assert bool(cmp_small["corr_wins"])
+
+
+def test_selectivity_widens_ci():
+    """§5.2.3: CI scales ~1/√p with predicate selectivity."""
+    rng = np.random.default_rng(3)
+    stale, fresh = make_view(rng, 2000)
+    m = 0.25
+    f_hat = apply_hash(fresh, ("k",), m, 7)
+    broad = Query(agg="avg", col="v", pred=Cmp("gt", Col("v"), Lit(5.0)))   # ~95%
+    narrow = Query(agg="avg", col="v", pred=Cmp("gt", Col("v"), Lit(14.0)))  # ~10%
+    e_broad = svc_aqp(f_hat, broad, m)
+    e_narrow = svc_aqp(f_hat, narrow, m)
+    assert float(e_narrow.stderr) > float(e_broad.stderr)

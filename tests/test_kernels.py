@@ -1,0 +1,126 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps (interpret mode)."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.corr_diff.ops import corr_moments
+from repro.kernels.corr_diff.ref import corr_diff_ref
+from repro.kernels.hash_threshold.ops import hash_threshold
+from repro.kernels.hash_threshold.ref import hash_threshold_ref
+from repro.kernels.segment_aggsum.ops import segment_sum
+from repro.kernels.segment_aggsum.ref import segment_sum_ref
+
+
+@pytest.mark.parametrize("n", [1, 127, 128, 129, 8192, 10000])
+@pytest.mark.parametrize("ncols", [1, 2, 3])
+@pytest.mark.parametrize("dtype", [np.int32, np.uint32])
+def test_hash_threshold_sweep(n, ncols, dtype):
+    rng = np.random.default_rng(n * 7 + ncols)
+    cols = [jnp.asarray(rng.integers(0, 2**31 - 1, n).astype(dtype))
+            for _ in range(ncols)]
+    got = np.asarray(hash_threshold(cols, 0.31, seed=4))
+    want = np.asarray(hash_threshold_ref(cols, 0.31, seed=4))
+    assert np.array_equal(got, want)
+
+
+@given(m=st.floats(0.0, 1.0), seed=st.integers(0, 100))
+@settings(max_examples=15, deadline=None)
+def test_hash_threshold_ratio_property(m, seed):
+    keys = jnp.arange(4096, dtype=jnp.int32)
+    frac = float(np.mean(np.asarray(hash_threshold([keys], m, seed))))
+    assert abs(frac - m) < 0.05
+
+
+@pytest.mark.parametrize("shape", [(100, 1, 10), (1000, 4, 50), (4096, 8, 300),
+                                   (257, 3, 129), (1, 1, 1)])
+def test_segment_sum_sweep(shape):
+    R, C, G = shape
+    rng = np.random.default_rng(R)
+    gid = jnp.asarray(rng.integers(0, G, R).astype(np.int32))
+    vals = jnp.asarray(rng.normal(size=(R, C)).astype(np.float32))
+    np.testing.assert_allclose(
+        np.asarray(segment_sum(gid, vals, G)),
+        np.asarray(segment_sum_ref(gid, vals, G)),
+        rtol=1e-5, atol=1e-4,
+    )
+
+
+def test_segment_sum_drops_out_of_range():
+    gid = jnp.asarray(np.array([0, 1, 99, -1], np.int32))
+    vals = jnp.ones((4, 1), jnp.float32)
+    out = np.asarray(segment_sum(gid, vals, 2))
+    np.testing.assert_allclose(out[:, 0], [1.0, 1.0])
+
+
+@pytest.mark.parametrize("n", [1, 300, 8192, 20000])
+@pytest.mark.parametrize("density", [0.0, 0.5, 1.0])
+def test_corr_moments_sweep(n, density):
+    rng = np.random.default_rng(n)
+    a = jnp.asarray(rng.normal(size=n).astype(np.float32))
+    b = jnp.asarray(rng.normal(size=n).astype(np.float32))
+    mask = jnp.asarray(rng.random(n) < density)
+    got = [float(x) for x in corr_moments(a, b, mask)]
+    want = [float(x) for x in corr_diff_ref(a, b, mask)]
+    np.testing.assert_allclose(got, want, rtol=3e-5, atol=1e-3)
+
+
+def test_pallas_dispatch_switch():
+    import repro.kernels as K
+    from repro.core import hashing
+
+    cols = [jnp.arange(5000, dtype=jnp.int32)]
+    base = np.asarray(hashing.hash_threshold_mask(cols, 0.2, 9))
+    K.enable()
+    try:
+        pal = np.asarray(hashing.hash_threshold_mask(cols, 0.2, 9))
+    finally:
+        K.disable()
+    assert np.array_equal(base, pal)
+
+
+# ---------------------------------------------------------------------------
+# flash attention (the §Roofline memory-term lever)
+# ---------------------------------------------------------------------------
+
+import jax.numpy as _jnp
+
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.flash_attention.ref import flash_ref
+
+
+@pytest.mark.parametrize("shape", [(2, 128, 4, 4, 64), (1, 300, 8, 2, 32),
+                                   (2, 256, 4, 1, 128), (1, 64, 2, 2, 16)])
+@pytest.mark.parametrize("dtype", [np.float32, "bfloat16"])
+def test_flash_attention_sweep(shape, dtype):
+    B, S, H, K, hd = shape
+    rng = np.random.default_rng(S + H)
+    dt = _jnp.bfloat16 if dtype == "bfloat16" else _jnp.float32
+    q = _jnp.asarray(rng.normal(size=(B, S, H, hd)), dt)
+    k = _jnp.asarray(rng.normal(size=(B, S, K, hd)), dt)
+    v = _jnp.asarray(rng.normal(size=(B, S, K, hd)), dt)
+    got = np.asarray(flash_attention(q, k, v), np.float32)
+    kr = _jnp.repeat(k, H // K, 2)
+    vr = _jnp.repeat(v, H // K, 2)
+    want = np.asarray(flash_ref(
+        _jnp.moveaxis(q, 2, 1).reshape(B * H, S, hd),
+        _jnp.moveaxis(kr, 2, 1).reshape(B * H, S, hd),
+        _jnp.moveaxis(vr, 2, 1).reshape(B * H, S, hd)), np.float32)
+    want = np.moveaxis(want.reshape(B, H, S, hd), 1, 2)
+    tol = 2e-3 if dtype == np.float32 else 3e-2
+    np.testing.assert_allclose(got, want, rtol=tol, atol=tol)
+
+
+def test_flash_attention_matches_model_attention():
+    """Flash kernel ≡ the model's chunked_attention (causal GQA)."""
+    from repro.models.layers import gqa_attention, causal_mask
+
+    rng = np.random.default_rng(3)
+    B, S, H, K, hd = 2, 128, 4, 2, 32
+    q = _jnp.asarray(rng.normal(size=(B, S, H, hd)).astype(np.float32))
+    k = _jnp.asarray(rng.normal(size=(B, S, K, hd)).astype(np.float32))
+    v = _jnp.asarray(rng.normal(size=(B, S, K, hd)).astype(np.float32))
+    got = np.asarray(flash_attention(q, k, v))
+    want = np.asarray(gqa_attention(q, k, v, causal_mask(S, S)))
+    np.testing.assert_allclose(got, want, rtol=2e-3, atol=2e-3)

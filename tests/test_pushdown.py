@@ -1,0 +1,112 @@
+"""Theorem 1: hash push-down produces identical samples (property test).
+
+Random plans are built over random base tables; the sample from
+η-at-the-root must equal the sample from the pushed-down plan, row for row.
+Blocking cases (nested aggregates, key-transforming projections) must leave
+the η un-pushed but still correct.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.pushdown import fully_pushed, push_down
+from repro.relational import from_columns
+from repro.relational.execute import execute
+from repro.relational.expr import Bin, Col, Lit, Cmp
+from repro.relational.plan import (
+    FKJoin, GroupByNode, HashNode, ProjectNode, Scan, SelectNode, UnionNode,
+)
+
+from tests import oracle
+
+
+def env_tables(rng, n_fact, n_dim):
+    fact = from_columns(
+        {
+            "fid": np.arange(n_fact, dtype=np.int32),
+            "dkey": rng.integers(0, n_dim, n_fact).astype(np.int32),
+            "val": rng.normal(size=n_fact).astype(np.float32),
+        },
+        pk=["fid"], capacity=n_fact + 5,
+    )
+    dim = from_columns(
+        {"dkey": np.arange(n_dim, dtype=np.int32),
+         "w": rng.normal(size=n_dim).astype(np.float32)},
+        pk=["dkey"],
+    )
+    return {"F": fact, "D": dim}
+
+
+def plan_variants(n_dim):
+    """A family of plans with different push-down behaviours."""
+    join = FKJoin(fact=Scan("F", pk=("fid",)), dim=Scan("D", pk=("dkey",)),
+                  fact_key="dkey")
+    agg = GroupByNode(child=join, keys=("dkey",),
+                      aggs=(("c", "count", None), ("s", "sum", "val")),
+                      num_groups=n_dim + 4)
+    sel = SelectNode(child=agg, pred=Cmp("gt", Col("c"), Lit(0.5)))
+    proj = ProjectNode(child=sel, outputs=(("dkey", "dkey"),
+                                           ("s2", Bin("mul", Col("s"), Lit(2.0)))))
+    union = UnionNode(left=agg, right=agg)
+    return {"join": join, "agg": agg, "sel": sel, "proj": proj, "union": union}
+
+
+@pytest.mark.parametrize("which", ["agg", "sel", "proj", "union"])
+@pytest.mark.parametrize("m", [0.3, 0.7])
+def test_theorem1_sample_identity(which, m):
+    rng = np.random.default_rng(hash((which, m)) % 2**32)
+    env = env_tables(rng, 80, 12)
+    plan = plan_variants(12)[which]
+    pk = ("dkey",)
+    rooted = HashNode(child=plan, cols=pk, m=m, seed=5)
+    pushed = push_down(rooted)
+    a = oracle.from_relation(execute(rooted, env))
+    b = oracle.from_relation(execute(pushed, env))
+    assert oracle.rows_equal(a, b, keys=pk), f"Theorem 1 violated for {which}"
+
+
+@given(seed=st.integers(0, 500), m=st.floats(0.1, 0.9))
+@settings(max_examples=20, deadline=None)
+def test_theorem1_property(seed, m):
+    rng = np.random.default_rng(seed)
+    env = env_tables(rng, int(rng.integers(5, 120)), int(rng.integers(2, 15)))
+    plan = plan_variants(14)["sel"]
+    rooted = HashNode(child=plan, cols=("dkey",), m=float(m), seed=seed % 7)
+    pushed = push_down(rooted)
+    a = oracle.from_relation(execute(rooted, env))
+    b = oracle.from_relation(execute(pushed, env))
+    assert oracle.rows_equal(a, b, keys=("dkey",))
+
+
+def test_pushdown_reaches_leaves():
+    plan = plan_variants(12)["sel"]
+    pushed = push_down(HashNode(child=plan, cols=("dkey",), m=0.5))
+    assert fully_pushed(pushed)
+
+
+def test_nested_aggregate_blocks():
+    inner = GroupByNode(child=Scan("F", pk=("fid",)), keys=("dkey",),
+                        aggs=(("c", "count", None),), num_groups=16)
+    outer = GroupByNode(child=inner, keys=("c",),
+                        aggs=(("n", "count", None),), num_groups=16)
+    pushed = push_down(HashNode(child=outer, cols=("c",), m=0.5))
+    assert not fully_pushed(pushed), "η must NOT push through a nested aggregate"
+
+
+def test_key_transform_blocks():
+    proj = ProjectNode(
+        child=Scan("F", pk=("fid",)),
+        outputs=(("fid", Bin("mul", Col("fid"), Lit(2))),),  # key transformed
+        pk=("fid",),
+    )
+    pushed = push_down(HashNode(child=proj, cols=("fid",), m=0.5))
+    assert not fully_pushed(pushed), "η must NOT push through key transforms (V22)"
+
+
+def test_equality_rename_pushes_through_join():
+    # hashing the dim key on top of an FK join pushes via the rename rule
+    join = FKJoin(fact=Scan("F", pk=("fid",)), dim=Scan("D", pk=("dkey",)),
+                  fact_key="dkey")
+    pushed = push_down(HashNode(child=join, cols=("dkey",), m=0.5))
+    assert fully_pushed(pushed)

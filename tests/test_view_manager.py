@@ -1,0 +1,104 @@
+"""System behaviour: ViewManager IVM correctness + SVC sample identity."""
+
+import numpy as np
+import pytest
+
+from repro.core import Query, ViewDef
+from repro.core.hashing import hash_threshold_mask_ref
+from repro.data.synthetic import grow_log, make_log_video
+from repro.relational.execute import execute
+from repro.relational.plan import FKJoin, GroupByNode, Scan
+from repro.relational.relation import to_host
+from repro.views import ViewManager
+
+from tests import oracle
+
+
+@pytest.fixture
+def setup():
+    rng = np.random.default_rng(0)
+    log, video = make_log_video(rng, 300, 6000)
+    plan = GroupByNode(
+        child=FKJoin(fact=Scan("Log", pk=("sessionId",)),
+                     dim=Scan("Video", pk=("videoId",)), fact_key="videoId"),
+        keys=("videoId",),
+        aggs=(("visitCount", "count", None), ("totalBytes", "sum", "bytes")),
+        num_groups=512,
+    )
+    vm = ViewManager()
+    vm.register_base("Log", log)
+    vm.register_base("Video", video)
+    vm.register_view(ViewDef("v", plan), delta_bases=("Log",), m=0.2, seed=5,
+                     delta_group_capacity=512)
+    return vm, rng, plan
+
+
+def test_ivm_equals_recompute(setup):
+    vm, rng, plan = setup
+    delta = grow_log(rng, 300, 6000, 1500)
+    vm.ingest("Log", inserts=delta)
+    vm.maintain_all()
+    # recompute from the (updated) base relations
+    recomputed = execute(plan, vm.base)
+    assert oracle.rows_equal(
+        oracle.from_relation(vm.views["v"].materialized),
+        oracle.from_relation(recomputed),
+        keys=("videoId",),
+    )
+
+
+def test_clean_sample_is_hash_of_fresh(setup):
+    """System-level Theorem 1: Ŝ' == η(S') exactly."""
+    vm, rng, plan = setup
+    delta = grow_log(rng, 300, 6000, 1500)
+    vm.ingest("Log", inserts=delta)
+    vm.svc_refresh("v")
+    sample = oracle.from_relation(vm.views["v"].clean_sample)
+    # ground truth: full IVM into a scratch, then hash-filter
+    vm2, _, _ = (vm, None, None)
+    fresh_keys = None
+    vm.maintain("v")
+    fresh = oracle.from_relation(vm.views["v"].materialized)
+    mask_keys = [r["videoId"] for r in fresh
+                 if bool(np.asarray(hash_threshold_mask_ref(
+                     [np.array([int(r["videoId"])], np.int32)], 0.2, 5))[0])]
+    expect = [r for r in fresh if r["videoId"] in set(mask_keys)]
+    assert oracle.rows_equal(sample, expect, keys=("videoId",))
+
+
+def test_query_after_ivm_is_exact(setup):
+    vm, rng, _ = setup
+    delta = grow_log(rng, 300, 6000, 1500)
+    vm.ingest("Log", inserts=delta)
+    q = Query(agg="sum", col="totalBytes")
+    truth = float(vm.query_exact_fresh("v", q))
+    vm.maintain_all()
+    assert abs(float(vm.query_stale("v", q)) - truth) < 1e-2 * abs(truth)
+
+
+def test_estimates_beat_stale(setup):
+    vm, rng, _ = setup
+    delta = grow_log(rng, 300, 6000, 3000)
+    vm.ingest("Log", inserts=delta)
+    vm.svc_refresh("v")
+    q = Query(agg="sum", col="totalBytes")
+    truth = float(vm.query_exact_fresh("v", q))
+    stale_err = abs(float(vm.query_stale("v", q)) - truth)
+    est_err = abs(float(vm.query("v", q).value) - truth)
+    assert est_err < stale_err
+
+
+def test_repeated_refresh_stable_shapes(setup):
+    """Ingest loops must not retrace every step (pow2-bucketed deltas)."""
+    vm, rng, _ = setup
+    import time
+    times = []
+    sess = 6000
+    for i in range(6):
+        vm.ingest("Log", inserts=grow_log(rng, 300, sess, 100))
+        sess += 100
+        t0 = time.perf_counter()
+        vm.svc_refresh("v")
+        times.append(time.perf_counter() - t0)
+    # steady-state refreshes must be far cheaper than the first (compiled)
+    assert min(times[2:]) < times[0]
