@@ -5,6 +5,11 @@ bigger IVM batches are cheaper per row but staler; spending a slice of the
 budget on SVC refreshes cuts the *max* staleness error between batches.
 We replay a delta stream, give both policies the same wall-clock budget,
 and report the worst query error over the stream.
+
+Also A/Bs the refresh hot path itself: ``svc_refresh`` with the fused
+kernels/fused_clean dispatch (η filter + group aggregation in one pass)
+against the unfused plan-executor pipeline, plus the streaming engine's
+watermark-triggered refresh over the same micro-batch stream.
 """
 
 from __future__ import annotations
@@ -14,10 +19,11 @@ from typing import List
 
 import numpy as np
 
-from benchmarks.common import Row, visit_view_scenario
+from benchmarks.common import Row, timeit, visit_view_scenario
 from repro.core import Query
 from repro.data.synthetic import grow_log
 from repro.relational.expr import Col, Lit, Cmp
+from repro.streaming import StreamConfig
 
 
 def _stream_errors(vm, meta, n_batches, refresh_every, use_svc):
@@ -47,15 +53,51 @@ def _stream_errors(vm, meta, n_batches, refresh_every, use_svc):
     return float(np.max(errs)), t_spent
 
 
+def _fused_vs_unfused(quick: bool) -> List[Row]:
+    """Same pending delta set, refresh timed with and without the fused
+    clean_sample dispatch (kernels/fused_clean vs plan executor)."""
+    vm, meta = visit_view_scenario(quick, m=0.1, seed=21)
+    delta = grow_log(meta["rng"], meta["nv"], meta["nl"], int(meta["nl"] * 0.2))
+    vm.ingest("Log", inserts=delta)
+    t_unfused = timeit(lambda: vm.svc_refresh("visitView", fused=False))
+    t_fused = timeit(lambda: vm.svc_refresh("visitView", fused=True))
+    return [
+        Row("fig14_refresh_unfused", t_unfused, "plan executor (η → join → γ)"),
+        Row("fig14_refresh_fused", t_fused,
+            f"fused_clean kernel speedup={t_unfused / max(t_fused, 1e-9):.2f}x"),
+    ]
+
+
+def _streaming_engine(quick: bool) -> Row:
+    """Micro-batched traffic through the watermark engine (fused path)."""
+    vm, meta = visit_view_scenario(quick, m=0.1, seed=21)
+    n_batches = 8 if quick else 16
+    batch = max(256, int(meta["nl"] * 0.02))
+    svc = vm.configure_streaming(
+        StreamConfig(max_rows=batch * 4, max_age_s=1e9)
+    )
+    sess = meta["nl"]
+    t0 = time.perf_counter()
+    for seq in range(n_batches):
+        vm.ingest("Log", inserts=grow_log(meta["rng"], meta["nv"], sess, batch), seq=seq)
+        sess += batch
+    dt = time.perf_counter() - t0
+    return Row("fig14_streaming_engine", dt * 1e6 / n_batches,
+               f"{svc.refresh_count} watermark refreshes over {n_batches} batches")
+
+
 def run(quick: bool = False) -> List[Row]:
     n_batches = 4 if quick else 8
     vm, meta = visit_view_scenario(quick, m=0.1, seed=21)
     err_ivm, t_ivm = _stream_errors(vm, meta, n_batches, 1, use_svc=False)
     vm, meta = visit_view_scenario(quick, m=0.1, seed=21)
     err_svc, t_svc = _stream_errors(vm, meta, n_batches, 1, use_svc=True)
-    return [
+    rows = [
         Row("fig14_ivm_only", t_ivm * 1e6 / n_batches,
             f"max_err={err_ivm:.4f} (stale between nightly IVM)"),
         Row("fig15_svc_plus_ivm", t_svc * 1e6 / n_batches,
             f"max_err={err_svc:.4f} gain={err_ivm / max(err_svc, 1e-9):.1f}x"),
     ]
+    rows.extend(_fused_vs_unfused(quick))
+    rows.append(_streaming_engine(quick))
+    return rows

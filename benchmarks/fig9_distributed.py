@@ -68,8 +68,9 @@ def local_svc(keys_l, vals_l, dur):
 
 out = {}
 for tag, fn in (("full", local_full), ("svc", local_svc)):
-    f = jax.jit(jax.shard_map(fn, mesh=mesh, in_specs=(P("data"), P("data"), P()),
-                              out_specs=(P(),) * (N_AGGS + 1), check_vma=False))
+    from repro.compat import shard_map
+    f = jax.jit(shard_map(fn, mesh, in_specs=(P("data"), P("data"), P()),
+                          out_specs=(P(),) * (N_AGGS + 1)))
     r = f(keys, bytes_col, dim_dur); jax.block_until_ready(r)
     t0 = time.perf_counter()
     for _ in range(5):

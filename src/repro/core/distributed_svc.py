@@ -9,6 +9,10 @@ maintenance parallelizes trivially and exploits idle interconnect time.
 ``sharded_delta_groupby`` computes η-filtered per-group partial aggregates
 on each data shard and psums them; the caller merges the (small, global)
 delta view into the stale sample exactly as in the single-node path.
+``make_sharded_fused_delta_groupby`` is the streaming-engine variant: each
+shard runs the fused single-pass η+γ of kernels/fused_clean over its
+partition of the DeltaLog drain (``stack_shard_deltas`` builds the sharded
+arrays from ``repro.streaming.PartitionedDeltaLog``).
 """
 
 from __future__ import annotations
@@ -20,6 +24,30 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.core import hashing
+
+
+from repro.compat import shard_map as _shard_map
+
+
+def _make_sharded_groupby(mesh: Mesh, axis: str, agg_cols: Tuple[str, ...], local):
+    """Common shard_map + psum wrapper: ``local(keys, valid, *vals) ->
+    (count, sum_0, ...)`` per shard; returns the jitted global runner that
+    psum-merges and names the outputs {"count": ..., col: ...}."""
+    n_vals = len(agg_cols)
+    f = _shard_map(
+        local, mesh,
+        in_specs=(P(axis), P(axis)) + (P(axis),) * n_vals,
+        out_specs=(P(),) * (n_vals + 1),
+    )
+
+    def run(keys: jnp.ndarray, valid: jnp.ndarray, values: Dict[str, jnp.ndarray]):
+        outs = f(keys, valid, *[values[c] for c in agg_cols])
+        res = {"count": outs[0]}
+        for i, c in enumerate(agg_cols):
+            res[c] = outs[i + 1]
+        return res
+
+    return jax.jit(run)
 
 
 def make_sharded_delta_groupby(
@@ -50,26 +78,86 @@ def make_sharded_delta_groupby(
                     num_segments=num_groups + 1,
                 )[:num_groups]
             )
-        outs = [jax.lax.psum(o, axis) for o in outs]
-        return tuple(outs)
+        return tuple(jax.lax.psum(o, axis) for o in outs)
 
-    n_vals = len(agg_cols)
-    f = jax.shard_map(
-        local,
-        mesh=mesh,
-        in_specs=(P(axis), P(axis)) + (P(axis),) * n_vals,
-        out_specs=(P(),) * (n_vals + 1),
-        check_vma=False,
+    return _make_sharded_groupby(mesh, axis, agg_cols, local)
+
+
+def make_sharded_fused_delta_groupby(
+    mesh: Mesh,
+    axis: str,
+    num_groups: int,
+    m: float,
+    seed: int,
+    agg_cols: Sequence[str],
+):
+    """Fused-pass variant of ``make_sharded_delta_groupby``: each shard runs
+    the single η+γ pass of kernels/fused_clean over its delta partition (no
+    materialized filtered intermediate) and only the dense per-group
+    (count, sums) vectors are psum-merged — the streaming engine's per-
+    partition DeltaLog drains feed straight into this."""
+    from repro.kernels.fused_clean.ref import fused_clean_ref
+
+    agg_cols = tuple(agg_cols)
+
+    def local(keys, valid, *vals):
+        stacked = (
+            jnp.stack([v.astype(jnp.float32) for v in vals], axis=1)
+            if vals else jnp.zeros((keys.shape[0], 0), jnp.float32)
+        )
+        counts, sums = fused_clean_ref(keys, stacked, valid, m, seed, num_groups)
+        outs = [counts] + [sums[:, i] for i in range(len(agg_cols))]
+        return tuple(jax.lax.psum(o, axis) for o in outs)
+
+    return _make_sharded_groupby(mesh, axis, agg_cols, local)
+
+
+def stack_shard_deltas(
+    drained,  # list of (inserts, deletes) per shard, from PartitionedDeltaLog.drain()
+    key_col: str,
+    agg_cols: Sequence[str],
+    rows_per_shard: int,
+):
+    """Flatten per-partition DeltaLog drains into the global sharded arrays
+    the psum group-by consumes: (keys (S*R,), valid (S*R,), values col->(S*R,)).
+    Each shard's inserts are padded to ``rows_per_shard`` so the data axis
+    shards evenly over the mesh; a drain larger than that is an error
+    (size the watermark below the shard arena), as are deletes (the sharded
+    aggregation is insert-only, like the fig9 pipeline)."""
+    keys, valid = [], []
+    values = {c: [] for c in agg_cols}
+
+    for shard, (ins, dels) in enumerate(drained):
+        if dels is not None:
+            raise ValueError(
+                f"shard {shard}: sharded delta aggregation is insert-only; "
+                "apply deletes at the maintenance period instead"
+            )
+        if ins is None:
+            keys.append(jnp.zeros((rows_per_shard,), jnp.int32))
+            valid.append(jnp.zeros((rows_per_shard,), bool))
+            for c in agg_cols:
+                values[c].append(jnp.zeros((rows_per_shard,), jnp.float32))
+            continue
+        if ins.capacity > rows_per_shard:
+            raise ValueError(
+                f"shard {shard}: drained {ins.capacity} rows > rows_per_shard="
+                f"{rows_per_shard}; raise rows_per_shard or lower the watermark"
+            )
+        k = jnp.asarray(ins.col(key_col), jnp.int32)
+        v = jnp.asarray(ins.valid, bool)
+        pad = rows_per_shard - k.shape[0]
+        keys.append(jnp.pad(k, (0, pad)))
+        valid.append(jnp.pad(v, (0, pad)))
+        for c in agg_cols:
+            col = jnp.asarray(ins.col(c), jnp.float32)
+            values[c].append(jnp.pad(col, (0, pad)))
+
+    return (
+        jnp.concatenate(keys),
+        jnp.concatenate(valid),
+        {c: jnp.concatenate(v) for c, v in values.items()},
     )
-
-    def run(keys: jnp.ndarray, valid: jnp.ndarray, values: Dict[str, jnp.ndarray]):
-        outs = f(keys, valid, *[values[c] for c in agg_cols])
-        res = {"count": outs[0]}
-        for i, c in enumerate(agg_cols):
-            res[c] = outs[i + 1]
-        return res
-
-    return jax.jit(run)
 
 
 def merge_delta_into_sample(

@@ -17,14 +17,18 @@ sum/count) are fully maintainable, min/max only under insert-only deltas.
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Dict, Mapping, Optional, Tuple
 
+import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.pushdown import push_down
 from repro.relational import ops
 from repro.relational.expr import Bin, Col, Lit
 from repro.relational.plan import (
+    FKJoin,
     GroupByNode,
     HashNode,
     OuterJoin,
@@ -228,6 +232,220 @@ def _next_pow2_int(n: int) -> int:
     return p
 
 
+# ---------------------------------------------------------------------------
+# Fused delta aggregation (kernels/fused_clean dispatch)
+# ---------------------------------------------------------------------------
+
+# Largest dense-key accumulator the fused path will allocate; sparse key
+# domains beyond this fall back to the sort-based plan executor.
+MAX_FUSED_GROUPS = 1 << 20
+
+_FUSED_DEFAULT = True
+
+
+def use_fused(flag: bool) -> None:
+    """Toggle the fused clean_sample dispatch globally (benchmarks A/B it)."""
+    global _FUSED_DEFAULT
+    _FUSED_DEFAULT = bool(flag)
+
+
+@dataclasses.dataclass(frozen=True)
+class _FusedSpec:
+    """A groupby-sum/count over η-filtered delta rows, fusable in one pass."""
+
+    node: "GroupByNode"
+    fact_name: str  # env name of the delta relation (η already below it)
+    key: str  # single int group-key column (dense ids < num_groups)
+    m: float
+    seed: int
+    pin_name: Optional[str]
+    dim_name: Optional[str] = None  # FK dim relation filtering fact rows
+    dim_key: Optional[str] = None
+    fact_key: Optional[str] = None
+
+
+def _match_fused_groupby(p: Plan, env: Mapping[str, Relation]) -> Optional[_FusedSpec]:
+    """Does ``p`` have the canonical SVC delta-aggregation shape?
+
+    GroupByNode(single int key; sum/count aggs over plain fact columns)
+    over either η(Scan(delta)) or FKJoin(η(Scan(delta)), dim).  The dim-side
+    η the push-down adds in the equality case is subsumed by the fact-side η
+    (same cols/m/seed after the join-key rename), so the fused path probes
+    the unfiltered dim.
+    """
+    if not isinstance(p, GroupByNode) or len(p.keys) != 1:
+        return None
+    key = p.keys[0]
+    for _out, fn, val in p.aggs:
+        if fn not in ("sum", "count"):
+            return None
+        if fn == "sum" and not isinstance(val, str):
+            return None
+
+    child = p.child
+    dim_name = dim_key = fact_key = None
+    if isinstance(child, FKJoin):
+        fact_side, dim_side = child.fact, child.dim
+        dim_inner = dim_side.child if isinstance(dim_side, HashNode) else dim_side
+        if not isinstance(dim_inner, Scan):
+            return None
+        dim_key = child.dim_key or (dim_inner.pk[0] if len(dim_inner.pk) == 1 else None)
+        if dim_key is None:
+            return None
+        if isinstance(dim_side, HashNode):
+            # dropping the dim-side η is only sound in the push-down equality
+            # case: the dim hash is on the join key, the group key IS the
+            # join key, and both sides hash identically — then a kept fact
+            # row's dim partner passes the same predicate on the same value.
+            if not isinstance(fact_side, HashNode):
+                return None
+            if key != child.fact_key or dim_side.cols != (dim_key,):
+                return None
+            if (dim_side.m, dim_side.seed, dim_side.pin_name) != (
+                fact_side.m, fact_side.seed, fact_side.pin_name
+            ):
+                return None
+        dim_name = dim_inner.name
+        fact_key = child.fact_key
+        child = fact_side
+    if not (isinstance(child, HashNode) and isinstance(child.child, Scan)
+            and child.cols == (key,)):
+        return None
+    fact_name = child.child.name
+    fact = env.get(fact_name)
+    if fact is None:
+        return None
+    needed = {key} | {val for _o, fn, val in p.aggs if fn == "sum"}
+    if fact_key is not None:
+        needed.add(fact_key)
+    if not needed <= set(fact.schema.columns):
+        return None
+    if fact.col(key).dtype != jnp.int32:
+        return None
+    return _FusedSpec(
+        node=p, fact_name=fact_name, key=key, m=child.m, seed=child.seed,
+        pin_name=child.pin_name, dim_name=dim_name, dim_key=dim_key,
+        fact_key=fact_key,
+    )
+
+
+@functools.lru_cache(maxsize=256)
+def _fused_eval_fn(spec: _FusedSpec, num_groups: int):
+    """Compiled fused evaluation for one spec + key-domain bound: join-hit
+    filter, pin membership, the fused η+γ pass, and output-relation assembly
+    all live in ONE jitted computation (steady-state refreshes reuse it)."""
+    from repro.core.outliers import member_keys
+    from repro.kernels.fused_clean.ops import fused_clean_groupby
+    from repro.relational.relation import SENTINEL_KEY, from_columns
+
+    sum_cols = tuple(val for _o, fn, val in spec.node.aggs if fn == "sum")
+
+    def fn(fact: Relation, dim: Optional[Relation], pin: Optional[Relation]) -> Relation:
+        keys = fact.col(spec.key)
+        valid = fact.valid
+        if dim is not None:
+            probe = jnp.where(
+                valid, fact.col(spec.fact_key),
+                jnp.asarray(SENTINEL_KEY, fact.col(spec.fact_key).dtype),
+            )
+            _src, hit = ops.fk_hit(dim, spec.dim_key, probe)
+            valid = valid & hit
+        pin_mask = None
+        if pin is not None:
+            pin_keys = tuple(
+                jnp.where(pin.valid, pin.col(c), jnp.asarray(SENTINEL_KEY, pin.col(c).dtype))
+                for c in pin.schema.pk
+            )
+            probe = (jnp.where(valid, keys, jnp.asarray(SENTINEL_KEY, keys.dtype)),)
+            pin_mask = member_keys(probe, pin_keys)
+
+        vals = (
+            jnp.stack([fact.col(c).astype(jnp.float32) for c in sum_cols], axis=1)
+            if sum_cols else jnp.zeros((keys.shape[0], 0), jnp.float32)
+        )
+        counts, sums = fused_clean_groupby(
+            keys, vals, valid, spec.m, spec.seed, num_groups, pin_mask=pin_mask
+        )
+
+        group_valid = counts > 0
+        key_vals = jnp.where(
+            group_valid, jnp.arange(num_groups, dtype=jnp.int32), SENTINEL_KEY
+        )
+        out_cols = {spec.key: key_vals}
+        i = 0
+        for out, fn_name, _val in spec.node.aggs:
+            if fn_name == "count":
+                out_cols[out] = counts
+            else:
+                out_cols[out] = sums[:, i]
+                i += 1
+        rel = from_columns(out_cols, pk=(spec.key,), valid=group_valid)
+        # mirror the unfused groupby's static output capacity (stable shapes
+        # ⇒ the compiled merge remainder is reused across refreshes)
+        return compact(rel, spec.node.num_groups)
+
+    return jax.jit(fn)
+
+
+def _eval_fused_groupby(spec: _FusedSpec, env: Mapping[str, Relation]) -> Optional[Relation]:
+    """One fused pass over the delta rows → the delta-view relation.
+
+    Returns None when the key domain is unbounded (falls back to the plan
+    executor); the single host sync for the bound mirrors the one ingest
+    already pays for delta bucketing.
+    """
+    fact = env[spec.fact_name]
+    keys = fact.col(spec.key)
+    lo, hi = np.asarray(jnp.stack([
+        jnp.min(jnp.where(fact.valid, keys, np.iinfo(np.int32).max)),
+        jnp.max(jnp.where(fact.valid, keys, -1)),
+    ]))  # one host sync for both bounds
+    if int(lo) < 0:  # negative keys never land in the dense accumulator —
+        return None  # the unfused executor handles them; fall back
+    num_groups = _next_pow2_int(max(int(hi) + 1, 64))
+    if num_groups > MAX_FUSED_GROUPS:
+        return None
+    dim = env[spec.dim_name] if spec.dim_name is not None else None
+    pin = env.get(spec.pin_name) if spec.pin_name is not None else None
+    return _fused_eval_fn(spec, num_groups)(fact, dim, pin)
+
+
+def fuse_delta_groupbys(plan: Plan, env: Mapping[str, Relation]):
+    """Splice fused-kernel results in place of fusable delta aggregations.
+
+    Walks the pushed cleaning plan; every sub-tree matching the canonical
+    η+γ shape is evaluated by ``kernels/fused_clean`` and replaced with a
+    Scan of the materialized delta view, leaving only the cheap outer-join
+    merge for the plan executor.  Returns (plan, env) unchanged when nothing
+    qualifies.  Replacement Scan names depend only on the delta leaf name,
+    so steady-state refreshes reuse the compiled merge remainder.
+    """
+    new_env = dict(env)
+    fused_any = False
+
+    def walk(p: Plan) -> Plan:
+        nonlocal fused_any
+        spec = _match_fused_groupby(p, new_env)
+        if spec is not None:
+            rel = _eval_fused_groupby(spec, new_env)
+            if rel is not None:
+                name = "__fused__" + spec.fact_name
+                new_env[name] = rel
+                fused_any = True
+                return Scan(name, pk=(spec.key,))
+            return p
+        if isinstance(p, Scan):
+            return p
+        kw = {}
+        for f in dataclasses.fields(p):
+            v = getattr(p, f.name)
+            kw[f.name] = walk(v) if isinstance(v, Plan) else v
+        return type(p)(**kw)
+
+    new_plan = walk(plan)
+    return (new_plan, new_env) if fused_any else (plan, env)
+
+
 def clean_sample(
     strategy: Plan,
     view_name: str,
@@ -242,16 +460,26 @@ def clean_sample(
     compact_leaves: bool = False,  # §Perf C.3: REFUTED for single-join views
     # (the O(n log n) compaction sort costs more than the join it shrinks);
     # enable for deep multi-join/multi-agg pipelines where downstream >> sort.
+    fused: Optional[bool] = None,  # None ⇒ module default (use_fused)
 ) -> Relation:
     """Ŝ' = C(Ŝ, D, ∂D) — the up-to-date sample at ratio m (Problem 1).
 
     ``stale_sample`` may be the full stale view (η will narrow it) or the
     already-hashed sample (η is idempotent on it, §4.6).
+
+    When ``fused`` (default on), the η-filtered groupby-sum/count delta
+    sub-aggregations of the cleaning plan are evaluated by the fused
+    ``kernels/fused_clean`` Pallas op — hash-threshold + per-group
+    accumulation in one pass, no materialized filtered intermediate — and
+    only the small merge remainder runs through the plan executor.  Plans
+    whose shape or key domain does not qualify fall back transparently.
     """
     plan = cleaning_plan(strategy, view_pk, m, seed, pin_name=pin_name)
     env = delta_env(view_name, stale_sample, deltas)
     if extra_env:
         env.update(extra_env)
+    if fused if fused is not None else _FUSED_DEFAULT:
+        plan, env = fuse_delta_groupbys(plan, env)
     if compact_leaves and pin_name is None:
         plan, env = _compact_eta_leaves(plan, env, m)
     out = execute_jit(plan, env)

@@ -113,11 +113,9 @@ def make_compressed_allreduce(mesh: Mesh, axis: str, quantize: bool = True):
     """jit-able f(x_local_sum) -> global sum over `axis` with int8 hops."""
     n = mesh.shape[axis]
 
-    @functools.partial(
-        jax.shard_map, mesh=mesh, in_specs=P(axis), out_specs=P(axis),
-        check_vma=False,
-    )
+    from repro.compat import shard_map
+
     def f(x):
         return ring_allreduce(x, axis, n, quantize=quantize)
 
-    return f
+    return shard_map(f, mesh, in_specs=P(axis), out_specs=P(axis))

@@ -8,6 +8,10 @@ the paper's profiles (§7: hashing + delta aggregation + estimation):
                     (MXU-native group-by; the TPU adaptation of hash groups)
   corr_diff       — fused correspondence-subtract + moment accumulation
                     (the SVC+CORR inner loop: Σd, Σd², count in one pass)
+  fused_clean     — η hashing + threshold + group-by sum/count in ONE pass
+                    over delta rows (no materialized filtered intermediate);
+                    core/maintenance.clean_sample dispatches to it when the
+                    cleaning plan has the canonical groupby-sum/count shape
   flash_attention — causal online-softmax attention (GQA/MQA aware): the
                     §Roofline memory-term lever — scores stay in VMEM
 

@@ -1,0 +1,105 @@
+"""Pallas kernel: fused η-filter + group-by sum/count over delta rows.
+
+The SVC hot loop (§4.5) is "hash the delta row's view key, keep it if it
+falls under the sample threshold, then fold it into its group's partial
+aggregates".  The unfused pipeline runs that as two kernels with a full
+materialized intermediate (hash_threshold mask → masked relation →
+segment_aggsum); this kernel does both in ONE pass over the delta tile:
+
+  1. splitmix32 the group-key column (bit-identical to hash_threshold) and
+     compare against the threshold — VPU elementwise work;
+  2. OR in the outlier-pin membership mask (Def. 5 rows enter the sample
+     with weight 1 regardless of their hash);
+  3. fold the keep-mask into the one-hot matrix and accumulate
+     ``out[g, :] += onehotᵀ @ [1 | vals]`` on the MXU — column 0 of the
+     output is the kept-row count, columns 1.. are the masked column sums.
+
+No filtered intermediate ever exists: the keep decision lives only in the
+one-hot tile in VMEM.  Grid and accumulation discipline follow
+segment_aggsum: (group_tiles × row_tiles), the out block revisited across
+row tiles (sequential TPU grid ⇒ safe accumulation).
+
+Shapes: gid (R, 1) int32 (−1 ⇒ invalid/padded row, ≥ num_groups ⇒ dropped
+like segment_sum's out-of-range rule); pin (R, 1) int8; vals (R, 1 + C)
+f32 with a leading ones column; out (G, 1 + C) f32.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK_R = 256
+BLOCK_G = 128
+
+
+def _mix(x: jnp.ndarray) -> jnp.ndarray:
+    x = x ^ (x >> 16)
+    x = x * jnp.uint32(0x7FEB352D)
+    x = x ^ (x >> 15)
+    x = x * jnp.uint32(0x846CA68B)
+    x = x ^ (x >> 16)
+    return x
+
+
+def _fused_clean_kernel(seed_mix, thresh, gid_ref, pin_ref, val_ref, out_ref):
+    """``seed_mix``/``thresh`` are baked at trace time (plan-static in SVC)."""
+    gi = pl.program_id(0)  # group tile
+    ri = pl.program_id(1)  # row tile
+
+    @pl.when(ri == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    gid = gid_ref[...]  # (BLOCK_R, 1) int32
+    # η_{a,m}: identical mixer + compare to kernels/hash_threshold
+    h = _mix(jnp.uint32(seed_mix) ^ _mix(gid.astype(jnp.uint32)))
+    u = h.astype(jnp.float32) * jnp.float32(1.0 / 4294967296.0)
+    keep = (u < jnp.float32(thresh)) | (pin_ref[...] != 0)
+    keep = keep & (gid >= 0)
+
+    g0 = gi * BLOCK_G
+    local = gid - g0  # group index within this tile
+    cols = jax.lax.broadcasted_iota(jnp.int32, (gid.shape[0], BLOCK_G), 1)
+    # the η decision folds into the one-hot: kept rows scatter, dropped
+    # rows vanish — this is the "no materialized filtered intermediate"
+    onehot = ((cols == local) & keep).astype(jnp.float32)  # (BLOCK_R, BLOCK_G)
+    out_ref[...] += jax.lax.dot_general(
+        onehot, val_ref[...], (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("seed_mix", "thresh", "num_groups", "interpret"))
+def fused_clean_tiles(
+    gid: jnp.ndarray,
+    pin: jnp.ndarray,
+    vals: jnp.ndarray,
+    seed_mix: int,
+    thresh: float,
+    num_groups: int,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """gid (R,1) int32, pin (R,1) int8, vals (R, 1+C) f32 (R % BLOCK_R == 0);
+    out (num_groups, 1+C) f32 with count in column 0.
+
+    num_groups must be a multiple of BLOCK_G (ops.py pads).
+    """
+    R, C1 = vals.shape
+    grid = (num_groups // BLOCK_G, max(1, R // BLOCK_R))
+    br = min(BLOCK_R, R)
+    return pl.pallas_call(
+        functools.partial(_fused_clean_kernel, seed_mix, thresh),
+        out_shape=jax.ShapeDtypeStruct((num_groups, C1), jnp.float32),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((br, 1), lambda g, r: (r, 0)),
+            pl.BlockSpec((br, 1), lambda g, r: (r, 0)),
+            pl.BlockSpec((br, C1), lambda g, r: (r, 0)),
+        ],
+        out_specs=pl.BlockSpec((BLOCK_G, C1), lambda g, r: (g, 0)),
+        interpret=interpret,
+    )(gid, pin, vals)

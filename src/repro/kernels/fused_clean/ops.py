@@ -1,0 +1,87 @@
+"""jit wrapper: mask/pad delta rows to tile multiples and dispatch.
+
+``fused_clean_groupby`` is the op `core/maintenance.clean_sample` dispatches
+to when the cleaning plan's delta sub-aggregation has the canonical SVC
+shape (group-by-sum/count over η-filtered delta rows on a dense int key).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.fused_clean.kernel import BLOCK_G, BLOCK_R, fused_clean_tiles
+
+# CPU containers run the kernel body in interpret mode; on TPU set False.
+INTERPRET = jax.default_backend() != "tpu"
+
+# Pallas interpret mode walks the grid step by step and is slower than XLA
+# on CPU, so off-TPU the fused op compiles the reference math instead — the
+# same single pass (hash → mask → segmented accumulation, no sort, no
+# materialized filtered relation), just lowered by XLA.  Tests force the
+# Pallas path with ``use_pallas=True`` to check the kernel itself.
+USE_PALLAS = jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("m", "seed", "num_groups"))
+def _fused_ref_path(gid, vals, valid, pin_mask, m, seed, num_groups):
+    from repro.kernels.fused_clean.ref import fused_clean_ref
+
+    return fused_clean_ref(gid, vals, valid, m, seed, num_groups, pin_mask=pin_mask)
+
+
+def fused_clean_groupby(
+    gid: jnp.ndarray,
+    vals: jnp.ndarray,
+    valid: jnp.ndarray,
+    m: float,
+    seed: int,
+    num_groups: int,
+    pin_mask: Optional[jnp.ndarray] = None,
+    use_pallas: Optional[bool] = None,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Fused η_{gid,m} filter + per-group count/sum in one kernel pass.
+
+    gid (R,) int32 group keys (must be < num_groups for rows that should
+    land; others drop like segment_sum); vals (R, C) value columns; valid
+    (R,) row mask; pin_mask (R,) optional outlier-pin membership (kept with
+    weight 1 regardless of hash).  Returns (counts (G,), sums (G, C)).
+    """
+    squeeze = vals.ndim == 1
+    if not (use_pallas if use_pallas is not None else USE_PALLAS):
+        if squeeze:
+            vals = vals[:, None]
+        counts, sums = _fused_ref_path(
+            jnp.asarray(gid, jnp.int32), jnp.asarray(vals, jnp.float32),
+            jnp.asarray(valid, bool),
+            None if pin_mask is None else jnp.asarray(pin_mask, bool),
+            float(m), int(seed), int(num_groups),
+        )
+        return counts, (sums[:, 0] if squeeze else sums)
+    if squeeze:
+        vals = vals[:, None]
+    R, C = vals.shape
+    Rp = ((R + BLOCK_R - 1) // BLOCK_R) * BLOCK_R
+    Gp = ((num_groups + BLOCK_G - 1) // BLOCK_G) * BLOCK_G
+
+    gid_m = jnp.where(jnp.asarray(valid, bool), jnp.asarray(gid, jnp.int32), -1)
+    gid_p = jnp.pad(gid_m, (0, Rp - R), constant_values=-1)[:, None]
+    if pin_mask is None:
+        pin_p = jnp.zeros((Rp, 1), jnp.int8)
+    else:
+        pin_p = jnp.pad(jnp.asarray(pin_mask, jnp.int8), (0, Rp - R))[:, None]
+    ones = jnp.ones((R, 1), jnp.float32)
+    vals_ext = jnp.concatenate([ones, jnp.asarray(vals, jnp.float32)], axis=1)
+    vals_p = jnp.pad(vals_ext, ((0, Rp - R), (0, 0)))
+
+    seed_mix = (0x9E3779B9 * (int(seed) + 1)) & 0xFFFFFFFF
+    out = fused_clean_tiles(
+        gid_p, pin_p, vals_p, seed_mix=seed_mix, thresh=float(m),
+        num_groups=Gp, interpret=INTERPRET,
+    )
+    out = out[:num_groups]
+    counts, sums = out[:, 0], out[:, 1:]
+    return counts, (sums[:, 0] if squeeze else sums)

@@ -1,0 +1,42 @@
+"""Pure-jnp oracle for the fused η-filter + group aggregation kernel.
+
+Composes the two existing oracles (hash_threshold_ref, segment_sum) exactly
+the way the unfused plan executor does — materializing the keep mask — so
+the fused kernel can be checked against the composition.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.hash_threshold.ref import hash_threshold_ref
+
+
+def fused_clean_ref(
+    gid: jnp.ndarray,
+    vals: jnp.ndarray,
+    valid: jnp.ndarray,
+    m: float,
+    seed: int,
+    num_groups: int,
+    pin_mask: Optional[jnp.ndarray] = None,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """gid (R,) int32; vals (R, C) f32; valid (R,) bool; pin_mask (R,) bool.
+
+    Returns (counts (num_groups,) f32, sums (num_groups, C) f32) over the
+    η_{gid,m} sample (∪ pinned rows), dropping invalid / out-of-range rows.
+    """
+    keep = hash_threshold_ref([jnp.asarray(gid, jnp.int32)], m, seed)
+    if pin_mask is not None:
+        keep = keep | jnp.asarray(pin_mask, bool)
+    keep = keep & jnp.asarray(valid, bool)
+    g = jnp.where(keep, jnp.asarray(gid, jnp.int32), num_groups)  # overflow slot
+    nseg = num_groups + 1
+    counts = jax.ops.segment_sum(keep.astype(jnp.float32), g, num_segments=nseg)[:num_groups]
+    sums = jax.ops.segment_sum(
+        jnp.where(keep[:, None], jnp.asarray(vals, jnp.float32), 0.0), g, num_segments=nseg
+    )[:num_groups]
+    return counts, sums

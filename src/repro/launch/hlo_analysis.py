@@ -152,7 +152,11 @@ def _operand_names(ln: str) -> List[str]:
     m = re.search(r"\(([^)]*)\)", ln.split("=", 1)[1] if "=" in ln else ln)
     if not m:
         return []
-    names = []
+    # older jax prints typed operands ("f32[8,256]{1,0} %copy.1"): take the
+    # %-prefixed names, which survive the comma split inside shape brackets
+    names = re.findall(r"%([\w\.\-]+)", m.group(1))
+    if names:
+        return names
     for tok in m.group(1).split(","):
         tok = tok.strip()
         nm = re.match(r"%?([\w\.\-]+)$", tok)

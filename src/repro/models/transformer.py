@@ -171,9 +171,11 @@ def _ffn(x2d, lp, cfg: ArchConfig, ctx: Optional[ParallelCtx]):
         load = jax.lax.psum(load, dp)
         return y.reshape(Bl, Sl, d), load
 
-    y, load = jax.shard_map(
+    from repro.compat import shard_map
+
+    y, load = shard_map(
         inner,
-        mesh=ctx.mesh,
+        ctx.mesh,
         in_specs=(
             P(dp, None, None),
             P(),  # router replicated
@@ -182,7 +184,6 @@ def _ffn(x2d, lp, cfg: ArchConfig, ctx: Optional[ParallelCtx]):
             P(None, tp, None),
         ),
         out_specs=(P(dp, None, None), P()),
-        check_vma=False,
     )(x2d, lp["router"], lp["w_gate"].astype(x2d.dtype), lp["w_up"].astype(x2d.dtype),
       lp["w_down"].astype(x2d.dtype))
     return y, load

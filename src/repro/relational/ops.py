@@ -80,6 +80,13 @@ def _dim_lookup(dim: Relation, dim_key: str, probe: jnp.ndarray):
     return src, hit
 
 
+def fk_hit(dim: Relation, dim_key: str, probe: jnp.ndarray):
+    """Public FK-membership probe: (dim row indices, hit mask) for ``probe``
+    against dim's unique key column.  The fused clean_sample dispatch uses
+    the hit mask alone to fold the join's filtering into its row validity."""
+    return _dim_lookup(dim, dim_key, probe)
+
+
 def fk_join(
     fact: Relation,
     dim: Relation,

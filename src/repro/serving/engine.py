@@ -8,7 +8,10 @@ for that slot's prompt and splices the resulting KV into the pool cache.
 Serving telemetry (per-tick active slots, emitted tokens, per-request
 latency) streams into an SVC ViewManager view — the Conviva-style
 "summary statistics on logs" workload of §7.5, answered fresh between
-maintenance periods.
+maintenance periods.  Pass a ``repro.streaming.StreamingViewService`` as
+``telemetry`` and every decode tick offers a micro-batch row into its
+DeltaLog; dashboard queries then run against the watermark-refreshed
+sample with staleness metadata instead of scanning raw logs.
 """
 
 from __future__ import annotations
@@ -37,7 +40,10 @@ class Request:
 
 class ServeEngine:
     def __init__(self, model: Model, params, max_batch: int, max_seq: int,
-                 eos_id: Optional[int] = None):
+                 eos_id: Optional[int] = None, telemetry=None,
+                 telemetry_base: str = "ServeLog"):
+        self.telemetry = telemetry  # StreamingViewService (optional)
+        self.telemetry_base = telemetry_base
         self.model = model
         self.params = params
         self.B = max_batch
@@ -113,7 +119,25 @@ class ServeEngine:
                 req.t_done = time.perf_counter()
                 self.completed.append(req)
                 self.slots[i] = None
+        if self.telemetry is not None:
+            self._offer_telemetry(len(active), emitted)
         return emitted
+
+    def _offer_telemetry(self, active: int, emitted: int) -> None:
+        """One micro-batch row per decode tick into the streaming DeltaLog;
+        the watermark decides when the telemetry view's sample refreshes."""
+        from repro.relational.relation import from_columns
+
+        row = from_columns(
+            {
+                "tickId": np.array([self.ticks], np.int32),
+                "active": np.array([active], np.float32),
+                "emitted": np.array([emitted], np.float32),
+                "queued": np.array([len(self.queue)], np.float32),
+            },
+            pk=["tickId"],
+        )
+        self.telemetry.offer(self.telemetry_base, inserts=row, seq=self.ticks)
 
     def run(self, max_ticks: int = 10_000) -> List[Request]:
         while (self.queue or any(s is not None for s in self.slots)) and max_ticks:

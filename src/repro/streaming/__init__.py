@@ -1,0 +1,27 @@
+"""Streaming sample-refresh engine (continuous-traffic SVC).
+
+DeltaLog buffers out-of-order micro-batches under a memory bound;
+StreamingViewService drains them into svc_refresh on size/age watermarks
+and answers queries with staleness metadata.  PartitionedDeltaLog is the
+§7.5 sharded variant whose per-partition drains feed the psum-merged delta
+aggregation in core/distributed_svc.
+"""
+
+from repro.streaming.delta_log import Backpressure, DeltaLog, MicroBatch, PartitionedDeltaLog
+from repro.streaming.service import (
+    StalenessInfo,
+    StreamConfig,
+    StreamedEstimate,
+    StreamingViewService,
+)
+
+__all__ = [
+    "Backpressure",
+    "DeltaLog",
+    "MicroBatch",
+    "PartitionedDeltaLog",
+    "StalenessInfo",
+    "StreamConfig",
+    "StreamedEstimate",
+    "StreamingViewService",
+]

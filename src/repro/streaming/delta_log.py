@@ -1,0 +1,184 @@
+"""DeltaLog: bounded ring buffer of out-of-order delta micro-batches.
+
+Continuous traffic does not arrive as tidy whole-batch ``ingest`` calls:
+producers emit micro-batches with sequence numbers that can be reordered in
+flight (sharded collectors, retries).  The DeltaLog absorbs them into a
+bounded ring, tracks size/age watermarks, and — when the engine drains it —
+coalesces everything back into ONE insert and ONE delete relation in
+sequence order, so the downstream cleaning plan sees exactly the batch
+semantics it was built for (later sequence numbers win per primary key,
+matching the update = delete + insert rule of §3.1).
+
+Bounded memory is the S/C-style invariant: the ring holds at most
+``max_batches`` micro-batches; offering into a full ring raises
+``Backpressure`` so the caller must drain (refresh) first — staleness is
+surfaced, never silently unbounded.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, List, Optional, Tuple
+
+from repro.relational.relation import Relation, compact
+
+
+class Backpressure(RuntimeError):
+    """The ring is full; drain (refresh) before offering more batches."""
+
+
+@dataclasses.dataclass
+class MicroBatch:
+    seq: int
+    inserts: Optional[Relation]
+    deletes: Optional[Relation]
+    t_arrival: float
+    n_rows: int = 0  # valid-row count, cached at offer time (one host sync)
+
+    def rows(self) -> int:
+        return self.n_rows
+
+
+def _host_count(rel: Relation) -> int:
+    import numpy as np
+
+    return int(np.asarray(rel.valid).sum())
+
+
+class DeltaLog:
+    """Per-base-relation bounded log of out-of-order micro-batches."""
+
+    def __init__(
+        self,
+        base: str,
+        max_batches: int = 64,
+        clock: Callable[[], float] = time.monotonic,
+    ):
+        self.base = base
+        self.max_batches = int(max_batches)
+        self._clock = clock
+        self._ring: List[MicroBatch] = []
+        self._auto_seq = 0
+        self.high_seq = -1  # highest sequence number ever offered
+        self.drained_through_seq = -1  # highest seq included in a drain
+        self.total_offered = 0  # rows, lifetime
+
+    # -- producer side -------------------------------------------------------
+    def offer(
+        self,
+        inserts: Optional[Relation] = None,
+        deletes: Optional[Relation] = None,
+        seq: Optional[int] = None,
+    ) -> MicroBatch:
+        """Append a micro-batch; ``seq`` may arrive out of order (coalescing
+        restores sequence order).  Raises Backpressure when the ring is full."""
+        if inserts is None and deletes is None:
+            raise ValueError("empty micro-batch")
+        if len(self._ring) >= self.max_batches:
+            raise Backpressure(
+                f"DeltaLog[{self.base}] full ({self.max_batches} batches); drain first"
+            )
+        if seq is None:
+            seq = self._auto_seq
+        self._auto_seq = max(self._auto_seq, seq) + 1
+        n = sum(_host_count(r) for r in (inserts, deletes) if r is not None)
+        mb = MicroBatch(int(seq), inserts, deletes, self._clock(), n_rows=n)
+        self._ring.append(mb)
+        self.high_seq = max(self.high_seq, mb.seq)
+        self.total_offered += mb.rows()
+        return mb
+
+    # -- watermark state -----------------------------------------------------
+    def pending_batches(self) -> int:
+        return len(self._ring)
+
+    def pending_rows(self) -> int:
+        return sum(mb.rows() for mb in self._ring)
+
+    def oldest_age_s(self, now: Optional[float] = None) -> float:
+        if not self._ring:
+            return 0.0
+        now = self._clock() if now is None else now
+        return now - min(mb.t_arrival for mb in self._ring)
+
+    # -- consumer side -------------------------------------------------------
+    def drain(self) -> Tuple[Optional[Relation], Optional[Relation]]:
+        """Coalesce and clear the ring: (inserts, deletes) in seq order.
+
+        Batches are replayed lowest-seq first; per primary key the HIGHEST
+        sequence number wins (``union_keyed`` gives left priority, so we fold
+        newer batches over older ones).
+        """
+        if not self._ring:
+            return None, None
+        batches = sorted(self._ring, key=lambda mb: mb.seq)
+        self._ring = []
+        self.drained_through_seq = max(self.drained_through_seq, batches[-1].seq)
+        ins = _coalesce([mb.inserts for mb in batches if mb.inserts is not None])
+        dels = _coalesce([mb.deletes for mb in batches if mb.deletes is not None])
+        return ins, dels
+
+
+def _coalesce(rels: List[Relation]) -> Optional[Relation]:
+    """Merge batches oldest→newest in ONE pass: newer rows win per pk.
+
+    All rows concatenate with a per-batch priority; one lexsort by
+    (pk, priority) groups duplicates with the newest last, which a
+    run-boundary mask then keeps — one sort + one compact + one host sync
+    regardless of batch count (vs folding pairwise, quadratic in the ring)."""
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.core.maintenance import _next_pow2_int
+    from repro.relational.relation import (
+        SENTINEL_KEY,
+        keys_equal,
+        lexsort_indices,
+        masked_keys,
+    )
+
+    if not rels:
+        return None
+    if len(rels) == 1:
+        return rels[0]
+    schema = rels[0].schema
+    cols = {c: jnp.concatenate([r.col(c) for r in rels]) for c in schema.columns}
+    valid = jnp.concatenate([r.valid for r in rels])
+    prio = jnp.concatenate(
+        [jnp.full((r.capacity,), i, jnp.int32) for i, r in enumerate(rels)]
+    )
+    merged = Relation(cols, valid, schema)
+    keys = masked_keys(merged)
+    order = lexsort_indices(keys, prio)  # by pk, newest (highest prio) last
+    sk = tuple(k[order] for k in keys)
+    nxt = tuple(
+        jnp.concatenate([k[1:], jnp.full((1,), SENTINEL_KEY, k.dtype)]) for k in sk
+    )
+    keep = valid[order] & ~keys_equal(sk, nxt)  # last occurrence per pk wins
+    out = Relation({c: v[order] for c, v in cols.items()}, keep, schema)
+    n = int(np.asarray(keep.sum()))
+    return compact(out, _next_pow2_int(max(n, 1)))
+
+
+class PartitionedDeltaLog:
+    """§7.5: one DeltaLog per data shard; drained per-partition and merged
+    by the sharded (psum) delta aggregation rather than by row shuffling."""
+
+    def __init__(self, base: str, n_shards: int, max_batches: int = 64,
+                 clock: Callable[[], float] = time.monotonic):
+        self.base = base
+        self.shards = [
+            DeltaLog(f"{base}[{i}]", max_batches=max_batches, clock=clock)
+            for i in range(n_shards)
+        ]
+
+    def offer(self, shard: int, inserts: Optional[Relation] = None,
+              deletes: Optional[Relation] = None, seq: Optional[int] = None):
+        return self.shards[shard].offer(inserts=inserts, deletes=deletes, seq=seq)
+
+    def pending_rows(self) -> int:
+        return sum(s.pending_rows() for s in self.shards)
+
+    def drain(self) -> List[Tuple[Optional[Relation], Optional[Relation]]]:
+        return [s.drain() for s in self.shards]

@@ -1,0 +1,158 @@
+"""Streaming refresh engine: DeltaLog → watermark → fused clean_sample.
+
+``StreamingViewService`` is the continuous-traffic face of the §3.2
+workflow.  Producers ``offer`` micro-batches (possibly out of order); the
+service buffers them in per-base DeltaLogs and triggers ``svc_refresh`` —
+which dispatches to the fused clean_sample kernel when the plan shape
+allows — whenever a size or age watermark trips.  Queries are answered from
+the freshest refreshed sample and carry staleness metadata so callers can
+see exactly what the estimate does not yet reflect.
+
+Correctness under reordering is free: cleaning always recomputes Ŝ' from
+the stale sample plus the FULL pending delta set (§4.5), so a late
+micro-batch that misses one refresh window is simply folded into the next —
+no tombstones, no replay protocol.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Dict, Optional
+
+from repro.core.estimators import Estimate, Query
+from repro.streaming.delta_log import Backpressure, DeltaLog
+
+
+@dataclasses.dataclass(frozen=True)
+class StreamConfig:
+    """Watermark and buffering knobs for the streaming refresh loop."""
+
+    max_rows: int = 4096  # size watermark: refresh once this many rows pend
+    max_age_s: float = 0.5  # age watermark: refresh once a batch is this old
+    max_batches: int = 64  # DeltaLog ring bound (Backpressure beyond it)
+    auto_refresh: bool = True  # refresh inline when a watermark trips
+    fused: Optional[bool] = None  # forwarded to svc_refresh (None = default)
+
+
+@dataclasses.dataclass
+class StalenessInfo:
+    """What the latest refreshed sample does NOT yet reflect."""
+
+    pending_rows: int
+    pending_batches: int
+    oldest_pending_s: float
+    refresh_age_s: float  # seconds since the last svc_refresh (-1: never)
+    refreshed_through_seq: Dict[str, int]  # per base: highest seq cleaned in
+    watermark_due: bool
+
+
+@dataclasses.dataclass
+class StreamedEstimate:
+    """An Estimate plus the staleness metadata it was answered under."""
+
+    estimate: Estimate
+    staleness: StalenessInfo
+
+    @property
+    def value(self):
+        return self.estimate.value
+
+    def __iter__(self):  # (value, lo, hi) convenience, like Estimate
+        return iter(self.estimate)
+
+
+class StreamingViewService:
+    """Wraps a ViewManager with log-buffered ingest + watermark refresh."""
+
+    def __init__(self, vm, config: Optional[StreamConfig] = None,
+                 clock: Callable[[], float] = time.monotonic):
+        self.vm = vm
+        self.config = config or StreamConfig()
+        self._clock = clock
+        self.logs: Dict[str, DeltaLog] = {}
+        self._last_refresh: Optional[float] = None
+        self.refresh_count = 0
+
+    def _log(self, base: str) -> DeltaLog:
+        if base not in self.logs:
+            self.logs[base] = DeltaLog(
+                base, max_batches=self.config.max_batches, clock=self._clock
+            )
+        return self.logs[base]
+
+    # -- producer side -------------------------------------------------------
+    def offer(self, base: str, inserts=None, deletes=None, seq: Optional[int] = None) -> bool:
+        """Buffer a micro-batch; returns True if this offer triggered a
+        refresh (watermark trip or ring backpressure)."""
+        log = self._log(base)
+        try:
+            log.offer(inserts=inserts, deletes=deletes, seq=seq)
+        except Backpressure:
+            self.refresh()
+            log.offer(inserts=inserts, deletes=deletes, seq=seq)
+            return True
+        if self.config.auto_refresh and self.watermark_due():
+            self.refresh()
+            return True
+        return False
+
+    # -- watermarks ----------------------------------------------------------
+    def watermark_due(self) -> bool:
+        now = self._clock()
+        for log in self.logs.values():
+            if log.pending_batches() == 0:
+                continue
+            if log.pending_rows() >= self.config.max_rows:
+                return True
+            if log.oldest_age_s(now) >= self.config.max_age_s:
+                return True
+        return False
+
+    # -- refresh -------------------------------------------------------------
+    def refresh(self) -> float:
+        """Drain every log into the ViewManager and clean all affected
+        samples; returns total svc_refresh wall time (seconds)."""
+        touched = set()
+        for base, log in self.logs.items():
+            ins, dels = log.drain()
+            if ins is None and dels is None:
+                continue
+            self.vm._ingest_pending(base, inserts=ins, deletes=dels)
+            touched.add(base)
+        total = 0.0
+        for name, mv in self.vm.views.items():
+            if touched & set(mv.delta_bases):
+                total += self.vm.svc_refresh(name, fused=self.config.fused)
+        self._last_refresh = self._clock()
+        self.refresh_count += 1
+        return total
+
+    # -- consumer side -------------------------------------------------------
+    def staleness(self) -> StalenessInfo:
+        now = self._clock()
+        return StalenessInfo(
+            pending_rows=sum(l.pending_rows() for l in self.logs.values()),
+            pending_batches=sum(l.pending_batches() for l in self.logs.values()),
+            oldest_pending_s=max(
+                (l.oldest_age_s(now) for l in self.logs.values()), default=0.0
+            ),
+            refresh_age_s=(
+                -1.0 if self._last_refresh is None else now - self._last_refresh
+            ),
+            refreshed_through_seq={
+                b: l.drained_through_seq for b, l in self.logs.items()
+            },
+            watermark_due=self.watermark_due(),
+        )
+
+    def query(self, view_name: str, q: Query, **kw) -> StreamedEstimate:
+        """Answer from the freshest refreshed sample, with staleness attached.
+
+        With ``auto_refresh``, a due watermark is honored before answering so
+        the response never straddles a missed deadline.
+        """
+        if self.config.auto_refresh and self.watermark_due():
+            self.refresh()
+        est = self.vm.query(view_name, q, **kw)
+        return StreamedEstimate(estimate=est, staleness=self.staleness())

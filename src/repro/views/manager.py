@@ -65,6 +65,17 @@ class ViewManager:
         self.base: Dict[str, Relation] = {}
         self.views: Dict[str, ManagedView] = {}
         self.pending = DeltaSet()
+        self.stream = None  # StreamingViewService once configure_streaming ran
+
+    # -- streaming -----------------------------------------------------------
+    def configure_streaming(self, config=None):
+        """Route ``ingest`` through the streaming engine: micro-batches are
+        buffered in bounded DeltaLogs and ``svc_refresh`` fires on size/age
+        watermarks instead of manual calls (repro.streaming)."""
+        from repro.streaming import StreamConfig, StreamingViewService
+
+        self.stream = StreamingViewService(self, config or StreamConfig())
+        return self.stream
 
     # -- registration --------------------------------------------------------
     def register_base(self, name: str, rel: Relation) -> None:
@@ -135,7 +146,18 @@ class ViewManager:
         mv.clean_sample = mv.stale_sample
 
     # -- delta ingestion -----------------------------------------------------
-    def ingest(self, base: str, inserts: Optional[Relation] = None, deletes: Optional[Relation] = None):
+    def ingest(self, base: str, inserts: Optional[Relation] = None,
+               deletes: Optional[Relation] = None, seq: Optional[int] = None):
+        """Ingest a delta batch.  With streaming configured, the batch lands
+        in the DeltaLog (``seq`` orders out-of-order producers) and refresh
+        happens on watermarks; otherwise it goes straight into the pending
+        set and the caller refreshes manually."""
+        if self.stream is not None:
+            return self.stream.offer(base, inserts=inserts, deletes=deletes, seq=seq)
+        return self._ingest_pending(base, inserts=inserts, deletes=deletes)
+
+    def _ingest_pending(self, base: str, inserts: Optional[Relation] = None,
+                        deletes: Optional[Relation] = None):
         if inserts is not None:
             cur = self.pending.inserts.get(base)
             self.pending.inserts[base] = _concat(cur, inserts) if cur is not None else inserts
@@ -161,7 +183,12 @@ class ViewManager:
         return out
 
     # -- SVC: clean the samples only (cheap, between maintenance periods) ----
-    def svc_refresh(self, view_name: str) -> float:
+    def svc_refresh(self, view_name: str, fused: Optional[bool] = None) -> float:
+        """Clean the view's sample from the pending deltas (Problem 1).
+
+        ``fused`` routes the delta aggregation through the single-pass
+        kernels/fused_clean op (None = module default; it falls back to the
+        plan executor when the plan shape does not qualify)."""
         mv = self.views[view_name]
         t0 = time.perf_counter()
         if mv.outlier_index is not None:
@@ -182,6 +209,7 @@ class ViewManager:
             extra_env=extra,
             out_capacity=mv.sample_capacity,
             pin_name=pin_name,
+            fused=fused,
         )
         mv.clean_sample = flag_outliers(mv.clean_sample, mv.outlier_pin)
         mv.stale_sample = flag_outliers(mv.stale_sample, mv.outlier_pin)
@@ -224,6 +252,11 @@ class ViewManager:
         return dt
 
     def maintain_all(self) -> float:
+        if self.stream is not None:  # fold still-buffered micro-batches in
+            for base, log in self.stream.logs.items():
+                ins, dels = log.drain()
+                if ins is not None or dels is not None:
+                    self._ingest_pending(base, inserts=ins, deletes=dels)
         total = 0.0
         for name in self.views:
             total += self.maintain(name)

@@ -26,8 +26,11 @@ os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import jax, jax.numpy as jnp
 from jax.sharding import PartitionSpec as P, NamedSharding
 from repro.launch.hlo_analysis import analyze
-mesh = jax.make_mesh((2, 4), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+if hasattr(jax.sharding, "AxisType"):
+    mesh = jax.make_mesh((2, 4), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+else:  # older jax: Auto is the only behaviour, no axis_types kwarg
+    mesh = jax.make_mesh((2, 4), ("data", "model"))
 L, D, B = 12, 256, 16
 Ws = jax.ShapeDtypeStruct((L, D, D), jnp.float32,
                           sharding=NamedSharding(mesh, P(None, "data", "model")))

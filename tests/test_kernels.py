@@ -3,7 +3,7 @@
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from tests._hypothesis_compat import given, settings, st
 
 from repro.kernels.corr_diff.ops import corr_moments
 from repro.kernels.corr_diff.ref import corr_diff_ref
@@ -78,6 +78,211 @@ def test_pallas_dispatch_switch():
     finally:
         K.disable()
     assert np.array_equal(base, pal)
+
+
+# ---------------------------------------------------------------------------
+# fused clean_sample (η filter + group sum/count in one pass)
+# ---------------------------------------------------------------------------
+
+from repro.kernels.fused_clean.ops import fused_clean_groupby
+from repro.kernels.fused_clean.ref import fused_clean_ref
+
+
+@pytest.mark.parametrize("shape", [(1, 64), (300, 100), (5000, 700), (257, 129)])
+@pytest.mark.parametrize("pin_density", [0.0, 0.05])
+def test_fused_clean_matches_ref(shape, pin_density):
+    R, G = shape
+    rng = np.random.default_rng(R + G)
+    gid = jnp.asarray(rng.integers(0, G, R).astype(np.int32))
+    vals = jnp.asarray(rng.normal(size=(R, 3)).astype(np.float32))
+    valid = jnp.asarray(rng.random(R) < 0.9)
+    pin = jnp.asarray(rng.random(R) < pin_density) if pin_density else None
+    # use_pallas=True: exercise the kernel body (interpret mode on CPU)
+    c1, s1 = fused_clean_groupby(gid, vals, valid, 0.3, 7, G, pin_mask=pin,
+                                 use_pallas=True)
+    c2, s2 = fused_clean_ref(gid, vals, valid, 0.3, 7, G, pin_mask=pin)
+    assert np.array_equal(np.asarray(c1), np.asarray(c2))  # counts: exact
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s2), rtol=1e-5, atol=1e-4)
+
+
+def test_fused_clean_drops_out_of_range_and_invalid():
+    gid = jnp.asarray(np.array([0, 1, 99, -1, 1], np.int32))
+    vals = jnp.ones((5, 1), jnp.float32)
+    valid = jnp.asarray(np.array([True, True, True, True, False]))
+    c, s = fused_clean_groupby(gid, vals, valid, 1.0, 0, 2, use_pallas=True)
+    np.testing.assert_array_equal(np.asarray(c), [1.0, 1.0])
+    np.testing.assert_array_equal(np.asarray(s)[:, 0], [1.0, 1.0])
+
+
+def _clean_scenario(integer_bytes: bool, m=0.2, seed=5, n_videos=300, n_logs=6000):
+    """visitView scenario; integer-valued bytes make float sums order-exact."""
+    from repro.core import ViewDef
+    from repro.data.synthetic import grow_log, make_log_video
+    from repro.relational.plan import FKJoin, GroupByNode, Scan
+    from repro.relational.relation import from_columns, to_host
+    from repro.views import ViewManager
+
+    rng = np.random.default_rng(1)
+    log, video = make_log_video(rng, n_videos, n_logs)
+    delta = grow_log(rng, n_videos, n_logs, 1500)
+    if integer_bytes:
+        def intify(rel):
+            h = to_host(rel)
+            h["bytes"] = np.round(h["bytes"]).astype(np.float32)
+            return from_columns(h, pk=rel.schema.pk)
+
+        log, delta = intify(log), intify(delta)
+    plan = GroupByNode(
+        child=FKJoin(fact=Scan("Log", pk=("sessionId",)),
+                     dim=Scan("Video", pk=("videoId",)), fact_key="videoId"),
+        keys=("videoId",),
+        aggs=(("visitCount", "count", None), ("totalBytes", "sum", "bytes")),
+        num_groups=512,
+    )
+    vm = ViewManager()
+    vm.register_base("Log", log)
+    vm.register_base("Video", video)
+    vm.register_view(ViewDef("v", plan), delta_bases=("Log",), m=m, seed=seed,
+                     delta_group_capacity=512)
+    vm.ingest("Log", inserts=delta)
+    return vm
+
+
+def _sorted_host(rel):
+    from repro.relational.relation import to_host
+
+    h = to_host(rel)
+    order = np.argsort(h["videoId"], kind="stable")
+    return {k: v[order] for k, v in h.items()}
+
+
+def test_fused_clean_sample_bitexact_vs_plan_executor():
+    """Acceptance: fused dispatch == unfused plan path bit-for-bit on the
+    sum/count group aggregates (integer-valued data ⇒ order-independent)."""
+    vm_f = _clean_scenario(integer_bytes=True)
+    vm_u = _clean_scenario(integer_bytes=True)
+    vm_f.svc_refresh("v", fused=True)
+    vm_u.svc_refresh("v", fused=False)
+    a = _sorted_host(vm_f.views["v"].clean_sample)
+    b = _sorted_host(vm_u.views["v"].clean_sample)
+    assert set(a) == set(b)
+    for col in ("videoId", "visitCount", "totalBytes"):
+        assert np.array_equal(a[col], b[col]), col
+
+
+def test_fused_clean_sample_parity_continuous():
+    """Continuous values: identical sample membership, sums to fp tolerance."""
+    vm_f = _clean_scenario(integer_bytes=False)
+    vm_u = _clean_scenario(integer_bytes=False)
+    vm_f.svc_refresh("v", fused=True)
+    vm_u.svc_refresh("v", fused=False)
+    a = _sorted_host(vm_f.views["v"].clean_sample)
+    b = _sorted_host(vm_u.views["v"].clean_sample)
+    assert np.array_equal(a["videoId"], b["videoId"])
+    assert np.array_equal(a["visitCount"], b["visitCount"])
+    np.testing.assert_allclose(a["totalBytes"], b["totalBytes"], rtol=1e-5)
+
+
+def test_fused_clean_sample_outlier_pin_stratum():
+    """The pin set (Def. 5) enters the sample with weight 1 on both paths."""
+    vm_f = _clean_scenario(integer_bytes=True)
+    vm_u = _clean_scenario(integer_bytes=True)
+    for vm in (vm_f, vm_u):
+        vm.register_outlier_index("v", "Log", "bytes", k=40)
+    vm_f.svc_refresh("v", fused=True)
+    vm_u.svc_refresh("v", fused=False)
+    a = _sorted_host(vm_f.views["v"].clean_sample)
+    b = _sorted_host(vm_u.views["v"].clean_sample)
+    assert np.array_equal(a["videoId"], b["videoId"])
+    assert np.array_equal(a["visitCount"], b["visitCount"])
+    assert np.array_equal(a["totalBytes"], b["totalBytes"])
+    # the weight-1 stratum is flagged identically and non-empty
+    assert np.array_equal(a["__outlier"], b["__outlier"])
+    assert a["__outlier"].sum() > 0
+
+
+def test_fused_dispatch_falls_back_on_negative_keys():
+    """Negative group keys never land in the dense accumulator; the
+    dispatcher must fall back so fused == unfused on such views."""
+    from repro.core import ViewDef
+    from repro.relational.plan import GroupByNode, Scan
+    from repro.relational.relation import from_columns
+    from repro.views import ViewManager
+
+    def build():
+        base = from_columns(
+            {"k": np.array([-3, 0, 1, 2], np.int32),
+             "v": np.array([1.0, 2.0, 3.0, 4.0], np.float32),
+             "rid": np.arange(4, dtype=np.int32)},
+            pk=["rid"],
+        )
+        plan = GroupByNode(child=Scan("T", pk=("rid",)), keys=("k",),
+                           aggs=(("total", "sum", "v"), ("n", "count", None)),
+                           num_groups=64)
+        vm = ViewManager()
+        vm.register_base("T", base)
+        vm.register_view(ViewDef("neg", plan), delta_bases=("T",), m=1.0,
+                         delta_group_capacity=64)
+        delta = from_columns(
+            {"k": np.array([-3, 5], np.int32),
+             "v": np.array([10.0, 20.0], np.float32),
+             "rid": np.array([100, 101], np.int32)},
+            pk=["rid"],
+        )
+        vm.ingest("T", inserts=delta)
+        return vm
+
+    vm_f, vm_u = build(), build()
+    vm_f.svc_refresh("neg", fused=True)
+    vm_u.svc_refresh("neg", fused=False)
+    from repro.relational.relation import to_host
+
+    def rows(vm):
+        h = to_host(vm.views["neg"].clean_sample)
+        order = np.argsort(h["k"], kind="stable")
+        return {c: v[order] for c, v in h.items()}
+
+    a, b = rows(vm_f), rows(vm_u)
+    assert np.array_equal(a["k"], b["k"])  # group -3 must survive both paths
+    assert -3 in a["k"].tolist()
+    assert np.array_equal(a["total"], b["total"])
+    assert np.array_equal(a["n"], b["n"])
+
+
+def test_fused_dispatch_falls_back_on_nonfusable_plan():
+    """Views whose delta aggregation is not groupby-sum/count over η-filtered
+    rows (here: mean agg) take the plan-executor path under fused=True."""
+    from repro.core import ViewDef
+    from repro.core.maintenance import cleaning_plan, _match_fused_groupby
+    from repro.data.synthetic import make_log_video
+    from repro.relational.plan import FKJoin, GroupByNode, Scan
+
+    rng = np.random.default_rng(2)
+    log, video = make_log_video(rng, 100, 1000)
+    plan = GroupByNode(
+        child=FKJoin(fact=Scan("Log", pk=("sessionId",)),
+                     dim=Scan("Video", pk=("videoId",)), fact_key="videoId"),
+        keys=("videoId",),
+        aggs=(("avgBytes", "mean", "bytes"),),
+        num_groups=256,
+    )
+    cp = cleaning_plan(plan, ("videoId",), 0.2, 5)
+
+    def walk(p):
+        import dataclasses as dc
+        from repro.relational.plan import Plan
+
+        found = _match_fused_groupby(p, {"Log": log, "Video": video})
+        if found is not None:
+            return [found]
+        out = []
+        for f in dc.fields(p):
+            v = getattr(p, f.name)
+            if isinstance(v, Plan):
+                out.extend(walk(v))
+        return out
+
+    assert walk(cp) == []  # nothing fusable: mean is not sum/count
 
 
 # ---------------------------------------------------------------------------

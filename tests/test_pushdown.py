@@ -8,7 +8,7 @@ the η un-pushed but still correct.
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from tests._hypothesis_compat import given, settings, st
 
 from repro.core.pushdown import fully_pushed, push_down
 from repro.relational import from_columns

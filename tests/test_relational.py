@@ -2,7 +2,7 @@
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from tests._hypothesis_compat import given, settings, st
 
 from repro.relational import from_columns, ops
 from repro.relational.expr import Col, Lit, Cmp, Bin

@@ -1,0 +1,289 @@
+"""Streaming refresh engine: watermarks, out-of-order coalescing, staleness.
+
+DeltaLog/StreamingViewService semantics plus the end-to-end guarantee that
+a watermark-triggered streaming refresh answers exactly like the manual
+ingest-then-refresh flow it replaces.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import Query, ViewDef
+from repro.data.synthetic import grow_log, make_log_video
+from repro.relational.plan import FKJoin, GroupByNode, Scan
+from repro.relational.relation import from_columns, to_host
+from repro.streaming import (
+    Backpressure,
+    DeltaLog,
+    PartitionedDeltaLog,
+    StreamConfig,
+)
+from repro.views import ViewManager
+
+from tests import oracle
+
+
+class FakeClock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+
+def _rel(pks, vals):
+    return from_columns(
+        {"k": np.asarray(pks, np.int32), "v": np.asarray(vals, np.float32)},
+        pk=["k"],
+    )
+
+
+def _visit_vm(seed=5, m=0.2):
+    rng = np.random.default_rng(0)
+    log, video = make_log_video(rng, 300, 6000)
+    plan = GroupByNode(
+        child=FKJoin(fact=Scan("Log", pk=("sessionId",)),
+                     dim=Scan("Video", pk=("videoId",)), fact_key="videoId"),
+        keys=("videoId",),
+        aggs=(("visitCount", "count", None), ("totalBytes", "sum", "bytes")),
+        num_groups=512,
+    )
+    vm = ViewManager()
+    vm.register_base("Log", log)
+    vm.register_base("Video", video)
+    vm.register_view(ViewDef("v", plan), delta_bases=("Log",), m=m, seed=seed,
+                     delta_group_capacity=512)
+    return vm, rng
+
+
+# ---------------------------------------------------------------------------
+# DeltaLog
+# ---------------------------------------------------------------------------
+
+def test_delta_log_coalesces_out_of_order_latest_wins():
+    log = DeltaLog("t")
+    log.offer(inserts=_rel([1, 2], [10.0, 20.0]), seq=2)  # newest, first to arrive
+    log.offer(inserts=_rel([2, 3], [99.0, 30.0]), seq=0)
+    log.offer(inserts=_rel([3], [31.0]), seq=1)
+    ins, dels = log.drain()
+    assert dels is None
+    rows = to_host(ins)
+    got = dict(zip(rows["k"].tolist(), rows["v"].tolist()))
+    # seq order 0,1,2: k=2 finally 20.0 (seq 2 beats seq 0), k=3 is 31.0 (seq 1)
+    assert got == {1: 10.0, 2: 20.0, 3: 31.0}
+    assert log.drained_through_seq == 2
+    assert log.pending_batches() == 0
+
+
+def test_delta_log_age_and_row_accounting():
+    clock = FakeClock()
+    log = DeltaLog("t", clock=clock)
+    log.offer(inserts=_rel([1], [1.0]))
+    clock.t = 3.0
+    log.offer(inserts=_rel([2, 3], [1.0, 1.0]))
+    assert log.pending_rows() == 3
+    assert log.oldest_age_s() == pytest.approx(3.0)
+    log.drain()
+    assert log.pending_rows() == 0 and log.oldest_age_s() == 0.0
+
+
+def test_delta_log_backpressure_bounds_memory():
+    log = DeltaLog("t", max_batches=2)
+    log.offer(inserts=_rel([1], [1.0]))
+    log.offer(inserts=_rel([2], [1.0]))
+    with pytest.raises(Backpressure):
+        log.offer(inserts=_rel([3], [1.0]))
+    log.drain()
+    log.offer(inserts=_rel([3], [1.0]))  # fine after drain
+
+
+# ---------------------------------------------------------------------------
+# StreamingViewService watermarks + staleness metadata
+# ---------------------------------------------------------------------------
+
+def test_size_watermark_triggers_refresh():
+    vm, rng = _visit_vm()
+    svc = vm.configure_streaming(StreamConfig(max_rows=500, max_age_s=1e9))
+    assert vm.ingest("Log", inserts=grow_log(rng, 300, 6000, 300), seq=0) is False
+    assert svc.staleness().pending_rows == 300
+    assert svc.staleness().watermark_due is False
+    triggered = vm.ingest("Log", inserts=grow_log(rng, 300, 6300, 300), seq=1)
+    assert triggered is True
+    st = svc.staleness()
+    assert st.pending_rows == 0
+    assert st.refreshed_through_seq["Log"] == 1
+    assert svc.refresh_count == 1
+
+
+def test_age_watermark_triggers_refresh():
+    vm, rng = _visit_vm()
+    clock = FakeClock()
+    svc = vm.configure_streaming(StreamConfig(max_rows=10**9, max_age_s=5.0))
+    svc._clock = clock
+    vm.ingest("Log", inserts=grow_log(rng, 300, 6000, 100), seq=0)
+    assert svc.refresh_count == 0
+    clock.t = 6.0  # now stale past the age watermark
+    vm.ingest("Log", inserts=grow_log(rng, 300, 6100, 100), seq=1)
+    assert svc.refresh_count == 1
+
+
+def test_query_carries_staleness_metadata():
+    vm, rng = _visit_vm()
+    svc = vm.configure_streaming(
+        StreamConfig(max_rows=10**9, max_age_s=1e9, auto_refresh=False)
+    )
+    vm.ingest("Log", inserts=grow_log(rng, 300, 6000, 250), seq=7)
+    res = svc.query("v", Query(agg="sum", col="totalBytes"))
+    assert res.staleness.pending_rows == 250
+    assert res.staleness.refresh_age_s == -1.0  # never refreshed
+    assert res.staleness.refreshed_through_seq["Log"] == -1
+    svc.refresh()
+    res2 = svc.query("v", Query(agg="sum", col="totalBytes"))
+    assert res2.staleness.pending_rows == 0
+    assert res2.staleness.refreshed_through_seq["Log"] == 7
+    assert float(res2.value) != 0.0
+
+
+def test_streaming_refresh_matches_manual_flow():
+    """Out-of-order micro-batched streaming == one manual ingest + refresh."""
+    vm_s, rng_s = _visit_vm()
+    vm_m, rng_m = _visit_vm()
+    delta = grow_log(rng_m, 300, 6000, 900)
+
+    # manual flow
+    vm_m.ingest("Log", inserts=delta)
+    vm_m.svc_refresh("v")
+
+    # streaming flow: same rows split into 3 out-of-order micro-batches
+    h = to_host(delta)
+    svc = vm_s.configure_streaming(
+        StreamConfig(max_rows=10**9, max_age_s=1e9, auto_refresh=False)
+    )
+    for seq in (1, 0, 2):
+        sl = slice(seq * 300, (seq + 1) * 300)
+        mb = from_columns({k: v[sl] for k, v in h.items()}, pk=["sessionId"])
+        vm_s.ingest("Log", inserts=mb, seq=seq)
+    svc.refresh()
+
+    assert oracle.rows_equal(
+        oracle.from_relation(vm_s.views["v"].clean_sample),
+        oracle.from_relation(vm_m.views["v"].clean_sample),
+        keys=("videoId",),
+    )
+
+
+def test_maintain_all_drains_buffered_batches():
+    vm, rng = _visit_vm()
+    vm.configure_streaming(
+        StreamConfig(max_rows=10**9, max_age_s=1e9, auto_refresh=False)
+    )
+    vm.ingest("Log", inserts=grow_log(rng, 300, 6000, 400), seq=0)
+    q = Query(agg="count")
+    before = float(vm.query_stale("v", q))
+    vm.maintain_all()
+    after = float(vm.query_stale("v", q))
+    assert after >= before  # the buffered inserts reached full IVM
+    assert vm.stream.staleness().pending_rows == 0
+
+
+# ---------------------------------------------------------------------------
+# Sharded per-partition logs → psum-merged fused aggregation (§7.5)
+# ---------------------------------------------------------------------------
+
+def test_partitioned_log_feeds_sharded_fused_groupby():
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import Mesh
+
+    from repro.core.distributed_svc import (
+        make_sharded_delta_groupby,
+        make_sharded_fused_delta_groupby,
+        stack_shard_deltas,
+    )
+
+    mesh = Mesh(np.array(jax.devices()[:1]), ("data",))
+    G, R = 64, 512
+    rng = np.random.default_rng(0)
+    plog = PartitionedDeltaLog("Log", n_shards=1)
+    rel = from_columns(
+        {
+            "sessionId": np.arange(R, dtype=np.int32),
+            "videoId": rng.integers(0, G, R).astype(np.int32),
+            "bytes": rng.exponential(10, R).astype(np.float32),
+        },
+        pk=["sessionId"],
+    )
+    plog.offer(0, inserts=rel, seq=0)
+    keys, valid, values = stack_shard_deltas(
+        plog.drain(), "videoId", ["bytes"], rows_per_shard=R
+    )
+    fused = make_sharded_fused_delta_groupby(mesh, "data", G, 0.3, 7, ["bytes"])(
+        keys, valid, values
+    )
+    unfused = make_sharded_delta_groupby(mesh, "data", G, 0.3, 7, ["bytes"])(
+        keys, valid, values
+    )
+    np.testing.assert_array_equal(np.asarray(fused["count"]), np.asarray(unfused["count"]))
+    np.testing.assert_allclose(
+        np.asarray(fused["bytes"]), np.asarray(unfused["bytes"]), rtol=1e-5, atol=1e-4
+    )
+
+
+# ---------------------------------------------------------------------------
+# Serving telemetry → streaming DeltaLog
+# ---------------------------------------------------------------------------
+
+class _StubModel:
+    """Minimal Model protocol: constant logits, empty cache."""
+
+    vocab = 16
+
+    def init_cache(self, max_batch, max_seq):
+        return {}
+
+    def decode_step(self, params, cache, tokens, pos):
+        import jax.numpy as jnp
+
+        B, T = tokens.shape
+        logits = jnp.zeros((B, T, self.vocab), jnp.float32)
+        return logits, cache
+
+
+def test_serve_engine_streams_telemetry():
+    from repro.serving.engine import Request, ServeEngine
+
+    vm = ViewManager()
+    tick_caps = 64
+    base = from_columns(
+        {
+            "tickId": np.arange(4, dtype=np.int32),
+            "active": np.zeros(4, np.float32),
+            "emitted": np.zeros(4, np.float32),
+            "queued": np.zeros(4, np.float32),
+        },
+        pk=["tickId"],
+        capacity=tick_caps,
+    )
+    vm.register_base("ServeLog", base)
+    plan = GroupByNode(
+        child=Scan("ServeLog", pk=("tickId",)),
+        keys=("tickId",),
+        aggs=(("ticks", "count", None), ("tokens", "sum", "emitted")),
+        num_groups=tick_caps,
+    )
+    vm.register_view(ViewDef("serveView", plan), delta_bases=("ServeLog",), m=1.0,
+                     delta_group_capacity=tick_caps)
+    svc = vm.configure_streaming(
+        StreamConfig(max_rows=10**9, max_age_s=1e9, auto_refresh=False)
+    )
+
+    eng = ServeEngine(_StubModel(), params={}, max_batch=2, max_seq=8,
+                      telemetry=svc, telemetry_base="ServeLog")
+    eng.submit(Request(rid=0, prompt=np.array([1, 2], np.int32), max_new=3))
+    eng.run(max_ticks=10)
+    st = svc.staleness()
+    assert st.pending_rows > 0  # ticks buffered in the DeltaLog
+    svc.refresh()
+    res = svc.query("serveView", Query(agg="sum", col="tokens"))
+    assert float(res.value) > 0.0
+    assert res.staleness.pending_rows == 0

@@ -195,7 +195,10 @@ import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import numpy as np, jax, jax.numpy as jnp
 from repro.distributed.compression import make_compressed_allreduce
-mesh = jax.make_mesh((8,), ("data",), axis_types=(jax.sharding.AxisType.Auto,))
+if hasattr(jax.sharding, "AxisType"):
+    mesh = jax.make_mesh((8,), ("data",), axis_types=(jax.sharding.AxisType.Auto,))
+else:  # older jax: Auto is the only behaviour, no axis_types kwarg
+    mesh = jax.make_mesh((8,), ("data",))
 x = jnp.arange(8 * 32, dtype=jnp.float32)
 want = np.asarray(x).reshape(8, 32).sum(0)
 for quant, tol in ((False, 1e-6), (True, 0.05)):

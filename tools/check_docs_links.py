@@ -1,0 +1,61 @@
+"""Docs link check: every repo path cited in docs/*.md and README.md must
+resolve.  Scans backtick spans and markdown links for path-shaped
+references (src/..., docs/..., benchmarks/..., examples/..., tests/...,
+tools/..., top-level *.md / *.txt) and fails listing any that don't exist.
+
+Run:  python tools/check_docs_links.py
+"""
+
+from __future__ import annotations
+
+import pathlib
+import re
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+DOC_FILES = sorted(ROOT.glob("docs/*.md")) + [ROOT / "README.md"]
+
+# path-shaped: starts with a known top-level dir, or is a top-level md/txt.
+# Bare *.py names (e.g. "ops.py" inside a directory description) are not
+# checked — only rooted paths are.
+PREFIXES = ("src/", "docs/", "benchmarks/", "examples/", "tests/", "tools/",
+            ".github/")
+TOPLEVEL = re.compile(r"^[A-Za-z0-9_.-]+\.(md|txt)$")
+
+SPAN = re.compile(r"`([^`]+)`|\]\(([^)#]+)\)")
+
+
+def candidates(text: str):
+    for m in SPAN.finditer(text):
+        ref = (m.group(1) or m.group(2)).strip()
+        # strip trailing punctuation and column/line suffixes
+        ref = ref.rstrip(".,;:")
+        if " " in ref or ref.startswith("http"):
+            continue
+        if ref.startswith(PREFIXES) or TOPLEVEL.match(ref):
+            yield ref
+
+
+def main() -> int:
+    missing = []
+    for doc in DOC_FILES:
+        text = doc.read_text()
+        for ref in candidates(text):
+            if "*" in ref:  # glob reference: require at least one match
+                if not list(ROOT.glob(ref)):
+                    missing.append(f"{doc.relative_to(ROOT)}: {ref}")
+                continue
+            p = ROOT / ref
+            if not (p.exists() or p.with_suffix("").exists()):
+                missing.append(f"{doc.relative_to(ROOT)}: {ref}")
+    if missing:
+        print("dangling doc references:")
+        for m in missing:
+            print("  " + m)
+        return 1
+    print(f"docs link check OK ({len(DOC_FILES)} files)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
