@@ -1,0 +1,123 @@
+"""Query-engine throughput: batched vs per-query, fused vs unfused.
+
+Not a paper figure — this seeds the perf trajectory of the compiled
+batched query engine (repro.query): N concurrent dashboard queries over
+the fig5 join-view scenario, answered
+
+  * per query through the pre-engine estimator path (eager q(S) scan +
+    per-query variance_comparison + svc_corr/svc_aqp — dozens of small
+    dispatches and ~4 sample scans per query),
+  * batched through ``ViewManager.query_batch`` with the fused
+    kernels/multi_agg moment pass (one scan for the whole batch),
+  * batched with ``fused=False`` (correspondence cache + one snapshot,
+    but per-query moment scans) to isolate the fusion win.
+
+Writes ``BENCH_query_engine.json`` (override the path with ``BENCH_OUT``)
+with queries/sec, speedups, and batched-vs-per-query parity errors; CI
+runs the quick mode and uploads the JSON.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+from typing import List
+
+import numpy as np
+
+from benchmarks.common import Row, join_view_scenario, random_join_queries, timeit
+from repro.core import exact, svc_aqp, svc_corr, variance_comparison
+
+N_QUERIES = 16
+
+
+def _legacy_answer(mv, q, prefer=None):
+    """The pre-engine ViewManager.query body (eager stale scan, per-query
+    break-even, per-query correspondence join)."""
+    stale = exact(mv.materialized, q)
+    p = prefer
+    if p is None:
+        cmp = variance_comparison(mv.clean_sample, mv.stale_sample, q, mv.m)
+        p = "corr" if bool(cmp["corr_wins"]) else "aqp"
+    if p == "corr":
+        return svc_corr(stale, mv.clean_sample, mv.stale_sample, q, mv.m)
+    return svc_aqp(mv.clean_sample, q, mv.m)
+
+
+def _max_rel_err(a: List[float], b: List[float]) -> float:
+    return max(
+        abs(x - y) / max(abs(y), 1e-9) for x, y in zip(a, b)
+    ) if a else float("nan")
+
+
+def run(quick: bool = False) -> List[Row]:
+    vm, meta = join_view_scenario(quick, m=0.1, update_frac=0.10)
+    vm.ingest("lineitem", inserts=meta["delta"])
+    vm.svc_refresh("joinView")
+    mv = vm.views["joinView"]
+    queries = random_join_queries(meta["rng"], N_QUERIES)
+
+    def per_query():
+        return [float(_legacy_answer(mv, q).value) for q in queries]
+
+    def batched():
+        return [float(e.value) for e in vm.query_batch("joinView", queries)]
+
+    def batched_unfused():
+        return [float(e.value) for e in vm.query_batch("joinView", queries, fused=False)]
+
+    us_pq = timeit(per_query)
+    us_b = timeit(batched)
+    us_u = timeit(batched_unfused)
+    qps = lambda us: N_QUERIES / (us / 1e6)
+
+    # parity with the estimator method forced on both sides (the auto
+    # decision can legitimately flip at exact HT-variance ties)
+    err = {}
+    for prefer in ("aqp", "corr"):
+        ref = [float(_legacy_answer(mv, q, prefer).value) for q in queries]
+        got = [float(e.value) for e in vm.query_batch("joinView", queries, prefer=prefer)]
+        err[prefer] = _max_rel_err(got, ref)
+
+    speedup = us_pq / max(us_b, 1e-9)
+    payload = {
+        "scenario": "fig5_join_view",
+        "quick": bool(quick),
+        "n_queries": N_QUERIES,
+        "queries_per_sec": {
+            "per_query": qps(us_pq),
+            "batched_fused": qps(us_b),
+            "batched_unfused": qps(us_u),
+        },
+        "speedup_batched_vs_per_query": speedup,
+        "speedup_fused_vs_unfused": us_u / max(us_b, 1e-9),
+        "max_rel_err_vs_per_query": err,
+    }
+    out_path = os.environ.get("BENCH_OUT", "BENCH_query_engine.json")
+    with open(out_path, "w") as f:
+        json.dump(payload, f, indent=2)
+
+    return [
+        Row("fig_qt_per_query", us_pq, f"qps={qps(us_pq):.1f} Q={N_QUERIES}"),
+        Row(
+            "fig_qt_batched",
+            us_b,
+            f"qps={qps(us_b):.1f} speedup={speedup:.1f}x "
+            f"rel_err_aqp={err['aqp']:.2e} rel_err_corr={err['corr']:.2e}",
+        ),
+        Row(
+            "fig_qt_batched_unfused",
+            us_u,
+            f"qps={qps(us_u):.1f} fused_gain={us_u / max(us_b, 1e-9):.1f}x",
+        ),
+    ]
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    for row in run(quick=args.quick):
+        print(row.csv(), flush=True)

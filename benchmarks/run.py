@@ -23,6 +23,7 @@ MODULES = (
     "fig10_cube",
     "fig13_median",
     "fig14_minibatch",
+    "fig_query_throughput",
     "appendix_minmax",
     "kernels_bench",
     "svc_training",

@@ -52,12 +52,26 @@ class Estimate:
         return iter((self.value, self.ci_low, self.ci_high))
 
 
-# gaussian two-sided tail values
-_GAMMA = {0.90: 1.645, 0.95: 1.96, 0.99: 2.576}
+# gaussian two-sided tail values, z = √2·erfinv(confidence), cached per level
+_GAMMA_CACHE: dict = {}
 
 
 def _gamma(confidence: float) -> float:
-    return _GAMMA.get(round(confidence, 2), 1.96)
+    """Two-sided Gaussian tail value at ``confidence`` (any level in (0,1)).
+
+    z = √2·erfinv(confidence) = Φ⁻¹((1+confidence)/2), computed in double
+    precision via the stdlib inverse Gaussian CDF (host-side, no dispatch).
+    """
+    key = float(confidence)
+    g = _GAMMA_CACHE.get(key)
+    if g is None:
+        if not 0.0 < key < 1.0:
+            raise ValueError(f"confidence must be in (0, 1), got {confidence}")
+        from statistics import NormalDist
+
+        g = float(NormalDist().inv_cdf((1.0 + key) / 2.0))
+        _GAMMA_CACHE[key] = g
+    return g
 
 
 def _cond_mask(rel: Relation, query: Query) -> jnp.ndarray:

@@ -12,6 +12,10 @@ the paper's profiles (§7: hashing + delta aggregation + estimation):
                     over delta rows (no materialized filtered intermediate);
                     core/maintenance.clean_sample dispatches to it when the
                     cleaning plan has the canonical groupby-sum/count shape
+  multi_agg       — batched-query moment pass: one scan over the
+                    correspondence-aligned sample panel accumulates the
+                    masked weighted sums/counts/sum-of-squares/HT terms for
+                    ALL Q queries of an encoded QueryBatch (repro.query)
   flash_attention — causal online-softmax attention (GQA/MQA aware): the
                     §Roofline memory-term lever — scores stay in VMEM
 

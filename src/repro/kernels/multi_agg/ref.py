@@ -1,0 +1,107 @@
+"""Pure-jnp oracle for the batched multi-aggregate query kernel.
+
+Evaluates a whole encoded ``QueryBatch`` (repro.query.batch) against the
+correspondence-aligned sample panel the way the per-query estimators do —
+per-query trans tables (§5.2.1) materialized as an (R, Q) intermediate,
+then masked reductions.  The Pallas kernel (kernel.py) computes the same
+moments in one pass per row tile with the trans tables living only in VMEM;
+this module is its parity oracle and the XLA-compiled CPU fallback.
+
+Moment row layout of the (12, Q) output (shared with kernel.py/ops.py):
+
+  K/S/SS/HT_NEW   per-query count, sum, sum-of-squares, HT variance term
+                  of the clean-sample trans table
+  K/S/SS/HT_OLD   same over the stale sample
+  K/S/SS_D        same over the correspondence diff d = t_new − t_old
+                  (K_D is query-independent: the joined valid-row count)
+
+These are exactly the sufficient statistics for ``svc_aqp`` / ``svc_corr``
+values and CLT bounds and the §5.2.2 ``variance_comparison`` decision.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax.numpy as jnp
+
+# moment rows
+K_NEW, S_NEW, SS_NEW, HT_NEW = 0, 1, 2, 3
+K_OLD, S_OLD, SS_OLD, HT_OLD = 4, 5, 6, 7
+K_D, S_D, SS_D = 8, 9, 10
+N_MOMENTS = 12
+
+# meta rows: [is_count; is_avg; then (ge, gt, le, lt) per predicate term]
+META_IS_COUNT = 0
+META_IS_AVG = 1
+META_PRED0 = 2
+META_PER_PRED = 4
+
+
+def _trans_table(x, valid, w, sel, meta):
+    """Per-query trans values t (R, Q) and row mask (R, Q) for one side.
+
+    x (R, C) f32 column panel; valid (R,) bool; w (R,) f32 row weights;
+    sel ((1+P)*C, Q) stacked one-hot column selectors (value column first,
+    then one selector block per predicate term); meta (2+4P, Q) op codes
+    and per-term bounds.  Implements §5.2.1:
+
+      sum/count: t = w · v · cond   rowmask = valid
+      avg:       t = v · cond       rowmask = cond
+    """
+    C = x.shape[1]
+    P = sel.shape[0] // C - 1
+    is_count = meta[META_IS_COUNT][None, :] > 0
+    is_avg = meta[META_IS_AVG][None, :] > 0
+    v = x @ sel[:C]
+    v = jnp.where(is_count, 1.0, v)
+    cond = jnp.broadcast_to(valid[:, None], v.shape)
+    for p in range(P):
+        tv = x @ sel[(1 + p) * C:(2 + p) * C]
+        b = meta[META_PRED0 + META_PER_PRED * p:META_PRED0 + META_PER_PRED * (p + 1)]
+        cond = (cond
+                & (tv >= b[0][None, :]) & (tv > b[1][None, :])
+                & (tv <= b[2][None, :]) & (tv < b[3][None, :]))
+    w_eff = jnp.where(is_avg, 1.0, w[:, None])
+    t = jnp.where(cond, v, 0.0) * w_eff
+    rowmask = jnp.where(is_avg, cond, valid[:, None])
+    return t, rowmask
+
+
+def _side_moments(t, rowmask, ompi):
+    k = jnp.sum(rowmask.astype(jnp.float32), axis=0)
+    s = jnp.sum(t, axis=0)
+    ss = jnp.sum(t * t, axis=0)
+    ht = jnp.sum(ompi[:, None] * t * t, axis=0)
+    return k, s, ss, ht
+
+
+def multi_agg_ref(
+    x_new: jnp.ndarray,
+    valid_new: jnp.ndarray,
+    w_new: jnp.ndarray,
+    ompi_new: jnp.ndarray,
+    sel: jnp.ndarray,
+    meta: jnp.ndarray,
+    x_old: Optional[jnp.ndarray] = None,
+    valid_old: Optional[jnp.ndarray] = None,
+    w_old: Optional[jnp.ndarray] = None,
+    ompi_old: Optional[jnp.ndarray] = None,
+) -> jnp.ndarray:
+    """(12, Q) moments; one-sided (x_old=None) fills OLD/D rows with 0.
+
+    ``ompi`` is the per-row 1−π Horvitz-Thompson factor (0 for rows pinned
+    by the outlier index, 1−m otherwise; 0 everywhere for exact scans).
+    """
+    t_new, m_new = _trans_table(x_new, valid_new.astype(bool), w_new, sel, meta)
+    kn, sn, ssn, htn = _side_moments(t_new, m_new, ompi_new)
+    z = jnp.zeros_like(kn)
+    if x_old is None:
+        return jnp.stack([kn, sn, ssn, htn] + [z] * 8)
+    t_old, m_old = _trans_table(x_old, valid_old.astype(bool), w_old, sel, meta)
+    ko, so, sso, hto = _side_moments(t_old, m_old, ompi_old)
+    d = t_new - t_old
+    kd = z + jnp.sum((valid_new.astype(bool) | valid_old.astype(bool)).astype(jnp.float32))
+    sd = jnp.sum(d, axis=0)
+    ssd = jnp.sum(d * d, axis=0)
+    return jnp.stack([kn, sn, ssn, htn, ko, so, sso, hto, kd, sd, ssd, z])

@@ -1,0 +1,43 @@
+"""Compiled batched query engine (multi-query SVC estimation).
+
+Encodes the sample-mean query class (sum/count/avg × interval predicates)
+as data (``QueryBatch``), caches the query-independent clean↔stale
+correspondence join per refresh window (``CorrespondenceCache``), and
+answers whole batches through one fused kernels/multi_agg moment pass
+(``run_batch``).  ``ViewManager.query_batch`` /
+``StreamingViewService.query_batch`` are the serving-facing entry points.
+"""
+
+from repro.query.batch import (
+    SAMPLE_MEAN_AGGS,
+    QueryBatch,
+    UnsupportedQueryError,
+    is_encodable,
+    lower_pred,
+)
+from repro.query.engine import (
+    CorrespondenceCache,
+    build_correspondence_cache,
+    exact_batch,
+    run_batch,
+    run_batch_aqp,
+    sample_columns,
+    sample_panel,
+    variance_report,
+)
+
+__all__ = [
+    "SAMPLE_MEAN_AGGS",
+    "QueryBatch",
+    "UnsupportedQueryError",
+    "is_encodable",
+    "lower_pred",
+    "CorrespondenceCache",
+    "build_correspondence_cache",
+    "exact_batch",
+    "run_batch",
+    "run_batch_aqp",
+    "sample_columns",
+    "sample_panel",
+    "variance_report",
+]

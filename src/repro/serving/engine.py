@@ -75,6 +75,7 @@ class ServeEngine:
             # prefill the slot: feed prompt tokens one by one through
             # decode_step (simple and uniform across families; batch-1 slices
             # of the pooled cache are updated in place at this slot's rows).
+            logits = None
             for i, tok in enumerate(req.prompt):
                 tokens = np.zeros((self.B, 1), np.int32)
                 tokens[slot, 0] = tok
@@ -84,9 +85,14 @@ class ServeEngine:
             self.slots[slot] = req
             self.pos[slot] = P
             self.budget[slot] = req.max_new
-            last = np.asarray(logits[slot, -1]).argmax()
-            self.last_tok[slot] = last
-            req.out_tokens.append(int(last))
+            if logits is None:
+                # empty prompt: nothing prefilled; decode starts from a
+                # zero token at position 0 instead of a prompt continuation
+                self.last_tok[slot] = 0
+            else:
+                last = np.asarray(logits[slot, -1]).argmax()
+                self.last_tok[slot] = last
+                req.out_tokens.append(int(last))
 
     # -- decode tick -------------------------------------------------------------
     def step(self) -> int:
@@ -144,3 +150,40 @@ class ServeEngine:
             self.step()
             max_ticks -= 1
         return self.completed
+
+    # -- telemetry dashboard -----------------------------------------------------
+    def dashboard(self, view_name: Optional[str] = None, queries=None) -> Dict:
+        """The serving-telemetry dashboard panel, answered in ONE batched
+        engine pass (StreamingViewService.query_batch): every stat shares
+        one staleness snapshot and one fused multi_agg scan instead of N
+        independent sample scans.
+
+        ``queries`` maps stat name -> repro.core.Query; the default panel
+        covers whichever of the per-tick telemetry columns (active,
+        emitted, queued) the registered view retains.  ``view_name``
+        defaults to the first registered view fed by ``telemetry_base``.
+        Returns {name: StreamedEstimate}.
+        """
+        if self.telemetry is None:
+            raise RuntimeError("dashboard() requires a telemetry StreamingViewService")
+        from repro.core.estimators import Query
+
+        vm = self.telemetry.vm
+        if view_name is None:
+            for name, mv in vm.views.items():
+                if self.telemetry_base in mv.delta_bases:
+                    view_name = name
+                    break
+            else:
+                raise ValueError(f"no view registered over {self.telemetry_base!r}")
+        if queries is None:
+            cols = set(vm.views[view_name].clean_sample.schema.columns)
+            queries = {"ticks": Query(agg="count")}
+            for stat, col in (("avg_active", "active"), ("tokens_emitted", "emitted"),
+                              ("avg_queued", "queued")):
+                if col in cols:
+                    agg = "sum" if stat.startswith("tokens") else "avg"
+                    queries[stat] = Query(agg=agg, col=col)
+        names = list(queries)
+        ests = self.telemetry.query_batch(view_name, [queries[n] for n in names])
+        return dict(zip(names, ests))

@@ -156,3 +156,15 @@ class StreamingViewService:
             self.refresh()
         est = self.vm.query(view_name, q, **kw)
         return StreamedEstimate(estimate=est, staleness=self.staleness())
+
+    def query_batch(self, view_name: str, queries, **kw) -> list:
+        """Answer N dashboard queries in one fused engine pass
+        (``ViewManager.query_batch``) under ONE staleness snapshot: the
+        watermark is honored once up front and every estimate in the batch
+        carries the same ``StalenessInfo`` — the whole dashboard refers to
+        a single consistent refresh window."""
+        if self.config.auto_refresh and self.watermark_due():
+            self.refresh()
+        ests = self.vm.query_batch(view_name, queries, **kw)
+        st = self.staleness()
+        return [StreamedEstimate(estimate=e, staleness=st) for e in ests]

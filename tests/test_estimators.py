@@ -107,3 +107,25 @@ def test_selectivity_widens_ci():
     e_broad = svc_aqp(f_hat, broad, m)
     e_narrow = svc_aqp(f_hat, narrow, m)
     assert float(e_narrow.stderr) > float(e_broad.stderr)
+
+
+def test_gamma_is_gaussian_two_sided_tail():
+    """_gamma computes √2·erfinv(c) for ANY confidence, not a 3-entry table."""
+    from repro.core.estimators import _gamma
+
+    for conf, z in ((0.8, 1.281552), (0.9, 1.644854), (0.95, 1.959964),
+                    (0.99, 2.575829), (0.5, 0.674490)):
+        assert abs(_gamma(conf) - z) < 2e-3, (conf, _gamma(conf))
+    with pytest.raises(ValueError):
+        _gamma(1.5)
+    # CI width grows monotonically with the confidence level
+    rng = np.random.default_rng(9)
+    _, fresh = make_view(rng, 400)
+    f_hat = apply_hash(fresh, ("k",), 0.25, 3)
+    q = Query(agg="avg", col="v")
+    widths = [
+        float(svc_aqp(f_hat, q, 0.25, confidence=c).ci_high)
+        - float(svc_aqp(f_hat, q, 0.25, confidence=c).ci_low)
+        for c in (0.8, 0.9, 0.95, 0.99)
+    ]
+    assert widths == sorted(widths)

@@ -329,3 +329,70 @@ def test_flash_attention_matches_model_attention():
     got = np.asarray(flash_attention(q, k, v))
     want = np.asarray(gqa_attention(q, k, v, causal_mask(S, S)))
     np.testing.assert_allclose(got, want, rtol=2e-3, atol=2e-3)
+
+
+# ---------------------------------------------------------------------------
+# multi_agg: batched-query moment kernel
+# ---------------------------------------------------------------------------
+
+from repro.kernels.multi_agg import multi_agg_moments
+from repro.kernels.multi_agg.ref import multi_agg_ref
+
+
+def _random_panel(rng, R, C):
+    x = _jnp.asarray(rng.normal(10.0, 4.0, (R, C)).astype(np.float32))
+    valid = _jnp.asarray(rng.uniform(size=R) < 0.8)
+    pin = rng.uniform(size=R) < 0.1
+    m = 0.25
+    w = _jnp.asarray(np.where(pin, 1.0, 1.0 / m).astype(np.float32))
+    ompi = _jnp.asarray(np.where(pin, 0.0, 1.0 - m).astype(np.float32))
+    return x, valid, w, ompi
+
+
+def _random_batch(rng, C, Q, P):
+    """Random encoded sel/meta tables (see repro.query.batch layout)."""
+    sel = np.zeros(((1 + P) * C, Q), np.float32)
+    meta = np.zeros((2 + 4 * P, Q), np.float32)
+    meta[2::4, :] = -np.inf
+    meta[3::4, :] = -np.inf
+    meta[4::4, :] = np.inf
+    meta[5::4, :] = np.inf
+    for q in range(Q):
+        op = rng.integers(0, 3)
+        if op == 1:
+            meta[0, q] = 1.0  # count
+        else:
+            sel[rng.integers(0, C), q] = 1.0
+            if op == 2:
+                meta[1, q] = 1.0  # avg
+        for p in range(rng.integers(0, P + 1)):
+            sel[(1 + p) * C + rng.integers(0, C), q] = 1.0
+            lo = rng.normal(8.0, 3.0)
+            meta[2 + 4 * p, q] = lo
+            meta[4 + 4 * p, q] = lo + abs(rng.normal(0, 6.0))
+    return _jnp.asarray(sel), _jnp.asarray(meta)
+
+
+@pytest.mark.parametrize("shape", [(64, 2, 3, 1), (300, 5, 9, 2), (1024, 3, 17, 1)])
+def test_multi_agg_two_sided_kernel_matches_ref(shape):
+    R, C, Q, P = shape
+    rng = np.random.default_rng(R + Q)
+    xn, vn, wn, on = _random_panel(rng, R, C)
+    xo, vo, wo, oo = _random_panel(rng, R, C)
+    sel, meta = _random_batch(rng, C, Q, P)
+    want = np.asarray(multi_agg_ref(xn, vn, wn, on, sel, meta, xo, vo, wo, oo))
+    got = np.asarray(
+        multi_agg_moments(xn, vn, wn, on, sel, meta, xo, vo, wo, oo, use_pallas=True)
+    )
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=1e-2)
+
+
+@pytest.mark.parametrize("shape", [(100, 4, 5, 1), (513, 2, 12, 2)])
+def test_multi_agg_one_sided_kernel_matches_ref(shape):
+    R, C, Q, P = shape
+    rng = np.random.default_rng(R * 3 + Q)
+    xn, vn, wn, on = _random_panel(rng, R, C)
+    sel, meta = _random_batch(rng, C, Q, P)
+    want = np.asarray(multi_agg_ref(xn, vn, wn, on, sel, meta))
+    got = np.asarray(multi_agg_moments(xn, vn, wn, on, sel, meta, use_pallas=True))
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=1e-2)

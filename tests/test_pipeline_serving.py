@@ -59,3 +59,31 @@ def test_serving_engine_completes_and_is_deterministic():
     assert len(a) == 6
     assert a == b  # greedy decode is deterministic
     assert all(len(v) >= 4 for v in a.values())
+
+
+class _ConstModel:
+    """Minimal Model protocol: constant logits, empty cache."""
+
+    vocab = 16
+
+    def init_cache(self, max_batch, max_seq):
+        return {}
+
+    def decode_step(self, params, cache, tokens, pos):
+        import jax.numpy as jnp
+
+        B, T = tokens.shape
+        return jnp.zeros((B, T, self.vocab), jnp.float32), cache
+
+
+def test_admit_handles_empty_prompt():
+    """Regression: an empty prompt must not leave `logits` unbound in
+    _admit (UnboundLocalError); the request decodes from a zero token."""
+    eng = ServeEngine(_ConstModel(), params={}, max_batch=2, max_seq=8)
+    eng.submit(Request(rid=0, prompt=np.array([], np.int32), max_new=3))
+    eng.submit(Request(rid=1, prompt=np.array([1, 2], np.int32), max_new=3))
+    done = eng.run(max_ticks=20)
+    by_rid = {r.rid: r for r in done}
+    assert set(by_rid) == {0, 1}
+    assert len(by_rid[0].out_tokens) == 3  # decode-only output
+    assert len(by_rid[1].out_tokens) == 4  # prefill argmax + 3 decode ticks

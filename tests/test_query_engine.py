@@ -1,0 +1,244 @@
+"""Compiled batched query engine: parity, caching, batching semantics."""
+
+import numpy as np
+import pytest
+
+from repro.core import Query, ViewDef, exact, svc_aqp, svc_corr, variance_comparison
+from repro.core.estimators import masked_quantile
+from repro.data.synthetic import grow_log, make_log_video
+from repro.query import (
+    QueryBatch,
+    UnsupportedQueryError,
+    build_correspondence_cache,
+    is_encodable,
+    lower_pred,
+    variance_report,
+)
+from repro.relational.expr import Boolean, Col, Lit, Cmp, and_, or_
+from repro.relational.plan import FKJoin, GroupByNode, Scan
+from repro.views import ViewManager
+
+
+@pytest.fixture
+def vm_setup():
+    rng = np.random.default_rng(0)
+    log, video = make_log_video(rng, 300, 6000)
+    plan = GroupByNode(
+        child=FKJoin(fact=Scan("Log", pk=("sessionId",)),
+                     dim=Scan("Video", pk=("videoId",)), fact_key="videoId"),
+        keys=("videoId",),
+        aggs=(("visitCount", "count", None), ("totalBytes", "sum", "bytes")),
+        num_groups=512,
+    )
+    vm = ViewManager()
+    vm.register_base("Log", log)
+    vm.register_base("Video", video)
+    vm.register_view(ViewDef("v", plan), delta_bases=("Log",), m=0.2, seed=5,
+                     delta_group_capacity=512)
+    vm.ingest("Log", inserts=grow_log(rng, 300, 6000, 1500))
+    vm.svc_refresh("v")
+    return vm, rng
+
+
+MIXED_QUERIES = [
+    Query("sum", "totalBytes"),
+    Query("count"),
+    Query("avg", "totalBytes"),
+    Query("sum", "totalBytes",
+          pred=and_(Cmp("ge", Col("visitCount"), Lit(5.0)),
+                    Cmp("le", Col("visitCount"), Lit(40.0)))),
+    Query("count", pred=Cmp("gt", Col("totalBytes"), Lit(2000.0))),
+    Query("avg", "visitCount", pred=Cmp("lt", Col("videoId"), Lit(150))),
+    Query("count", pred=Cmp("eq", Col("videoId"), Lit(7))),
+    Query("sum", "totalBytes", pred=Cmp("le", Lit(10.0), Col("visitCount"))),
+]
+
+
+def legacy_estimate(mv, q, prefer):
+    """The pre-engine per-query path (eager stale scan + estimators)."""
+    stale = exact(mv.materialized, q)
+    p = prefer
+    if p is None:
+        cmp = variance_comparison(mv.clean_sample, mv.stale_sample, q, mv.m)
+        p = "corr" if bool(cmp["corr_wins"]) else "aqp"
+    if p == "corr":
+        return svc_corr(stale, mv.clean_sample, mv.stale_sample, q, mv.m)
+    return svc_aqp(mv.clean_sample, q, mv.m)
+
+
+@pytest.mark.parametrize("prefer", [None, "aqp", "corr"])
+@pytest.mark.parametrize("fused", [True, False])
+def test_query_batch_parity(vm_setup, prefer, fused):
+    """query_batch == per-query svc_aqp/svc_corr across mixed predicates."""
+    vm, _ = vm_setup
+    mv = vm.views["v"]
+    ests = vm.query_batch("v", MIXED_QUERIES, prefer=prefer, fused=fused)
+    for q, e in zip(MIXED_QUERIES, ests):
+        ref = legacy_estimate(mv, q, prefer)
+        assert e.method == ref.method, (q, e.method, ref.method)
+        np.testing.assert_allclose(float(e.value), float(ref.value),
+                                   rtol=1e-4, atol=1e-3)
+        rtol_std = 2e-2 if q.agg == "avg" else 1e-3
+        np.testing.assert_allclose(float(e.stderr), float(ref.stderr),
+                                   rtol=rtol_std, atol=1e-3)
+
+
+def test_single_query_fast_path_matches_batch(vm_setup):
+    vm, _ = vm_setup
+    q = MIXED_QUERIES[3]
+    single = vm.query("v", q)
+    batch = vm.query_batch("v", [q])[0]
+    assert float(single.value) == float(batch.value)
+    assert single.method == batch.method
+
+
+def test_variance_report_matches_per_query(vm_setup):
+    vm, _ = vm_setup
+    mv = vm.views["v"]
+    cache = build_correspondence_cache(mv.clean_sample, mv.stale_sample, mv.m)
+    batch = QueryBatch.encode(MIXED_QUERIES, cache.columns)
+    rep = variance_report(cache, batch)
+    for i, q in enumerate(MIXED_QUERIES):
+        ref = variance_comparison(mv.clean_sample, mv.stale_sample, q, mv.m)
+        assert bool(rep["corr_wins"][i]) == bool(ref["corr_wins"]), q
+        np.testing.assert_allclose(rep["var_aqp"][i], float(ref["var_aqp"]),
+                                   rtol=1e-3, atol=1e-3)
+        np.testing.assert_allclose(rep["var_corr"][i], float(ref["var_corr"]),
+                                   rtol=1e-3, atol=1e-3)
+
+
+def test_unsupported_queries_fall_back(vm_setup):
+    """OR / ne / median queries bypass the engine but still answer."""
+    vm, _ = vm_setup
+    mv = vm.views["v"]
+    cols = mv.clean_sample.schema.columns
+    odd = [
+        Query("sum", "totalBytes",
+              pred=or_(Cmp("gt", Col("visitCount"), Lit(40.0)),
+                       Cmp("lt", Col("visitCount"), Lit(5.0)))),
+        Query("count", pred=Cmp("ne", Col("videoId"), Lit(3))),
+        Query("median", "totalBytes"),
+    ]
+    for q in odd[:2]:
+        assert not is_encodable(q, cols)
+    ests = vm.query_batch("v", odd + [Query("count")])
+    assert len(ests) == 4 and all(e is not None for e in ests)
+    ref = legacy_estimate(mv, odd[0], None)
+    got = ests[0]
+    np.testing.assert_allclose(float(got.value), float(ref.value), rtol=1e-5)
+
+
+def test_lower_pred_merges_intervals():
+    b = lower_pred(and_(Cmp("ge", Col("x"), Lit(2.0)),
+                        Cmp("ge", Col("x"), Lit(5.0)),
+                        Cmp("lt", Col("x"), Lit(9.0))))
+    assert b == {"x": {"ge": 5.0, "gt": -np.inf, "le": np.inf, "lt": 9.0}}
+    with pytest.raises(UnsupportedQueryError):
+        lower_pred(Boolean("or", (Cmp("gt", Col("x"), Lit(1.0)),)))
+    with pytest.raises(UnsupportedQueryError):
+        lower_pred(Cmp("gt", Col("x"), Col("y")))
+
+
+def test_correspondence_cache_invalidation(vm_setup):
+    """The cache lives for one refresh window: built lazily on the first
+    query, reused within the window, dropped on svc_refresh/maintain."""
+    vm, rng = vm_setup
+    mv = vm.views["v"]
+    assert mv.corr_cache is None
+    q = Query("sum", "totalBytes")
+    vm.query("v", q)
+    cache = mv.corr_cache
+    assert cache is not None
+    vm.query("v", Query("avg", "totalBytes"))
+    assert mv.corr_cache is cache  # reused across the window
+    vm.ingest("Log", inserts=grow_log(rng, 300, 7500, 400))
+    assert mv.corr_cache is cache  # ingest alone does not move the samples
+    vm.svc_refresh("v")
+    assert mv.corr_cache is None  # refresh opens a new window
+    # post-refresh answers come from the refreshed sample
+    est = vm.query("v", q, prefer="aqp")
+    ref = svc_aqp(mv.clean_sample, q, mv.m)
+    np.testing.assert_allclose(float(est.value), float(ref.value), rtol=1e-5)
+    vm.maintain_all()
+    assert mv.corr_cache is None
+
+
+def test_aqp_batch_skips_stale_scan(vm_setup, monkeypatch):
+    """prefer='aqp' must never touch the materialized view (lazy q(S))."""
+    vm, _ = vm_setup
+    from repro.query import engine as qengine
+
+    def boom(*a, **k):  # pragma: no cover - called only on regression
+        raise AssertionError("exact_batch called on the AQP-only path")
+
+    monkeypatch.setattr(qengine, "exact_batch", boom)
+    ests = vm.query_batch("v", MIXED_QUERIES, prefer="aqp")
+    assert all(e.method == "SVC+AQP" for e in ests)
+
+
+def test_masked_quantile_zero_matching_rows():
+    """No matching rows: returns the finite +big sentinel, never NaN."""
+    import jax.numpy as jnp
+
+    vals = jnp.arange(16.0)
+    out = masked_quantile(vals, jnp.zeros(16, bool), 0.5)
+    assert np.isfinite(float(out))
+    assert float(out) == np.float32(3.4e38)
+    # one matching row: that row's value at every quantile
+    one = jnp.zeros(16, bool).at[5].set(True)
+    for q in (0.0, 0.5, 1.0):
+        assert float(masked_quantile(vals, one, q)) == 5.0
+
+
+def test_avg_stderr_stable_for_large_magnitude_columns():
+    """Regression: the moment-form variance Σt²−s²/k cancels in f32 for a
+    large-mean small-spread column; the engine must fall back to the
+    two-pass variance and match the per-query estimator, never report a
+    zero-width CI."""
+    from repro.core.hashing import apply_hash
+    from repro.relational.relation import from_columns
+
+    rng = np.random.default_rng(11)
+    n = 1024
+    big = from_columns(
+        {"k": np.arange(n, dtype=np.int32),
+         "v": (1e6 + rng.normal(0, 1.0, n)).astype(np.float32)},
+        pk=["k"], capacity=2048,
+    )
+    stale = from_columns(
+        {"k": np.arange(n, dtype=np.int32),
+         "v": (1e6 + rng.normal(0, 1.0, n)).astype(np.float32)},
+        pk=["k"], capacity=2048,
+    )
+    m = 0.3
+    clean_s = apply_hash(big, ("k",), m, 7)
+    stale_s = apply_hash(stale, ("k",), m, 7)
+    q = Query("avg", "v")
+    ref = svc_aqp(clean_s, q, m)
+    cache = build_correspondence_cache(clean_s, stale_s, m)
+    batch = QueryBatch.encode([q], cache.columns)
+    from repro.query import run_batch, run_batch_aqp
+
+    got = run_batch(cache, batch, prefer="aqp")[0]
+    got_one = run_batch_aqp(clean_s, batch, m)[0]
+    assert float(ref.stderr) > 0
+    for e in (got, got_one):
+        assert float(e.stderr) > 0, "zero-width CI from cancelled variance"
+        np.testing.assert_allclose(float(e.stderr), float(ref.stderr), rtol=0.2)
+        np.testing.assert_allclose(float(e.value), float(ref.value), rtol=1e-5)
+
+
+def test_aqp_batch_needs_no_correspondence_cache(vm_setup):
+    """prefer='aqp' batches scan only the clean sample: no join is built."""
+    vm, _ = vm_setup
+    mv = vm.views["v"]
+    assert mv.corr_cache is None
+    ests = vm.query_batch("v", MIXED_QUERIES, prefer="aqp")
+    assert mv.corr_cache is None  # the one-sided path never built it
+    for q, e in zip(MIXED_QUERIES, ests):
+        ref = svc_aqp(mv.clean_sample, q, mv.m)
+        np.testing.assert_allclose(float(e.value), float(ref.value),
+                                   rtol=1e-4, atol=1e-3)
+        rtol_std = 2e-2 if q.agg == "avg" else 1e-3
+        np.testing.assert_allclose(float(e.stderr), float(ref.stderr),
+                                   rtol=rtol_std, atol=1e-3)

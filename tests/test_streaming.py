@@ -287,3 +287,68 @@ def test_serve_engine_streams_telemetry():
     res = svc.query("serveView", Query(agg="sum", col="tokens"))
     assert float(res.value) > 0.0
     assert res.staleness.pending_rows == 0
+
+
+def _telemetry_setup():
+    from repro.serving.engine import Request, ServeEngine
+
+    vm = ViewManager()
+    tick_caps = 64
+    base = from_columns(
+        {
+            "tickId": np.arange(4, dtype=np.int32),
+            "active": np.zeros(4, np.float32),
+            "emitted": np.zeros(4, np.float32),
+            "queued": np.zeros(4, np.float32),
+        },
+        pk=["tickId"],
+        capacity=tick_caps,
+    )
+    vm.register_base("ServeLog", base)
+    plan = GroupByNode(
+        child=Scan("ServeLog", pk=("tickId",)),
+        keys=("tickId",),
+        aggs=(("active", "sum", "active"), ("emitted", "sum", "emitted"),
+              ("queued", "sum", "queued")),
+        num_groups=tick_caps,
+    )
+    vm.register_view(ViewDef("serveView", plan), delta_bases=("ServeLog",), m=1.0,
+                     delta_group_capacity=tick_caps)
+    svc = vm.configure_streaming(
+        StreamConfig(max_rows=10**9, max_age_s=1e9, auto_refresh=False)
+    )
+    eng = ServeEngine(_StubModel(), params={}, max_batch=2, max_seq=8,
+                      telemetry=svc, telemetry_base="ServeLog")
+    eng.submit(Request(rid=0, prompt=np.array([1, 2], np.int32), max_new=3))
+    eng.run(max_ticks=10)
+    svc.refresh()
+    return vm, svc, eng
+
+
+def test_streaming_query_batch_shares_one_snapshot():
+    """query_batch answers the whole batch under ONE StalenessInfo and
+    matches per-query streaming answers."""
+    vm, svc, _ = _telemetry_setup()
+    queries = [Query(agg="count"), Query(agg="sum", col="emitted"),
+               Query(agg="avg", col="active")]
+    batch = svc.query_batch("serveView", queries)
+    assert len(batch) == len(queries)
+    assert all(r.staleness is batch[0].staleness for r in batch)
+    for q, r in zip(queries, batch):
+        single = svc.query("serveView", q)
+        np.testing.assert_allclose(float(r.value), float(single.value), rtol=1e-5)
+
+
+def test_serve_engine_dashboard_is_batched():
+    """ServeEngine.dashboard feeds the telemetry panel through query_batch:
+    every stat under the same staleness snapshot."""
+    vm, svc, eng = _telemetry_setup()
+    dash = eng.dashboard()
+    assert {"ticks", "avg_active", "tokens_emitted", "avg_queued"} <= set(dash)
+    assert float(dash["ticks"].value) > 0
+    assert float(dash["tokens_emitted"].value) > 0
+    snaps = {id(v.staleness) for v in dash.values()}
+    assert len(snaps) == 1
+    # named panel override
+    custom = eng.dashboard(queries={"n": Query(agg="count")})
+    assert set(custom) == {"n"} and float(custom["n"].value) > 0
