@@ -2,11 +2,26 @@
 
 Paper: at z=4 the 75th-percentile error halves with a 100-record index;
 overhead stays small relative to maintenance.
+
+``run_bench`` (also exposed as this module's ``__main__`` for CI) A/Bs the
+PR-3 outlier fast path against the seed implementation and writes
+``BENCH_outlier_index.json`` (override with ``BENCH_OUT``):
+
+  * multi-column outlier membership: seed O(N·K) unrolled loop vs the
+    kernels/outlier_member digest path, K ∈ {256, 1024};
+  * streaming top-k maintenance: seed concat-and-rebuild vs incremental
+    threshold-gated ``update_outlier_index`` over a micro-batch stream;
+  * skewed-dashboard serving: ``query_batch`` on a view with an ACTIVE
+    outlier index vs the legacy per-query estimators — parity and the
+    one-fused-pass property (no per-query fallback).
 """
 
 from __future__ import annotations
 
-from typing import List
+import argparse
+import json
+import os
+from typing import Dict, List
 
 import numpy as np
 
@@ -57,4 +72,170 @@ def run(quick: bool = False) -> List[Row]:
         vm.ingest("lineitem", inserts=meta["delta"])
         t = timeit(lambda: vm.svc_refresh("joinView"))
         rows.append(Row(f"fig8b_k{k}", t, "refresh incl. index push-up"))
+    rows.extend(run_bench(quick))
     return rows
+
+
+# ---------------------------------------------------------------------------
+# PR-3 A/B: seed outlier path vs fused fast path → BENCH_outlier_index.json
+# ---------------------------------------------------------------------------
+
+def _bench_membership(quick: bool) -> Dict:
+    """Seed O(N·K) loop vs digest membership, multi-column keys."""
+    import jax.numpy as jnp
+
+    from repro.core.outliers import member_keys, member_keys_loop
+
+    out = {}
+    n = 20_000 if quick else 100_000
+    for k in (256, 1024):
+        rng = np.random.default_rng(k)
+        keys = tuple(jnp.asarray(rng.integers(0, 4096, k).astype(np.int32))
+                     for _ in range(2))
+        probe = [rng.integers(0, 4096, n).astype(np.int32) for _ in range(2)]
+        hits = rng.integers(0, k, n // 10)
+        for c in range(2):
+            probe[c][: len(hits)] = np.asarray(keys[c])[hits]
+        probe = tuple(jnp.asarray(p) for p in probe)
+
+        us_loop = timeit(lambda: np.asarray(member_keys_loop(probe, keys)),
+                         repeats=2, warmup=1)
+        us_digest = timeit(lambda: np.asarray(member_keys(probe, keys)))
+        parity = bool(np.array_equal(np.asarray(member_keys(probe, keys)),
+                                     np.asarray(member_keys_loop(probe, keys))))
+        out[f"k{k}"] = {
+            "n_probe_rows": n,
+            "us_seed_loop": us_loop,
+            "us_digest": us_digest,
+            "speedup": us_loop / max(us_digest, 1e-9),
+            "parity": parity,
+        }
+    return out
+
+
+def _bench_index_update(quick: bool) -> Dict:
+    """Seed concat-and-rebuild vs incremental threshold-gated top-k."""
+    from repro.core.outliers import build_outlier_index, update_outlier_index
+    from repro.relational.relation import from_columns, to_host
+
+    rng = np.random.default_rng(9)
+    n, k = (20_000, 256) if quick else (100_000, 1024)
+    base = from_columns(
+        {"k": np.arange(n, dtype=np.int32),
+         "x": rng.exponential(10.0, n).astype(np.float32)}, pk=["k"])
+    n_batches, bsz = (30, 256) if quick else (60, 1024)
+    batches = []
+    key0 = n
+    for _ in range(n_batches):
+        batches.append(from_columns(
+            {"k": np.arange(key0, key0 + bsz, dtype=np.int32),
+             "x": rng.exponential(10.0, bsz).astype(np.float32)}, pk=["k"]))
+        key0 += bsz
+
+    def stream(incremental):
+        idx = build_outlier_index(base, "R", "x", k=k)
+        for b in batches:
+            idx = update_outlier_index(idx, b, incremental=incremental)
+        np.asarray(idx.records.valid)  # sync
+        return idx
+
+    us_rebuild = timeit(lambda: stream(False), repeats=2, warmup=1)
+    us_incr = timeit(lambda: stream(True), repeats=2, warmup=1)
+    a, b = to_host(stream(True).records), to_host(stream(False).records)
+    parity = sorted(zip(a["k"].tolist(), a["x"].tolist())) == \
+        sorted(zip(b["k"].tolist(), b["x"].tolist()))
+    return {
+        "capacity": k, "n_batches": n_batches, "rows_per_batch": bsz,
+        "us_seed_rebuild_stream": us_rebuild,
+        "us_incremental_stream": us_incr,
+        "speedup": us_rebuild / max(us_incr, 1e-9),
+        "parity": parity,
+    }
+
+
+def _bench_skewed_query_batch(quick: bool) -> Dict:
+    """query_batch on an outlier-indexed view: one fused scan, per-query
+    parity (the acceptance gate: ≤1e-6 relative error, zero fallbacks)."""
+    from benchmarks.common import random_join_queries
+    from repro.core import exact, svc_aqp, svc_corr
+    from repro.query import is_encodable, sample_columns
+
+    vm, meta = join_view_scenario(quick, z=3.0, m=0.1, seed=11)
+    vm.register_outlier_index("joinView", "lineitem", "l_extendedprice", k=256)
+    vm.ingest("lineitem", inserts=meta["delta"])
+    vm.svc_refresh("joinView")
+    mv = vm.views["joinView"]
+    queries = random_join_queries(np.random.default_rng(5), 16)
+    cols = sample_columns(mv.clean_sample)
+    n_fallback = sum(0 if is_encodable(q, cols) else 1 for q in queries)
+
+    def legacy(q, prefer):
+        if prefer == "corr":
+            return svc_corr(exact(mv.materialized, q), mv.clean_sample,
+                            mv.stale_sample, q, mv.m)
+        return svc_aqp(mv.clean_sample, q, mv.m)
+
+    err = {}
+    for prefer in ("aqp", "corr"):
+        ref = [float(legacy(q, prefer).value) for q in queries]
+        got = [float(e.value) for e in
+               vm.query_batch("joinView", queries, prefer=prefer)]
+        err[prefer] = max(abs(x - y) / max(abs(y), 1e-9) for x, y in zip(got, ref))
+
+    us_batched = timeit(
+        lambda: vm.query_batch("joinView", queries, prefer="corr"))
+    us_legacy = timeit(
+        lambda: [legacy(q, "corr") for q in queries], repeats=2, warmup=1)
+    return {
+        "n_queries": len(queries),
+        "n_fallback_queries": n_fallback,
+        "max_rel_err_vs_per_query": err,
+        "us_batched_fused": us_batched,
+        "us_legacy_per_query": us_legacy,
+        "speedup": us_legacy / max(us_batched, 1e-9),
+    }
+
+
+def run_bench(quick: bool = False) -> List[Row]:
+    """Seed-vs-fused A/B rows; writes BENCH_outlier_index.json."""
+    member = _bench_membership(quick)
+    update = _bench_index_update(quick)
+    qbatch = _bench_skewed_query_batch(quick)
+    payload = {
+        "scenario": "outlier_fast_path",
+        "quick": bool(quick),
+        "membership_multicol": member,
+        "index_update_stream": update,
+        "skewed_query_batch": qbatch,
+    }
+    out_path = os.environ.get("BENCH_OUT", "BENCH_outlier_index.json")
+    with open(out_path, "w") as f:
+        json.dump(payload, f, indent=2)
+    rows = []
+    for k, r in member.items():
+        rows.append(Row(
+            f"fig8_member_{k}", r["us_digest"],
+            f"seed_loop={r['us_seed_loop']:.0f}us speedup={r['speedup']:.1f}x "
+            f"parity={r['parity']}"))
+    rows.append(Row(
+        "fig8_index_update", update["us_incremental_stream"],
+        f"rebuild={update['us_seed_rebuild_stream']:.0f}us "
+        f"speedup={update['speedup']:.1f}x parity={update['parity']}"))
+    rows.append(Row(
+        "fig8_skewed_query_batch", qbatch["us_batched_fused"],
+        f"per_query={qbatch['us_legacy_per_query']:.0f}us "
+        f"speedup={qbatch['speedup']:.1f}x fallbacks={qbatch['n_fallback_queries']} "
+        f"rel_err_corr={qbatch['max_rel_err_vs_per_query']['corr']:.2e}"))
+    return rows
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--figures", action="store_true",
+                    help="also run the fig8a/8b accuracy/overhead sweeps")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    rows = run(quick=args.quick) if args.figures else run_bench(quick=args.quick)
+    for row in rows:
+        print(row.csv(), flush=True)

@@ -209,6 +209,21 @@ def correspondence_diff(
 
     Returns (d_i, mask) over the full-outer-join row space.
     """
+    d, mask, _ = correspondence_diff_stratified(clean_sample, stale_sample, query, m)
+    return d, mask
+
+
+def correspondence_diff_stratified(
+    clean_sample: Relation, stale_sample: Relation, query: Query, m: float
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """(d_i, mask, ompi_d): the Def. 4 diff plus its per-row 1−π factor.
+
+    A key pinned by the outlier index (§6) appears in BOTH samples with
+    π = 1, so its diff is deterministic and contributes zero HT variance to
+    the correction — ``ompi_d`` is 0 for rows flagged ``__outlier`` on
+    either side and 1−m otherwise (§6.3 stratified merge; without flag
+    columns every row is at π = m, the conservative seed behavior).
+    """
     pk = clean_sample.schema.pk
     t_new, _ = trans_values(clean_sample, query, m)
     t_old, _ = trans_values(stale_sample, query, m)
@@ -218,7 +233,13 @@ def correspondence_diff(
     old_t = old_t.replace(schema=old_t.schema.with_columns(tuple(old_t.columns)))
     joined = ops.outer_join_unique(new_t, old_t, on=pk, how="outer", suffixes=("_new", "_old"))
     d = joined.col("__t_new") - joined.col("__t_old")  # Ø filled with 0 by the join
-    return jnp.where(joined.valid, d, 0.0), joined.valid
+    pinned = jnp.zeros(joined.valid.shape, bool)
+    for side in ("_new", "_old"):
+        flag = joined.columns.get(OUTLIER_COL + side)
+        if flag is not None:
+            pinned = pinned | flag.astype(bool)
+    ompi_d = jnp.where(pinned, 0.0, 1.0 - m)
+    return jnp.where(joined.valid, d, 0.0), joined.valid, ompi_d
 
 
 def svc_corr(
@@ -232,13 +253,13 @@ def svc_corr(
     """Correction estimate: q(S) + ĉ with CLT bounds on the diff (§5.1/5.2.1)."""
     g = _gamma(confidence)
     if query.agg in ("sum", "count"):
-        d, mask = correspondence_diff(clean_sample, stale_sample, query, m)
+        d, mask, ompi_d = correspondence_diff_stratified(clean_sample, stale_sample, query, m)
         k, s, mean, var = _masked_moments(d, mask)
         c = s
-        # HT variance of the correction total: keys sampled w.p. m (pinned
-        # outlier groups appear in both samples → their diff is exact but we
-        # cannot see the flag post-join; treat all rows at π=m: conservative)
-        stderr = jnp.sqrt(jnp.maximum(jnp.sum(jnp.where(mask, (1.0 - m) * d * d, 0.0)), 0.0))
+        # HT variance of the correction total: keys sampled w.p. m; keys
+        # pinned by the outlier index appear in both samples at π = 1 so
+        # their (exact) diff contributes nothing (§6.3 via ompi_d)
+        stderr = jnp.sqrt(jnp.maximum(jnp.sum(jnp.where(mask, ompi_d * d * d, 0.0)), 0.0))
     elif query.agg == "avg":
         # paired diff over matched cond rows; unmatched rows enter through the
         # two sample means (documented approximation, coverage-tested).
@@ -273,13 +294,14 @@ def variance_comparison(
     _, _, _, var_new = _masked_moments(t_new, mask_new)
     t_old, mask_old = trans_values(stale_sample, query, m)
     _, _, _, var_old = _masked_moments(t_old, mask_old)
-    d, mask_d = correspondence_diff(clean_sample, stale_sample, query, m)
+    d, mask_d, ompi_d = correspondence_diff_stratified(clean_sample, stale_sample, query, m)
     _, _, _, var_d = _masked_moments(d, mask_d)
     # paper's §5.2.2 decomposition (reported for analysis)
     cov = 0.5 * (var_old + var_new - var_d)
-    # decision rule: predicted estimator variances under hash sampling (HT)
+    # decision rule: predicted estimator variances under hash sampling (HT);
+    # outlier-pinned keys contribute no variance on either side (§6.3)
     ht_aqp = _ht_stderr(t_new, mask_new, clean_sample, m) ** 2
-    ht_corr = jnp.sum(jnp.where(mask_d, (1.0 - m) * d * d, 0.0))
+    ht_corr = jnp.sum(jnp.where(mask_d, ompi_d * d * d, 0.0))
     return {
         "var_aqp": ht_aqp,
         "var_corr": ht_corr,

@@ -22,10 +22,26 @@ import numpy as np
 # Toggled by repro.kernels at import time if the Pallas path is requested.
 _USE_PALLAS = False
 
+# Golden-ratio seed-fold constant shared by every η kernel and oracle.  The
+# kernels import ``seed_mix``/``splitmix32`` from here so the
+# bit-identical-hash invariant behind Prop. 2 is structural, not copied.
+SEED_GAMMA = 0x9E3779B9
+
+# Seeds of the two independent splitmix32 folds that form the 64-bit
+# membership digest (key_digest below; kernels/outlier_member).
+DIGEST_SEED_HI = 0x0D1D
+DIGEST_SEED_LO = 0x10CA
+
 
 def use_pallas(flag: bool) -> None:
     global _USE_PALLAS
     _USE_PALLAS = flag
+
+
+def seed_mix(seed: int) -> int:
+    """Fold a user seed into the mixer's initial state (Python int; baked
+    into kernels at trace time — the seed is plan-static in SVC)."""
+    return (SEED_GAMMA * (int(seed) + 1)) & 0xFFFFFFFF
 
 
 def splitmix32(x: jnp.ndarray) -> jnp.ndarray:
@@ -41,11 +57,25 @@ def splitmix32(x: jnp.ndarray) -> jnp.ndarray:
 
 def hash_columns(cols: Sequence[jnp.ndarray], seed: int = 0) -> jnp.ndarray:
     """Mix (composite) key columns into one uint32 hash per row."""
-    mix = np.uint32((0x9E3779B9 * (int(seed) + 1)) & 0xFFFFFFFF)
-    h = jnp.full(cols[0].shape, mix, jnp.uint32)
+    h = jnp.full(cols[0].shape, np.uint32(seed_mix(seed)), jnp.uint32)
     for c in cols:
         h = splitmix32(h ^ splitmix32(c.astype(jnp.uint32)))
     return h
+
+
+def key_digest(cols: Sequence[jnp.ndarray], seed: int = 0) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """64-bit composite-key digest as two uint32 lanes (hi, lo).
+
+    Two independently seeded splitmix32 folds of the same key tuple — a
+    64-bit identity for multi-column keys that stays in 32-bit arrays (jax
+    x64 is disabled).  Collision probability for an N-row probe against a
+    K-entry index is ~N·K/2^64; kernels/outlier_member answers membership
+    on this digest instead of comparing every key column pairwise.
+    """
+    return (
+        hash_columns(cols, DIGEST_SEED_HI + seed),
+        hash_columns(cols, DIGEST_SEED_LO + seed),
+    )
 
 
 def hash_u01(cols: Sequence[jnp.ndarray], seed: int = 0) -> jnp.ndarray:
@@ -74,26 +104,20 @@ def apply_hash(rel, cols: Tuple[str, ...], m: float, seed: int = 0, pin=None):
     """Apply η to a Relation: narrow validity to the hash sample.
 
     ``pin`` (a Relation of key values, or None) pins outlier-index rows into
-    the sample with weight 1 (flagged in ``__outlier``; Def. 5 / §6.2).
+    the sample with weight 1 (flagged in ``__outlier``; Def. 5 / §6.2).  The
+    pinned form is one fused scan (η ∨ digest membership, flag, validity) via
+    kernels/outlier_member — see outliers.apply_hash_with_outliers.
     """
-    arrays = [rel.columns[c] for c in cols]
-    mask = hash_threshold_mask(arrays, m, seed)
     if pin is None:
+        arrays = [rel.columns[c] for c in cols]
+        mask = hash_threshold_mask(arrays, m, seed)
         return rel.replace(valid=rel.valid & mask)
 
-    from repro.core.outliers import member_keys
-    from repro.relational.relation import SENTINEL_KEY, Relation
+    from repro.core.outliers import apply_hash_with_outliers
+    from repro.relational.relation import SENTINEL_KEY
 
     pin_keys = tuple(
         jnp.where(pin.valid, pin.col(c), jnp.asarray(SENTINEL_KEY, pin.col(c).dtype))
         for c in pin.schema.pk
     )
-    probe = tuple(
-        jnp.where(rel.valid, rel.col(c), jnp.asarray(SENTINEL_KEY, rel.col(c).dtype))
-        for c in cols
-    )
-    omask = member_keys(probe, pin_keys)
-    new_cols = dict(rel.columns)
-    new_cols["__outlier"] = (omask & rel.valid).astype(jnp.int8)
-    schema = rel.schema.with_columns(tuple(new_cols))
-    return Relation(new_cols, rel.valid & (mask | omask), schema)
+    return apply_hash_with_outliers(rel, cols, m, seed, pin_keys)

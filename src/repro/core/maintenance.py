@@ -39,7 +39,7 @@ from repro.relational.plan import (
     substitute,
 )
 from repro.relational.execute import execute, execute_jit
-from repro.relational.relation import Relation, compact
+from repro.relational.relation import Relation, compact, next_pow2
 
 
 INS = "__ins"
@@ -226,10 +226,7 @@ def _compact_eta_leaves(plan: Plan, env, m: float, slack: float = 4.0):
 
 
 def _next_pow2_int(n: int) -> int:
-    p = 1
-    while p < n:
-        p <<= 1
-    return p
+    return next_pow2(n)
 
 
 # ---------------------------------------------------------------------------
@@ -410,6 +407,23 @@ def _eval_fused_groupby(spec: _FusedSpec, env: Mapping[str, Relation]) -> Option
     return _fused_eval_fn(spec, num_groups)(fact, dim, pin)
 
 
+def _fused_scan_name(spec: _FusedSpec) -> str:
+    """Deterministic, collision-safe env name for a spliced delta view.
+
+    Every field that shapes the fused result participates, so two fusable
+    group-bys over the SAME delta leaf (different keys/aggs/dim/η) get
+    distinct names instead of silently sharing one env slot; determinism
+    per spec keeps the compiled merge remainder reusable across refreshes.
+    """
+    aggs = "_".join(f"{o}.{fn}.{val}" for o, fn, val in spec.node.aggs)
+    parts = (
+        spec.fact_name, spec.key, aggs, str(spec.node.num_groups),
+        str(spec.dim_name), str(spec.fact_key),
+        repr(spec.m), str(spec.seed), str(spec.pin_name),
+    )
+    return "__fused__" + "__".join(parts)
+
+
 def fuse_delta_groupbys(plan: Plan, env: Mapping[str, Relation]):
     """Splice fused-kernel results in place of fusable delta aggregations.
 
@@ -417,8 +431,10 @@ def fuse_delta_groupbys(plan: Plan, env: Mapping[str, Relation]):
     η+γ shape is evaluated by ``kernels/fused_clean`` and replaced with a
     Scan of the materialized delta view, leaving only the cheap outer-join
     merge for the plan executor.  Returns (plan, env) unchanged when nothing
-    qualifies.  Replacement Scan names depend only on the delta leaf name,
-    so steady-state refreshes reuse the compiled merge remainder.
+    qualifies.  Replacement Scan names are a deterministic function of the
+    fused spec (_fused_scan_name), so steady-state refreshes reuse the
+    compiled merge remainder and distinct group-bys over one delta leaf
+    never collide.
     """
     new_env = dict(env)
     fused_any = False
@@ -429,7 +445,7 @@ def fuse_delta_groupbys(plan: Plan, env: Mapping[str, Relation]):
         if spec is not None:
             rel = _eval_fused_groupby(spec, new_env)
             if rel is not None:
-                name = "__fused__" + spec.fact_name
+                name = _fused_scan_name(spec)
                 new_env[name] = rel
                 fused_any = True
                 return Scan(name, pk=(spec.key,))

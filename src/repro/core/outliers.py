@@ -18,21 +18,26 @@ with the sampled stratum exactly as §6.3 prescribes.
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Tuple
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import hashing
-from repro.relational import ops
-from repro.relational.execute import execute, execute_jit
+from repro.relational.execute import execute_jit
 from repro.relational.plan import Plan, plan_pk
 from repro.relational.relation import SENTINEL_KEY, Relation
 
 
 @dataclasses.dataclass
 class OutlierIndex:
-    """Top-k index over ``attr`` of base relation ``base`` (threshold t)."""
+    """Top-k index over ``attr`` of base relation ``base`` (threshold t).
+
+    Invariant: ``records`` rows are sorted DESCENDING by ``attr`` with
+    invalid slots at the end (build and the incremental merge both preserve
+    it) — the incremental ``update_outlier_index`` merge relies on it.
+    """
 
     base: str
     attr: str
@@ -53,15 +58,99 @@ def build_outlier_index(rel: Relation, base: str, attr: str, k: int) -> OutlierI
     return OutlierIndex(base=base, attr=attr, capacity=k, records=records, threshold=threshold)
 
 
-def update_outlier_index(index: OutlierIndex, delta: Relation) -> OutlierIndex:
-    """Streaming maintenance (§6.1): evict smallest when over capacity."""
-    merged_cols = {
-        c: jnp.concatenate([index.records.col(c), delta.col(c)])
-        for c in index.records.schema.columns
-    }
-    merged_valid = jnp.concatenate([index.records.valid, delta.valid])
-    merged = Relation(merged_cols, merged_valid, index.records.schema)
-    return build_outlier_index(merged, index.base, index.attr, index.capacity)
+def update_outlier_index(
+    index: OutlierIndex, delta: Relation, incremental: bool = True
+) -> OutlierIndex:
+    """Streaming maintenance (§6.1): threshold-gated incremental top-k.
+
+    Deltas are gated against the current top-k threshold first, in
+    O(|∂D|): when the index is full, only rows with ``attr`` strictly above
+    the threshold can displace a member (an equal value loses the tie to
+    the incumbent, matching the rebuild's stable argsort), so a
+    sub-threshold micro-batch returns the index unchanged without touching
+    it.  Threshold-crossing survivors are sorted (|∂D| log |∂D|, the
+    micro-batch — not the index) and merged with the already-descending
+    ``records`` by a searchsorted position merge — no full argsort over
+    capacity + delta per micro-batch.  ``incremental=False`` runs the seed
+    concat-and-rebuild path (benchmark baseline / equivalence oracle).
+    """
+    if not incremental:
+        merged_cols = {
+            c: jnp.concatenate([index.records.col(c), delta.col(c)])
+            for c in index.records.schema.columns
+        }
+        merged_valid = jnp.concatenate([index.records.valid, delta.valid])
+        merged = Relation(merged_cols, merged_valid, index.records.schema)
+        return build_outlier_index(merged, index.base, index.attr, index.capacity)
+
+    gated, n_surv = _topk_gate(
+        index.records.valid, delta.valid, delta.col(index.attr),
+        index.threshold, index.capacity,
+    )
+    # one host sync for the early-out, mirroring the row count ingest
+    # already pays per micro-batch (DeltaLog.offer)
+    if int(n_surv) == 0:
+        return index
+    merge = _topk_merge_fn(index.attr, index.records.schema.columns, index.capacity)
+    cols, valid, threshold = merge(
+        dict(index.records.columns), index.records.valid,
+        dict(delta.columns), gated,
+    )
+    records = Relation(cols, valid, index.records.schema)
+    return OutlierIndex(
+        base=index.base, attr=index.attr, capacity=index.capacity,
+        records=records, threshold=threshold,
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("capacity",))
+def _topk_gate(rec_valid, delta_valid, delta_vals, threshold, capacity: int):
+    """O(|∂D|) threshold gate: (gated vals, survivor count) in ONE compiled
+    call — a sub-threshold micro-batch costs this and nothing else."""
+    vals = jnp.where(delta_valid, jnp.asarray(delta_vals, jnp.float32), -jnp.inf)
+    full = jnp.sum(rec_valid) >= capacity
+    gate = delta_valid & jnp.where(full, vals > threshold, True)
+    return jnp.where(gate, vals, -jnp.inf), jnp.sum(gate)
+
+
+@functools.lru_cache(maxsize=256)
+def _topk_merge_fn(attr: str, columns: Tuple[str, ...], capacity: int):
+    """Compiled bounded merge for one (attr, schema, k): the survivor sort,
+    the position merge, the column scatters, and the threshold recompute
+    all live in ONE jitted computation (steady micro-batch shapes reuse
+    it — the streaming analogue of maintenance's _fused_eval_fn)."""
+
+    def fn(rec_cols, rec_valid, delta_cols, gated_vals):
+        K = rec_valid.shape[0]
+        S = min(capacity, gated_vals.shape[0])  # over-capacity survivors never place
+        T = min(capacity, K + S)  # records may still be growing toward k
+        sorder = jnp.argsort(-gated_vals)[:S]
+        svals = gated_vals[sorder]
+        rvals = jnp.where(rec_valid, jnp.asarray(rec_cols[attr], jnp.float32), -jnp.inf)
+
+        # merge positions of two DESCENDING runs; records win ties (they
+        # precede survivors, exactly the rebuild's concatenation order)
+        pos_r = jnp.arange(K) + jnp.searchsorted(-svals, -rvals, side="left")
+        pos_s = jnp.arange(S) + jnp.searchsorted(-rvals, -svals, side="right")
+        out_cols = {}
+        for c in columns:
+            arena = jnp.zeros((K + S,), rec_cols[c].dtype)
+            arena = arena.at[pos_r].set(rec_cols[c])
+            arena = arena.at[pos_s].set(
+                jnp.asarray(delta_cols[c], rec_cols[c].dtype)[sorder]
+            )
+            out_cols[c] = arena[:T]
+        varena = jnp.zeros((K + S,), bool)
+        varena = varena.at[pos_r].set(rec_valid)
+        varena = varena.at[pos_s].set(svals > -jnp.inf)
+        valid = varena[:T]
+        nvals = jnp.where(valid, jnp.asarray(out_cols[attr], jnp.float32), -jnp.inf)
+        threshold = jnp.where(
+            jnp.any(valid), jnp.min(jnp.where(valid, nvals, jnp.inf)), jnp.inf
+        )
+        return out_cols, valid, threshold
+
+    return jax.jit(fn)
 
 
 def propagate_outlier_keys(
@@ -84,11 +173,28 @@ def propagate_outlier_keys(
 
 
 def member_keys(probe: Tuple[jnp.ndarray, ...], keys: Tuple[jnp.ndarray, ...]) -> jnp.ndarray:
-    """probe[i] ∈ keys (single-column fast path via sorted search)."""
+    """probe[i] ∈ keys.
+
+    Single-column keys keep the exact sorted-search fast path (no hashing
+    at all).  Composite keys go through kernels/outlier_member: both tuples
+    are folded into 64-bit digests with the shared splitmix32 mixer and
+    membership resolves by sorted-digest binary search — one fused pass,
+    replacing the seed's O(N·K) loop unrolled over the index capacity
+    (``member_keys_loop`` below, kept as the A/B baseline and oracle).
+    """
     if len(keys) == 1:
         sk = jnp.sort(keys[0])
         pos = jnp.clip(jnp.searchsorted(sk, probe[0]), 0, sk.shape[0] - 1)
         return (sk[pos] == probe[0]) & (probe[0] != SENTINEL_KEY)
+    from repro.kernels.outlier_member import ops as _om
+
+    return _om.outlier_member(probe, keys)
+
+
+def member_keys_loop(probe: Tuple[jnp.ndarray, ...], keys: Tuple[jnp.ndarray, ...]) -> jnp.ndarray:
+    """Seed reference path: O(N·K) compare unrolled over the index capacity
+    (one dispatch chain per indexed key).  Kept for parity tests and the
+    fig8 outlier benchmark baseline — never called on the hot path."""
     hit = jnp.zeros(probe[0].shape, bool)
     for i in range(keys[0].shape[0]):
         row = jnp.ones(probe[0].shape, bool)
@@ -128,15 +234,21 @@ def apply_hash_with_outliers(
     seed: int,
     outlier_keys: Tuple[jnp.ndarray, ...],
 ) -> Relation:
-    """η ∨ outlier-membership; flags pinned rows with __outlier (weight 1)."""
-    arrays = [rel.columns[c] for c in cols]
-    hmask = hashing.hash_threshold_mask(arrays, m, seed)
+    """η ∨ outlier-membership; flags pinned rows with __outlier (weight 1).
+
+    One fused scan through kernels/outlier_member: the η hash, the 64-bit
+    membership digest, the ``__outlier`` flag, and the validity narrowing
+    all come out of a single pass over the key columns — no materialized
+    membership intermediate, no per-key dispatch chain.
+    """
+    from repro.kernels.outlier_member import ops as _om
+
     probe = tuple(
         jnp.where(rel.valid, rel.col(c), jnp.asarray(SENTINEL_KEY, rel.col(c).dtype))
         for c in cols
     )
-    omask = member_keys(probe, outlier_keys)
+    keep, omask = _om.fused_hash_member(probe, m, seed, outlier_keys)
     new_cols = dict(rel.columns)
     new_cols["__outlier"] = (omask & rel.valid).astype(np.int8)
     schema = rel.schema.with_columns(tuple(new_cols))
-    return Relation(new_cols, rel.valid & (hmask | omask), schema)
+    return Relation(new_cols, rel.valid & keep, schema)

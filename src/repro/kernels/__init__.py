@@ -15,7 +15,13 @@ the paper's profiles (§7: hashing + delta aggregation + estimation):
   multi_agg       — batched-query moment pass: one scan over the
                     correspondence-aligned sample panel accumulates the
                     masked weighted sums/counts/sum-of-squares/HT terms for
-                    ALL Q queries of an encoded QueryBatch (repro.query)
+                    ALL Q queries of an encoded QueryBatch (repro.query),
+                    including the pin-aware HT_D diff-variance row (§6.3)
+  outlier_member  — fused η ∨ outlier-index membership (§6.2): the shared
+                    splitmix32 mixer folds key columns into the η hash and
+                    a 64-bit (hi, lo) membership digest in one pass;
+                    membership resolves by sorted-digest binary search
+                    (XLA) or a VMEM-resident digest-table compare (Pallas)
   flash_attention — causal online-softmax attention (GQA/MQA aware): the
                     §Roofline memory-term lever — scores stay in VMEM
 

@@ -32,17 +32,13 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+# The ONE splitmix32 mixer (core/hashing): importing it makes the
+# bit-identical-hash invariant behind Prop. 2 structural — this kernel
+# cannot drift from hash_threshold/the jnp oracle by copy-edit.
+from repro.core.hashing import splitmix32
+
 BLOCK_R = 256
 BLOCK_G = 128
-
-
-def _mix(x: jnp.ndarray) -> jnp.ndarray:
-    x = x ^ (x >> 16)
-    x = x * jnp.uint32(0x7FEB352D)
-    x = x ^ (x >> 15)
-    x = x * jnp.uint32(0x846CA68B)
-    x = x ^ (x >> 16)
-    return x
 
 
 def _fused_clean_kernel(seed_mix, thresh, gid_ref, pin_ref, val_ref, out_ref):
@@ -55,8 +51,8 @@ def _fused_clean_kernel(seed_mix, thresh, gid_ref, pin_ref, val_ref, out_ref):
         out_ref[...] = jnp.zeros_like(out_ref)
 
     gid = gid_ref[...]  # (BLOCK_R, 1) int32
-    # η_{a,m}: identical mixer + compare to kernels/hash_threshold
-    h = _mix(jnp.uint32(seed_mix) ^ _mix(gid.astype(jnp.uint32)))
+    # η_{a,m}: the shared mixer + compare of kernels/hash_threshold
+    h = splitmix32(jnp.uint32(seed_mix) ^ splitmix32(gid.astype(jnp.uint32)))
     u = h.astype(jnp.float32) * jnp.float32(1.0 / 4294967296.0)
     keep = (u < jnp.float32(thresh)) | (pin_ref[...] != 0)
     keep = keep & (gid >= 0)

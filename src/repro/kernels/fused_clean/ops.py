@@ -13,6 +13,7 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.core.hashing import seed_mix as _seed_mix
 from repro.kernels.fused_clean.kernel import BLOCK_G, BLOCK_R, fused_clean_tiles
 
 # CPU containers run the kernel body in interpret mode; on TPU set False.
@@ -77,9 +78,8 @@ def fused_clean_groupby(
     vals_ext = jnp.concatenate([ones, jnp.asarray(vals, jnp.float32)], axis=1)
     vals_p = jnp.pad(vals_ext, ((0, Rp - R), (0, 0)))
 
-    seed_mix = (0x9E3779B9 * (int(seed) + 1)) & 0xFFFFFFFF
     out = fused_clean_tiles(
-        gid_p, pin_p, vals_p, seed_mix=seed_mix, thresh=float(m),
+        gid_p, pin_p, vals_p, seed_mix=_seed_mix(seed), thresh=float(m),
         num_groups=Gp, interpret=INTERPRET,
     )
     out = out[:num_groups]

@@ -18,17 +18,12 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+# the ONE splitmix32 mixer (core/hashing): Prop. 2's bit-identical-hash
+# invariant is structural, not a copied constant block
+from repro.core.hashing import splitmix32
+
 LANES = 128
 BLOCK_R = 64  # (64, 128) uint32 tile = 32 KiB in VMEM per column
-
-
-def _mix(x: jnp.ndarray) -> jnp.ndarray:
-    x = x ^ (x >> 16)
-    x = x * jnp.uint32(0x7FEB352D)
-    x = x ^ (x >> 15)
-    x = x * jnp.uint32(0x846CA68B)
-    x = x ^ (x >> 16)
-    return x
 
 
 def _hash_threshold_kernel(seed_mix: int, thresh: float, *refs):
@@ -41,7 +36,7 @@ def _hash_threshold_kernel(seed_mix: int, thresh: float, *refs):
     h = jnp.full(col_refs[0].shape, jnp.uint32(seed_mix), jnp.uint32)
     for r in col_refs:
         c = r[...].astype(jnp.uint32)
-        h = _mix(h ^ _mix(c))
+        h = splitmix32(h ^ splitmix32(c))
     u = h.astype(jnp.float32) * jnp.float32(1.0 / 4294967296.0)
     out_ref[...] = (u < jnp.float32(thresh)).astype(jnp.int8)
 

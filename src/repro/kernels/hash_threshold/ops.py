@@ -8,6 +8,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.hashing import seed_mix as _seed_mix
 from repro.kernels.hash_threshold.kernel import BLOCK_R, LANES, hash_threshold_tiles
 
 # CPU containers run the kernel body in interpret mode; on TPU set False.
@@ -27,8 +28,7 @@ def hash_threshold(cols: Sequence[jnp.ndarray], m: float, seed: int = 0) -> jnp.
         return c.reshape(rows, LANES)
 
     cols2d = tuple(pad2d(c) for c in cols)
-    seed_mix = (0x9E3779B9 * (int(seed) + 1)) & 0xFFFFFFFF
     out = hash_threshold_tiles(
-        cols2d, seed_mix, float(m), n_cols=len(cols2d), interpret=INTERPRET
+        cols2d, _seed_mix(seed), float(m), n_cols=len(cols2d), interpret=INTERPRET
     )
     return out.reshape(padded)[:n].astype(bool)

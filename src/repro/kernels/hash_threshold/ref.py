@@ -1,26 +1,18 @@
-"""Pure-jnp oracle for the η hashing kernel (bit-identical mixer)."""
+"""Pure-jnp oracle for the η hashing kernel (bit-identical mixer).
+
+Delegates to core/hashing's reference implementation — the mixer and the
+seed fold live in ONE place, so the kernel ↔ oracle ↔ dispatch-switch
+identity (Prop. 2's determinism requirement) is structural.
+"""
 
 from __future__ import annotations
 
 from typing import Sequence
 
 import jax.numpy as jnp
-import numpy as np
+
+from repro.core.hashing import hash_threshold_mask_ref
 
 
 def hash_threshold_ref(cols: Sequence[jnp.ndarray], m: float, seed: int = 0) -> jnp.ndarray:
-    mix_seed = np.uint32((0x9E3779B9 * (int(seed) + 1)) & 0xFFFFFFFF)
-    h = jnp.full(cols[0].shape, mix_seed, jnp.uint32)
-
-    def _mix(x):
-        x = x ^ (x >> 16)
-        x = x * jnp.uint32(0x7FEB352D)
-        x = x ^ (x >> 15)
-        x = x * jnp.uint32(0x846CA68B)
-        x = x ^ (x >> 16)
-        return x
-
-    for c in cols:
-        h = _mix(h ^ _mix(c.astype(jnp.uint32)))
-    u = h.astype(jnp.float32) * jnp.float32(1.0 / 4294967296.0)
-    return u < jnp.float32(m)
+    return hash_threshold_mask_ref(cols, m, seed)

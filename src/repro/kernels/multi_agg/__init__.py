@@ -9,6 +9,7 @@ instead of ~4Q scans.  See repro.query for the engine that feeds it.
 
 from repro.kernels.multi_agg.ops import multi_agg_moments
 from repro.kernels.multi_agg.ref import (
+    HT_D,
     HT_NEW,
     HT_OLD,
     K_D,
@@ -34,6 +35,6 @@ __all__ = [
     "N_MOMENTS",
     "K_NEW", "S_NEW", "SS_NEW", "HT_NEW",
     "K_OLD", "S_OLD", "SS_OLD", "HT_OLD",
-    "K_D", "S_D", "SS_D",
+    "K_D", "S_D", "SS_D", "HT_D",
     "META_IS_COUNT", "META_IS_AVG", "META_PRED0", "META_PER_PRED",
 ]

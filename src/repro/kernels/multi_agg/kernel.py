@@ -15,7 +15,8 @@ simultaneously, every moment the estimators need:
      unused sides) and the sum/count/avg op codes to form t and the row
      mask per query;
   3. accumulate out[moment, q] += Σ_rows over the grid's row tiles:
-     counts, Σt, Σt², Σ(1−π)t² per side plus Σd, Σd² for d = t_new−t_old.
+     counts, Σt, Σt², Σ(1−π)t² per side plus Σd, Σd² and the pin-aware
+     Σ min(1−π_new, 1−π_old)·d² (HT_D, §6.3) for d = t_new−t_old.
 
 Grid/accumulation discipline follows fused_clean: 1-D row-tile grid, the
 (16, Q) output block revisited every step (sequential TPU grid ⇒ safe).
@@ -98,9 +99,13 @@ def _multi_agg_kernel_two(C, P, xn_ref, vn_ref, wn_ref, on_ref,
     kd = jnp.zeros_like(kn) + jnp.sum(joined)
     sd = jnp.sum(d, axis=0)
     ssd = jnp.sum(d * d, axis=0)
+    # §6.3: rows pinned on either side (ompi = 0) have an exact diff —
+    # their 1−π factor for the CORR HT term is the per-side minimum
+    od = jnp.minimum(on_ref[...], oo_ref[...])
+    htd = jnp.sum(od * d * d, axis=0)
     z = jnp.zeros_like(kn)
     out_ref[...] += jnp.stack(
-        [kn, sn, ssn, htn, ko, so, sso, hto, kd, sd, ssd, z, z, z, z, z]
+        [kn, sn, ssn, htn, ko, so, sso, hto, kd, sd, ssd, htd, z, z, z, z]
     )
 
 

@@ -12,8 +12,11 @@ Moment row layout of the (12, Q) output (shared with kernel.py/ops.py):
   K/S/SS/HT_NEW   per-query count, sum, sum-of-squares, HT variance term
                   of the clean-sample trans table
   K/S/SS/HT_OLD   same over the stale sample
-  K/S/SS_D        same over the correspondence diff d = t_new − t_old
-                  (K_D is query-independent: the joined valid-row count)
+  K/S/SS/HT_D     same over the correspondence diff d = t_new − t_old
+                  (K_D is query-independent: the joined valid-row count;
+                  HT_D weights d² by min(1−π_new, 1−π_old) so rows pinned
+                  by the outlier index — π = 1, exact diff — contribute no
+                  CORR variance, the §6.3 stratified merge)
 
 These are exactly the sufficient statistics for ``svc_aqp`` / ``svc_corr``
 values and CLT bounds and the §5.2.2 ``variance_comparison`` decision.
@@ -28,7 +31,7 @@ import jax.numpy as jnp
 # moment rows
 K_NEW, S_NEW, SS_NEW, HT_NEW = 0, 1, 2, 3
 K_OLD, S_OLD, SS_OLD, HT_OLD = 4, 5, 6, 7
-K_D, S_D, SS_D = 8, 9, 10
+K_D, S_D, SS_D, HT_D = 8, 9, 10, 11
 N_MOMENTS = 12
 
 # meta rows: [is_count; is_avg; then (ge, gt, le, lt) per predicate term]
@@ -104,4 +107,10 @@ def multi_agg_ref(
     kd = z + jnp.sum((valid_new.astype(bool) | valid_old.astype(bool)).astype(jnp.float32))
     sd = jnp.sum(d, axis=0)
     ssd = jnp.sum(d * d, axis=0)
-    return jnp.stack([kn, sn, ssn, htn, ko, so, sso, hto, kd, sd, ssd, z])
+    # §6.3 deterministic stratum: a row pinned by the outlier index on
+    # EITHER side has π = 1 and its correspondence diff is exact, so its
+    # 1−π factor for the CORR HT variance is 0 — elementwise min of the
+    # per-side factors (1−m for sampled rows on both sides).
+    ompi_d = jnp.minimum(ompi_new, ompi_old)
+    htd = jnp.sum(ompi_d[:, None] * d * d, axis=0)
+    return jnp.stack([kn, sn, ssn, htn, ko, so, sso, hto, kd, sd, ssd, htd])

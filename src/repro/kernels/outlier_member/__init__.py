@@ -1,0 +1,25 @@
+"""Fused η ∨ outlier-index membership kernel (§6.2 skew fast path).
+
+One pass over the composite key columns answers the skewed-workload sample
+predicate ``hash(pk) ≤ m OR pk ∈ outlier_keys`` and the ``__outlier`` flag
+at once: the shared splitmix32 mixer (core/hashing) folds each key column
+into the η hash and the two uint32 lanes of a 64-bit membership digest,
+and membership resolves against the digest table — sorted-digest binary
+search on the XLA path, VMEM-resident broadcast compare in the Pallas
+kernel.  Replaces the seed's O(N·K) Python loop over the index capacity.
+"""
+
+from repro.kernels.outlier_member.ops import (
+    MAX_KERNEL_KEYS,
+    fused_hash_member,
+    outlier_member,
+)
+from repro.kernels.outlier_member.ref import fused_hash_member_ref, member_digest_ref
+
+__all__ = [
+    "MAX_KERNEL_KEYS",
+    "fused_hash_member",
+    "outlier_member",
+    "fused_hash_member_ref",
+    "member_digest_ref",
+]

@@ -1,0 +1,58 @@
+"""Pure-jnp oracle for the fused η ∨ outlier-membership kernel.
+
+Membership ``pk ∈ outlier_keys`` is answered on a 64-bit key digest carried
+as two uint32 lanes (hi, lo) — two independently seeded splitmix32 folds of
+the composite key columns (core/hashing.key_digest; jax x64 stays
+disabled).  The oracle materializes the full (R, K) digest-pair equality
+table, the dumbest correct formulation; kernel.py computes the same
+decision tile by tile on the VPU and ops.py's XLA path replaces the dense
+table with a sorted-digest binary search.
+
+Rows whose FIRST key column is ``SENTINEL_KEY`` are never members (the
+masked-probe convention of core/outliers.member_keys); index entries are
+expected pre-masked the same way, so an invalid index slot (all-sentinel
+tuple) can only match an invalid — already excluded — probe row.
+"""
+
+from __future__ import annotations
+
+from typing import Sequence, Tuple
+
+import jax.numpy as jnp
+
+from repro.core.hashing import hash_threshold_mask_ref, key_digest
+from repro.relational.relation import SENTINEL_KEY
+
+
+def member_digest_ref(
+    probe_cols: Sequence[jnp.ndarray],
+    key_hi: jnp.ndarray,
+    key_lo: jnp.ndarray,
+) -> jnp.ndarray:
+    """probe ∈ keys by dense (R, K) digest-pair comparison.
+
+    probe_cols: 1-D int columns of the composite probe key (sentinel-masked
+    for invalid rows); key_hi/key_lo: (K,) uint32 digest lanes of the index
+    keys (core/hashing.key_digest of the sentinel-masked key columns).
+    """
+    phi, plo = key_digest(probe_cols)
+    eq = (phi[:, None] == key_hi[None, :]) & (plo[:, None] == key_lo[None, :])
+    return jnp.any(eq, axis=1) & (probe_cols[0] != SENTINEL_KEY)
+
+
+def fused_hash_member_ref(
+    cols: Sequence[jnp.ndarray],
+    m: float,
+    seed: int,
+    key_hi: jnp.ndarray,
+    key_lo: jnp.ndarray,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """One logical pass: (η_{a,m} ∨ membership, membership) row masks.
+
+    This is the §6.2 sample predicate ``hash(a) ≤ m OR a ∈ outlier_keys``
+    with the ``__outlier`` flag decision, composed from the two existing
+    oracles exactly the way the unfused path materializes them.
+    """
+    keep_eta = hash_threshold_mask_ref(cols, m, seed)
+    member = member_digest_ref(cols, key_hi, key_lo)
+    return keep_eta | member, member

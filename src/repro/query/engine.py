@@ -14,8 +14,11 @@ concurrent dashboard queries cost ~one query:
     dispatches per query.
   * **Fused moments** — kernels/multi_agg tiles the aligned panel once and
     accumulates every sufficient statistic (counts, Σt, Σt², HT terms per
-    side, Σd, Σd² of the diff) for all Q queries simultaneously; estimate
-    assembly is then O(Q) host arithmetic.
+    side, Σd, Σd² and the pin-aware HT_D of the diff) for all Q queries
+    simultaneously; estimate assembly is then O(Q) host arithmetic.  Views
+    with an active §6 outlier index stay on this path: the deterministic
+    stratum rides the per-row weight/1−π vectors, so skewed workloads get
+    the same one-fused-pass serving as uniform ones.
 
 ``run_batch`` also keeps the stale full-view answer **lazy**: q(S) is only
 scanned (one batched one-sided pass) when at least one query resolves to
@@ -33,6 +36,7 @@ import numpy as np
 
 from repro.core.estimators import OUTLIER_COL, Estimate, _gamma, _masked_moments
 from repro.kernels.multi_agg import (
+    HT_D,
     HT_NEW,
     K_D,
     K_NEW,
@@ -262,12 +266,14 @@ def run_batch(
     query by the §5.2.2 HT-variance break-even.  ``materialized`` is only
     scanned (one batched pass) when at least one query resolves to CORR.
     """
-    m = cache.m
     mom = panel_moments(cache, batch, fused=fused, use_pallas=use_pallas)
     kn, sn, ssn, htn = mom[K_NEW], mom[S_NEW], mom[SS_NEW], mom[HT_NEW]
     ko, so = mom[K_OLD], mom[S_OLD]
     kd, sd, ssd = mom[K_D], mom[S_D], mom[SS_D]
-    ht_corr = (1.0 - m) * ssd
+    # HT_D already excludes the deterministic outlier stratum (§6.3): rows
+    # pinned on either side carry ompi = 0 in the cache panels, so the
+    # same single scan serves skewed (indexed) views with no fallback
+    ht_corr = mom[HT_D]
     if prefer == "corr":
         use_corr = np.ones(len(batch), bool)
     elif prefer == "aqp":
@@ -370,7 +376,6 @@ def run_batch_aqp(
 def variance_report(cache: CorrespondenceCache, batch: QueryBatch,
                     fused: bool = True, use_pallas: Optional[bool] = None) -> dict:
     """Batched §5.2.2 break-even report (variance_comparison's keys, (Q,))."""
-    m = cache.m
     mom = panel_moments(cache, batch, fused=fused, use_pallas=use_pallas)
 
     def stable(ss, s, k, two_pass):
@@ -392,7 +397,7 @@ def variance_report(cache: CorrespondenceCache, batch: QueryBatch,
         for i in range(len(batch))
     ])
     ht_aqp = mom[HT_NEW]
-    ht_corr = (1.0 - m) * mom[SS_D]
+    ht_corr = mom[HT_D]
     return {
         "var_aqp": ht_aqp,
         "var_corr": ht_corr,

@@ -29,6 +29,7 @@ from repro.relational.relation import (
     keys_equal,
     lexsort_indices,
     masked_keys,
+    next_pow2,
 )
 
 
@@ -325,25 +326,51 @@ def groupby(
 # ---------------------------------------------------------------------------
 
 def _member(rel: Relation, probe_cols: Tuple[jnp.ndarray, ...], probe_valid) -> jnp.ndarray:
-    """Is each probe key present among rel's valid keys? (composite keys)."""
+    """Is each probe key present among rel's valid keys? (composite keys).
+
+    EXACT on purpose: ∩/− sit on the exact maintenance path (delete
+    application to the materialized view), so composite keys use a
+    lexicographic binary search over the sorted key columns — the same
+    branchless log₂ K descent as kernels/outlier_member but comparing the
+    actual key tuples, never a probabilistic digest.  Replaces the seed's
+    compare chain unrolled over rel.capacity.
+    """
     rk = masked_keys(rel)
+    if len(rk) == 1:
+        srk = jnp.sort(rk[0])
+        pos = jnp.searchsorted(srk, probe_cols[0])
+        safe = jnp.clip(pos, 0, rel.capacity - 1)
+        hit = (srk[safe] == probe_cols[0]) & probe_valid
+        return hit
     order = lexsort_indices(rk)
     srk = tuple(k[order] for k in rk)
-    if len(srk) == 1:
-        pos = jnp.searchsorted(srk[0], probe_cols[0])
-        safe = jnp.clip(pos, 0, rel.capacity - 1)
-        hit = (srk[0][safe] == probe_cols[0]) & probe_valid
-        return hit
-    # composite: fall back to O(n·k) scan over few key columns via sort-merge
-    # encode pairwise — compare against all starts with equal first key.
-    # For simplicity (composite keys are rare in plans) use dense compare.
-    hit = jnp.zeros(probe_cols[0].shape, bool)
-    for i in range(rel.capacity):
-        row_eq = probe_valid & rel.valid[i]
-        for pc, rc in zip(probe_cols, rk):
-            row_eq = row_eq & (pc == rc[i])
-        hit = hit | row_eq
-    return hit
+    K = rel.capacity
+    Kp = next_pow2(max(K, 2))
+    if Kp != K:  # sentinel pads sort last and match no valid probe
+        srk = tuple(
+            jnp.pad(k, (0, Kp - K), constant_values=jnp.asarray(SENTINEL_KEY, k.dtype))
+            for k in srk
+        )
+
+    def tuple_le(idx):
+        """srk[idx] ≤ probe, lexicographically (column cascade)."""
+        le = srk[-1][idx] <= probe_cols[-1]
+        for c in range(len(srk) - 2, -1, -1):
+            le = (srk[c][idx] < probe_cols[c]) | ((srk[c][idx] == probe_cols[c]) & le)
+        return le
+
+    pos = jnp.full(probe_cols[0].shape, -1, jnp.int32)
+    step = Kp  # steps Kp, Kp/2, …, 1 reach every index up to Kp−1
+    while step >= 1:
+        cand = pos + step
+        le = (cand < Kp) & tuple_le(jnp.minimum(cand, Kp - 1))
+        pos = jnp.where(le, cand, pos)
+        step //= 2
+    safe = jnp.clip(pos, 0, Kp - 1)
+    hit = pos >= 0
+    for c in range(len(srk)):
+        hit = hit & (srk[c][safe] == probe_cols[c])
+    return hit & probe_valid
 
 
 def union_keyed(left: Relation, right: Relation) -> Relation:

@@ -152,6 +152,14 @@ def num_valid(rel: Relation) -> jnp.ndarray:
     return jnp.sum(rel.valid.astype(jnp.int32))
 
 
+def next_pow2(n: int) -> int:
+    """Smallest power of two ≥ n (arena/tile sizing; ≥ 1)."""
+    p = 1
+    while p < n:
+        p <<= 1
+    return p
+
+
 def compact(rel: Relation, capacity: int | None = None) -> Relation:
     """Sort valid rows (by key) to the front and optionally resize capacity."""
     cap = capacity if capacity is not None else rel.capacity

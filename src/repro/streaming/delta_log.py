@@ -106,18 +106,24 @@ class DeltaLog:
     def drain(self) -> Tuple[Optional[Relation], Optional[Relation]]:
         """Coalesce and clear the ring: (inserts, deletes) in seq order.
 
-        Batches are replayed lowest-seq first; per primary key the HIGHEST
-        sequence number wins (``union_keyed`` gives left priority, so we fold
-        newer batches over older ones).
+        Insert-only windows keep the one-sort newest-wins dedup.  Windows
+        with deletes run the SIGNED coalesce (_coalesce_signed): per primary
+        key the insert and delete event streams are interleaved in sequence
+        order so that a delete cancels an insert from EARLIER in the same
+        window instead of leaving both sides to double-count — the signed
+        delete+insert algebra of §3.1 becomes invariant to where watermark
+        boundaries fall.
         """
         if not self._ring:
             return None, None
         batches = sorted(self._ring, key=lambda mb: mb.seq)
         self._ring = []
         self.drained_through_seq = max(self.drained_through_seq, batches[-1].seq)
-        ins = _coalesce([mb.inserts for mb in batches if mb.inserts is not None])
-        dels = _coalesce([mb.deletes for mb in batches if mb.deletes is not None])
-        return ins, dels
+        ins = [(mb.seq, mb.inserts) for mb in batches if mb.inserts is not None]
+        dels = [(mb.seq, mb.deletes) for mb in batches if mb.deletes is not None]
+        if not dels:
+            return _coalesce([r for _, r in ins]), None
+        return _coalesce_signed(ins, dels)
 
 
 def _coalesce(rels: List[Relation]) -> Optional[Relation]:
@@ -159,6 +165,92 @@ def _coalesce(rels: List[Relation]) -> Optional[Relation]:
     out = Relation({c: v[order] for c, v in cols.items()}, keep, schema)
     n = int(np.asarray(keep.sum()))
     return compact(out, _next_pow2_int(max(n, 1)))
+
+
+def _coalesce_signed(
+    ins: List[Tuple[int, Relation]], dels: List[Tuple[int, Relation]]
+) -> Tuple[Optional[Relation], Optional[Relation]]:
+    """Coalesce interleaved insert/delete micro-batches per primary key.
+
+    Events per pk replay in (seq, kind) order — a delete at seq s applies
+    BEFORE an insert at the same s (update = delete + insert, §3.1).  The
+    per-pk reduction of the event string is:
+
+      * the surviving insert is the LAST event iff that event is an insert
+        (every earlier insert was superseded or cancelled by a delete);
+      * the surviving delete is the FIRST event iff that event is a delete
+        (it refers to a pre-window row; any later delete cancels an
+        in-window insert and must NOT be emitted, else the window
+        double-subtracts a row the dropped insert never added).
+
+    Both reductions are run boundaries of ONE lexsort over
+    (pk, seq, kind, arena position) — a single sort + two boundary masks,
+    independent of batch count, and the result no longer depends on where
+    the drain (watermark) boundaries fell.
+    """
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.core.maintenance import _next_pow2_int
+    from repro.relational.relation import (
+        SENTINEL_KEY,
+        keys_equal,
+        masked_keys,
+    )
+
+    if not ins:
+        # delete-only window: every delete refers to a pre-window row;
+        # duplicates are retries — keep the OLDEST per pk (reversed batch
+        # order turns _coalesce's newest-wins into oldest-wins)
+        return None, _coalesce([r for _, r in reversed(dels)])
+
+    def _side(batches: List[Tuple[int, Relation]]):
+        schema = batches[0][1].schema
+        cols = {
+            c: jnp.concatenate([r.col(c) for _, r in batches])
+            for c in schema.columns
+        }
+        valid = jnp.concatenate([r.valid for _, r in batches])
+        seq = jnp.concatenate(
+            [jnp.full((r.capacity,), s, jnp.int32) for s, r in batches]
+        )
+        return Relation(cols, valid, schema), seq
+
+    ins_rel, ins_seq = _side(ins)
+    del_rel, del_seq = _side(dels)
+    n_ins = ins_rel.capacity
+
+    ins_keys = masked_keys(ins_rel)
+    del_keys = masked_keys(del_rel)
+    keys = tuple(jnp.concatenate([a, b]) for a, b in zip(ins_keys, del_keys))
+    seq = jnp.concatenate([ins_seq, del_seq])
+    kind = jnp.concatenate(  # 0 = delete, 1 = insert: del first at equal seq
+        [jnp.ones((n_ins,), jnp.int32), jnp.zeros((del_rel.capacity,), jnp.int32)]
+    )
+    valid = jnp.concatenate([ins_rel.valid, del_rel.valid])
+    arena = jnp.arange(valid.shape[0], dtype=jnp.int32)
+
+    # lexsort: least→most significant (arena, kind, seq, pk cols)
+    order = jnp.lexsort((arena, kind, seq) + tuple(reversed(keys)))
+    sk = tuple(k[order] for k in keys)
+    prev = tuple(
+        jnp.concatenate([jnp.full((1,), SENTINEL_KEY, k.dtype), k[:-1]]) for k in sk
+    )
+    nxt = tuple(
+        jnp.concatenate([k[1:], jnp.full((1,), SENTINEL_KEY, k.dtype)]) for k in sk
+    )
+    first = ~keys_equal(sk, prev)
+    last = ~keys_equal(sk, nxt)
+    skind = kind[order]
+    emit = valid[order] & jnp.where(skind == 1, last, first)
+    keep = jnp.zeros_like(valid).at[order].set(emit)
+
+    def _compact(rel: Relation, mask) -> Relation:
+        out = Relation(dict(rel.columns), rel.valid & mask, rel.schema)
+        n = int(np.asarray(out.valid.sum()))
+        return compact(out, _next_pow2_int(max(n, 1)))
+
+    return _compact(ins_rel, keep[:n_ins]), _compact(del_rel, keep[n_ins:])
 
 
 class PartitionedDeltaLog:

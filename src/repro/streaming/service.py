@@ -112,7 +112,13 @@ class StreamingViewService:
     # -- refresh -------------------------------------------------------------
     def refresh(self) -> float:
         """Drain every log into the ViewManager and clean all affected
-        samples; returns total svc_refresh wall time (seconds)."""
+        samples; returns total svc_refresh wall time (seconds).
+
+        Outlier-index maintenance (§6.1) rides the same drain: the
+        coalesced inserts flow through the incremental threshold-gated
+        ``update_outlier_index`` inside ``_ingest_pending`` — a
+        sub-threshold window costs O(|∂D|) and never touches the index —
+        before ``svc_refresh`` re-derives the pin set for cleaning."""
         touched = set()
         for base, log in self.logs.items():
             ins, dels = log.drain()

@@ -44,6 +44,7 @@ from repro.core.maintenance import (
 from repro.core.minmax import svc_minmax
 from repro.core.outliers import (OutlierIndex, build_outlier_index, flag_outliers,
     propagate_outlier_keys, update_outlier_index)
+from repro.relational.plan import plan_leaves
 from repro.relational.execute import execute
 from repro.relational.relation import Relation, compact, from_columns
 from repro.relational.relation import empty as empty_relation
@@ -185,14 +186,21 @@ class ViewManager:
 
     def _deltas_for(self, mv: ManagedView) -> DeltaSet:
         """Pending deltas, with EMPTY stand-ins for quiet delta bases so the
-        cleaning/maintenance plans always find their Scan leaves."""
+        cleaning/maintenance plans always find their Scan leaves.
+
+        Insert AND delete leaves are both back-filled (a ``with_deletes``
+        strategy has ``base__del`` Scans that must resolve even on an
+        insert-only refresh window — previously a KeyError)."""
         out = DeltaSet(inserts=dict(self.pending.inserts),
                        deletes=dict(self.pending.deletes))
+        leaves = {leaf.name for leaf in plan_leaves(mv.strategy)}
         for b in mv.delta_bases:
+            base = self.base[b]
+            dtypes = {c: base.col(c).dtype for c in base.schema.columns}
             if b not in out.inserts:
-                base = self.base[b]
-                dtypes = {c: base.col(c).dtype for c in base.schema.columns}
                 out.inserts[b] = empty_relation(dtypes, base.schema.pk, capacity=8)
+            if b + DEL in leaves and b not in out.deletes:
+                out.deletes[b] = empty_relation(dtypes, base.schema.pk, capacity=8)
         return out
 
     # -- SVC: clean the samples only (cheap, between maintenance periods) ----

@@ -249,6 +249,41 @@ def test_fused_dispatch_falls_back_on_negative_keys():
     assert np.array_equal(a["n"], b["n"])
 
 
+def test_fuse_delta_groupbys_two_groupbys_one_leaf_no_collision():
+    """Two fusable group-bys over the SAME delta leaf must splice under
+    DISTINCT env names (the seed named both '__fused__'+leaf: the second
+    silently overwrote the first and both branches read one result)."""
+    import jax.numpy as jnp
+
+    from repro.core.maintenance import fuse_delta_groupbys
+    from repro.relational.execute import execute
+    from repro.relational.plan import GroupByNode, HashNode, Scan, UnionNode
+    from repro.relational.relation import from_columns, to_host
+
+    fact = from_columns(
+        {"rid": np.arange(8, dtype=np.int32),
+         "g": np.array([0, 0, 1, 1, 2, 2, 3, 3], np.int32),
+         "v": np.arange(8, dtype=np.float32),
+         "w": 10.0 * np.arange(8, dtype=np.float32)},
+        pk=["rid"],
+    )
+    eta = HashNode(child=Scan("T__ins", pk=("rid",)), cols=("g",), m=1.0, seed=0)
+    g_v = GroupByNode(child=eta, keys=("g",), aggs=(("a", "sum", "v"),), num_groups=16)
+    g_w = GroupByNode(child=eta, keys=("g",), aggs=(("a", "sum", "w"),), num_groups=16)
+    plan = UnionNode(left=g_v, right=g_w)
+    env = {"T__ins": fact}
+
+    fused_plan, fused_env = fuse_delta_groupbys(plan, env)
+    spliced = [n for n in fused_env if n.startswith("__fused__")]
+    assert len(spliced) == 2, spliced  # distinct names, no overwrite
+
+    got = to_host(execute(fused_plan, fused_env))
+    want = to_host(execute(plan, env))
+    ga = dict(zip(got["g"].tolist(), got["a"].tolist()))
+    wa = dict(zip(want["g"].tolist(), want["a"].tolist()))
+    assert ga == wa  # union keeps the LEFT (sum of v) aggregates
+
+
 def test_fused_dispatch_falls_back_on_nonfusable_plan():
     """Views whose delta aggregation is not groupby-sum/count over η-filtered
     rows (here: mean agg) take the plan-executor path under fused=True."""
@@ -283,6 +318,67 @@ def test_fused_dispatch_falls_back_on_nonfusable_plan():
         return out
 
     assert walk(cp) == []  # nothing fusable: mean is not sum/count
+
+
+# ---------------------------------------------------------------------------
+# outlier_member: fused η ∨ digest membership (§6.2 skew fast path)
+# ---------------------------------------------------------------------------
+
+from repro.core.hashing import key_digest
+from repro.kernels.outlier_member import fused_hash_member, outlier_member
+from repro.kernels.outlier_member.ref import fused_hash_member_ref, member_digest_ref
+
+
+def _member_scenario(rng, n, k, ncols):
+    from repro.relational.relation import SENTINEL_KEY
+
+    keys = tuple(jnp.asarray(rng.integers(0, 400, k).astype(np.int32))
+                 for _ in range(ncols))
+    probe = [rng.integers(0, 400, n).astype(np.int32) for _ in range(ncols)]
+    hits = rng.integers(0, k, max(1, n // 8))
+    for c in range(ncols):
+        probe[c][: len(hits)] = np.asarray(keys[c])[hits]
+    probe[0][-1] = SENTINEL_KEY  # sentinel probe row never matches
+    return tuple(jnp.asarray(p) for p in probe), keys
+
+
+@pytest.mark.parametrize("n", [1, 255, 256, 4096, 5001])
+@pytest.mark.parametrize("k", [1, 64, 257])
+@pytest.mark.parametrize("ncols", [1, 2, 3])
+def test_outlier_member_kernel_sweep(n, k, ncols):
+    """Pallas kernel == XLA binary-search path == dense oracle."""
+    rng = np.random.default_rng(n * 13 + k + ncols)
+    probe, keys = _member_scenario(rng, n, k, ncols)
+    khi, klo = key_digest(keys)
+    want = np.asarray(member_digest_ref(probe, khi, klo))
+    got_xla = np.asarray(outlier_member(probe, keys, use_pallas=False))
+    got_pal = np.asarray(outlier_member(probe, keys, use_pallas=True))
+    assert np.array_equal(got_xla, want)
+    assert np.array_equal(got_pal, want)
+
+
+@pytest.mark.parametrize("m", [0.0, 0.3, 1.0])
+def test_fused_hash_member_matches_composed_oracles(m):
+    """keep == η-oracle ∨ member-oracle bit-for-bit on both paths."""
+    rng = np.random.default_rng(int(m * 10) + 3)
+    probe, keys = _member_scenario(rng, 3000, 128, 2)
+    khi, klo = key_digest(keys)
+    want_keep, want_mem = fused_hash_member_ref(probe, m, 11, khi, klo)
+    for up in (False, True):
+        keep, mem = fused_hash_member(probe, m, 11, keys, use_pallas=up)
+        assert np.array_equal(np.asarray(keep), np.asarray(want_keep)), up
+        assert np.array_equal(np.asarray(mem), np.asarray(want_mem)), up
+
+
+def test_outlier_member_match_in_last_table_slot():
+    """Regression: the binary-search descent must reach index K−1."""
+    keys = (jnp.asarray(np.arange(64, dtype=np.int32)),
+            jnp.zeros(64, jnp.int32))
+    khi, _ = key_digest(keys)
+    last_key = int(np.argmax(np.asarray(khi)))  # sorts to the last slot
+    probe = (jnp.asarray(np.array([last_key], np.int32)), jnp.zeros(1, jnp.int32))
+    assert bool(np.asarray(outlier_member(probe, keys, use_pallas=False))[0])
+    assert bool(np.asarray(outlier_member(probe, keys, use_pallas=True))[0])
 
 
 # ---------------------------------------------------------------------------
@@ -396,3 +492,46 @@ def test_multi_agg_one_sided_kernel_matches_ref(shape):
     want = np.asarray(multi_agg_ref(xn, vn, wn, on, sel, meta))
     got = np.asarray(multi_agg_moments(xn, vn, wn, on, sel, meta, use_pallas=True))
     np.testing.assert_allclose(got, want, rtol=2e-5, atol=1e-2)
+
+
+def test_multi_agg_ht_d_excludes_pinned_rows():
+    """HT_D weights d² by min(1−π_new, 1−π_old): rows pinned by the outlier
+    index on either side (ompi = 0) contribute nothing; with no pins at all
+    HT_D reduces to the seed's (1−m)·SS_D."""
+    from repro.kernels.multi_agg import HT_D, SS_D
+
+    rng = np.random.default_rng(5)
+    R, C = 300, 3
+    m = 0.25
+    x_new, vn, _, _ = _random_panel(rng, R, C)
+    x_old, vo, _, _ = _random_panel(rng, R, C)
+    pin_new = rng.uniform(size=R) < 0.15
+    pin_old = pin_new.copy()
+    pin_old[:10] = ~pin_old[:10]  # a few one-sided pins too
+    wn = _jnp.asarray(np.where(pin_new, 1.0, 1.0 / m).astype(np.float32))
+    wo = _jnp.asarray(np.where(pin_old, 1.0, 1.0 / m).astype(np.float32))
+    on = _jnp.asarray(np.where(pin_new, 0.0, 1.0 - m).astype(np.float32))
+    oo = _jnp.asarray(np.where(pin_old, 0.0, 1.0 - m).astype(np.float32))
+    sel, meta = _random_batch(rng, C, 6, 1)
+
+    for up in (False, True):
+        mom = np.asarray(multi_agg_moments(x_new, vn, wn, on, sel, meta,
+                                           x_old, vo, wo, oo, use_pallas=up))
+        from repro.kernels.multi_agg.ref import _trans_table
+
+        tn, _ = _trans_table(x_new, vn.astype(bool), wn, sel, meta)
+        to, _ = _trans_table(x_old, vo.astype(bool), wo, sel, meta)
+        d = np.asarray(tn - to)
+        od = np.minimum(np.asarray(on), np.asarray(oo))[:, None]
+        want_htd = (od * d * d).sum(axis=0)
+        np.testing.assert_allclose(mom[HT_D], want_htd, rtol=2e-5, atol=1e-2)
+        # pinned-both-sides rows are excluded even where d != 0
+        both = pin_new & pin_old
+        assert (np.abs(d[both]).sum() > 0) or not both.any()
+
+    # no pins anywhere ⇒ HT_D == (1−m)·SS_D exactly
+    ones_w = _jnp.full(R, 1.0 / m, _jnp.float32)
+    ompi = _jnp.full(R, 1.0 - m, _jnp.float32)
+    mom0 = np.asarray(multi_agg_moments(x_new, vn, ones_w, ompi, sel, meta,
+                                        x_old, vo, ones_w, ompi, use_pallas=False))
+    np.testing.assert_allclose(mom0[HT_D], (1.0 - m) * mom0[SS_D], rtol=2e-5, atol=1e-2)

@@ -1,12 +1,19 @@
 """Outlier indexing (§6): top-k build, push-up, stratified estimates."""
 
+import jax.numpy as jnp
 import numpy as np
 import pytest
 
 from repro.core import Query, ViewDef
-from repro.core.outliers import build_outlier_index, update_outlier_index
+from repro.core.outliers import (
+    build_outlier_index,
+    member_keys,
+    member_keys_loop,
+    update_outlier_index,
+)
 from repro.data.synthetic import make_log_video, grow_log, zipf_magnitudes
 from repro.relational import from_columns
+from repro.relational.relation import SENTINEL_KEY, to_host
 from repro.relational.plan import FKJoin, GroupByNode, Scan
 from repro.views import ViewManager
 
@@ -80,6 +87,122 @@ def test_outlier_index_improves_skewed_estimates():
     rng = np.random.default_rng(2)
     e_idx = errors(True)
     assert e_idx <= e_plain * 1.05, (e_plain, e_idx)
+
+
+# ---------------------------------------------------------------------------
+# member_keys: digest fast path vs the seed loop (multi-column keys)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("ncols", [2, 3])
+@pytest.mark.parametrize("n,k", [(100, 8), (5000, 300), (4097, 1024)])
+def test_member_keys_multicol_parity_sweep(ncols, n, k):
+    """Digest path == seed O(N·K) loop == kernel oracle, incl. sentinels."""
+    from repro.core.hashing import key_digest
+    from repro.kernels.outlier_member import member_digest_ref, outlier_member
+
+    rng = np.random.default_rng(n + k + ncols)
+    keys = tuple(jnp.asarray(rng.integers(0, 500, k).astype(np.int32))
+                 for _ in range(ncols))
+    probe = [rng.integers(0, 500, n).astype(np.int32) for _ in range(ncols)]
+    # plant guaranteed members and sentinel rows among the probes
+    hits = rng.integers(0, k, max(1, n // 10))
+    for c in range(ncols):
+        probe[c][: len(hits)] = np.asarray(keys[c])[hits]
+    probe[0][len(hits): len(hits) + 3] = SENTINEL_KEY
+    probe = tuple(jnp.asarray(p) for p in probe)
+
+    want = np.asarray(member_keys_loop(probe, keys))
+    assert not np.asarray(want)[len(hits): len(hits) + 3].any()  # sentinels excluded
+    got = np.asarray(member_keys(probe, keys))
+    got_kernel = np.asarray(outlier_member(probe, keys, use_pallas=True))
+    khi, klo = key_digest(keys)
+    got_ref = np.asarray(member_digest_ref(probe, khi, klo))
+    assert np.array_equal(got, want)
+    assert np.array_equal(got_kernel, want)
+    assert np.array_equal(got_ref, want)
+
+
+def test_member_digest_survives_32bit_collision():
+    """Hash-collision stress: two composite keys colliding in the hi digest
+    lane must still be distinguished by the 64-bit (hi, lo) pair — a 32-bit
+    digest membership would report a false positive here.
+
+    (A SINGLE hashed column cannot collide at all — splitmix32 is a uint32
+    bijection — so the hunt runs over two-column tuples, where the fold
+    compresses 64 key bits into each 32-bit lane and the birthday bound
+    guarantees hi-lane collisions among ~200k candidates.)
+    """
+    from repro.core.hashing import key_digest
+
+    n = 200_000
+    c1 = jnp.asarray((np.arange(n) % 1000).astype(np.int32))
+    c2 = jnp.asarray((np.arange(n) // 1000).astype(np.int32))
+    hi, lo = key_digest((c1, c2))
+    hi_host, lo_host = np.asarray(hi), np.asarray(lo)
+    order = np.argsort(hi_host, kind="stable")
+    shi = hi_host[order]
+    dup = np.nonzero((shi[1:] == shi[:-1])
+                     & (lo_host[order][1:] != lo_host[order][:-1]))[0]
+    assert dup.size > 0, "need ≥1 hi-only collision among 200k keys (birthday bound)"
+    a, b = int(order[dup[0]]), int(order[dup[0] + 1])
+    ka = (jnp.asarray(np.array([a % 1000], np.int32)),
+          jnp.asarray(np.array([a // 1000], np.int32)))
+    probe = (jnp.asarray(np.array([a % 1000, b % 1000], np.int32)),
+             jnp.asarray(np.array([a // 1000, b // 1000], np.int32)))
+    got = np.asarray(member_keys(probe, ka))
+    assert got[0] and not got[1], "lo lane must break the hi-lane collision"
+    from repro.kernels.outlier_member import outlier_member
+
+    got_k = np.asarray(outlier_member(probe, ka, use_pallas=True))
+    assert got_k[0] and not got_k[1]
+
+
+def test_update_outlier_index_incremental_matches_rebuild_shuffled():
+    """Incremental threshold-gated maintenance == concat-and-rebuild across
+    shuffled micro-batch orders (top-k contents and threshold)."""
+    rng = np.random.default_rng(7)
+    n = 150
+    base = from_columns(
+        {"k": np.arange(n, dtype=np.int32),
+         "x": (rng.permutation(n) * 2.0).astype(np.float32)}, pk=["k"])
+    batches = []
+    key0 = n
+    for _ in range(12):
+        sz = int(rng.integers(1, 30))
+        vals = rng.exponential(80.0, sz).astype(np.float32)
+        batches.append(from_columns(
+            {"k": np.arange(key0, key0 + sz, dtype=np.int32), "x": vals}, pk=["k"]))
+        key0 += sz
+
+    for perm_seed in range(3):
+        order = np.random.default_rng(perm_seed).permutation(len(batches))
+        idx_i = build_outlier_index(base, "R", "x", k=20)
+        idx_r = build_outlier_index(base, "R", "x", k=20)
+        for bi in order:
+            idx_i = update_outlier_index(idx_i, batches[bi])
+            idx_r = update_outlier_index(idx_r, batches[bi], incremental=False)
+        a, b = to_host(idx_i.records), to_host(idx_r.records)
+        assert sorted(zip(a["k"].tolist(), a["x"].tolist())) == \
+            sorted(zip(b["k"].tolist(), b["x"].tolist()))
+        np.testing.assert_allclose(float(idx_i.threshold), float(idx_r.threshold))
+        # the records invariant the merge relies on: descending, invalid last
+        xs = np.where(np.asarray(idx_i.records.valid),
+                      np.asarray(idx_i.records.col("x")), -np.inf)
+        assert np.all(xs[:-1] >= xs[1:])
+
+
+def test_update_outlier_index_subthreshold_batch_is_identity():
+    """A micro-batch entirely below the top-k threshold returns the SAME
+    index object — the O(|∂D|) rejection never touches the index."""
+    rel = from_columns(
+        {"k": np.arange(50, dtype=np.int32),
+         "x": np.arange(50, dtype=np.float32)}, pk=["k"])
+    idx = build_outlier_index(rel, "R", "x", k=5)  # threshold 45
+    low = from_columns(
+        {"k": np.arange(100, 140, dtype=np.int32),
+         "x": np.linspace(0.0, 44.0, 40).astype(np.float32)}, pk=["k"])
+    out = update_outlier_index(idx, low)
+    assert out is idx
 
 
 def test_no_double_counting():

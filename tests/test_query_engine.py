@@ -228,6 +228,79 @@ def test_avg_stderr_stable_for_large_magnitude_columns():
         np.testing.assert_allclose(float(e.value), float(ref.value), rtol=1e-5)
 
 
+@pytest.fixture
+def vm_skewed():
+    """Join view over heavy-tailed bytes with an ACTIVE outlier index —
+    the §6 skewed-workload configuration."""
+    from repro.data.synthetic import zipf_magnitudes
+
+    rng = np.random.default_rng(3)
+    nv, nl = 300, 8000
+    log, video = make_log_video(rng, nv, nl)
+    import jax.numpy as jnp
+    heavy = zipf_magnitudes(rng, nl, 2.5, 10.0)
+    log = log.replace(columns={**log.columns,
+                               "bytes": jnp.asarray(np.pad(heavy, (0, log.capacity - nl)))})
+    plan = GroupByNode(
+        child=FKJoin(fact=Scan("Log", pk=("sessionId",)),
+                     dim=Scan("Video", pk=("videoId",)), fact_key="videoId"),
+        keys=("videoId",),
+        aggs=(("visitCount", "count", None), ("totalBytes", "sum", "bytes")),
+        num_groups=512,
+    )
+    vm = ViewManager()
+    vm.register_base("Log", log)
+    vm.register_base("Video", video)
+    vm.register_view(ViewDef("v", plan), delta_bases=("Log",), m=0.15, seed=3,
+                     delta_group_capacity=512)
+    vm.register_outlier_index("v", "Log", "bytes", k=60)
+    vm.ingest("Log", inserts=grow_log(rng, nv, nl, 2000))
+    vm.svc_refresh("v")
+    return vm
+
+
+@pytest.mark.parametrize("prefer", [None, "aqp", "corr"])
+def test_query_batch_skewed_outlier_stratum_one_pass(vm_skewed, prefer):
+    """With an active outlier index, the whole dashboard batch stays on the
+    one-fused-pass path (every query encodable, no per-query fallback) and
+    matches the per-query estimators — including the §6.3 pin-aware CORR
+    variance (HT_D): pinned rows contribute no stderr on either path."""
+    from repro.query import is_encodable, sample_columns
+
+    vm = vm_skewed
+    mv = vm.views["v"]
+    assert np.asarray(mv.clean_sample.col("__outlier")).sum() > 0  # stratum live
+    cols = sample_columns(mv.clean_sample)
+    assert all(is_encodable(q, cols) for q in MIXED_QUERIES)  # no fallback
+    ests = vm.query_batch("v", MIXED_QUERIES, prefer=prefer)
+    for q, e in zip(MIXED_QUERIES, ests):
+        ref = legacy_estimate(mv, q, prefer)
+        assert e.method == ref.method, (q, e.method, ref.method)
+        np.testing.assert_allclose(float(e.value), float(ref.value),
+                                   rtol=1e-4, atol=1e-3)
+        rtol_std = 2e-2 if q.agg == "avg" else 1e-3
+        np.testing.assert_allclose(float(e.stderr), float(ref.stderr),
+                                   rtol=rtol_std, atol=1e-3)
+
+
+def test_corr_stderr_shrinks_with_outlier_stratum(vm_skewed):
+    """HT_D ≤ (1−m)·SS_D: the deterministic stratum can only reduce the
+    CORR variance estimate relative to the seed's all-rows-at-π=m bound."""
+    from repro.kernels.multi_agg import HT_D, SS_D
+    from repro.query import QueryBatch
+    from repro.query.engine import panel_moments
+
+    vm = vm_skewed
+    mv = vm.views["v"]
+    cache = vm._corr_cache(mv)
+    batch = QueryBatch.encode(MIXED_QUERIES, cache.columns)
+    mom = panel_moments(cache, batch)
+    seed_bound = (1.0 - mv.m) * mom[SS_D]
+    assert np.all(mom[HT_D] <= seed_bound + 1e-3)
+    # strict improvement for at least one query (pinned groups moved)
+    assert np.any(mom[HT_D] < seed_bound - 1e-6)
+
+
 def test_aqp_batch_needs_no_correspondence_cache(vm_setup):
     """prefer='aqp' batches scan only the clean sample: no join is built."""
     vm, _ = vm_setup

@@ -108,6 +108,27 @@ def test_union_intersect_difference():
     assert {r["k"] for r in d} == {1, 2}
 
 
+def test_intersect_difference_composite_keys_sorted_search():
+    """Composite-key ∩/− use an exact lexicographic binary search (the
+    seed unrolled a compare chain over rel.capacity; a digest would be
+    probabilistic on this exact path); exact per-tuple semantics must
+    hold, including a same-x different-y near-miss."""
+    a = from_columns(
+        {"x": np.array([1, 2, 3, 4], np.int32),
+         "y": np.array([10, 20, 30, 40], np.int32)},
+        pk=["x", "y"], capacity=8,
+    )
+    b = from_columns(
+        {"x": np.array([2, 3, 9], np.int32),
+         "y": np.array([20, 31, 90], np.int32)},
+        pk=["x", "y"], capacity=4,
+    )
+    inter = to_host(ops.intersect_keyed(a, b))
+    assert inter["x"].tolist() == [2] and inter["y"].tolist() == [20]
+    diff = to_host(ops.difference_keyed(a, b))
+    assert sorted(diff["x"].tolist()) == [1, 3, 4]
+
+
 def test_compact_preserves_rows():
     rng = np.random.default_rng(0)
     fact = mk_fact(rng, 20, 4)

@@ -97,6 +97,106 @@ def test_delta_log_backpressure_bounds_memory():
     log.offer(inserts=_rel([3], [1.0]))  # fine after drain
 
 
+def test_coalesce_signed_cancels_superseded_insert():
+    """An insert superseded by a delete+insert update INSIDE one drain
+    window must cancel (not double-subtract): the drained relations carry
+    the same net algebra as draining at every micro-batch boundary."""
+    one = DeltaLog("t")
+    one.offer(inserts=_rel([1], [10.0]), seq=0)
+    one.offer(inserts=_rel([1], [20.0]), deletes=_rel([1], [10.0]), seq=1)
+    ins, dels = one.drain()
+    got_ins = to_host(ins)
+    assert dict(zip(got_ins["k"].tolist(), got_ins["v"].tolist())) == {1: 20.0}
+    assert dels is None or to_host(dels)["k"].size == 0  # cancelled in-window
+
+    # delete of a PRE-window row still flows through
+    log = DeltaLog("t")
+    log.offer(deletes=_rel([7], [3.0]), seq=0)
+    log.offer(inserts=_rel([7], [4.0]), seq=1)
+    ins2, dels2 = log.drain()
+    assert to_host(ins2)["v"].tolist() == [4.0]
+    assert to_host(dels2)["v"].tolist() == [3.0]
+
+    # insert then delete inside the window: both sides vanish
+    log3 = DeltaLog("t")
+    log3.offer(inserts=_rel([9], [1.0]), seq=0)
+    log3.offer(deletes=_rel([9], [1.0]), seq=1)
+    ins3, dels3 = log3.drain()
+    assert to_host(ins3)["k"].size == 0
+    assert to_host(dels3)["k"].size == 0
+
+
+def _deletes_vm(m=1.0):
+    """Group-by view with a ``with_deletes`` change-table strategy."""
+    base = from_columns(
+        {"k": np.arange(8, dtype=np.int32),
+         "g": (np.arange(8) % 4).astype(np.int32),
+         "v": np.arange(8, dtype=np.float32)},
+        pk=["k"], capacity=64,
+    )
+    plan = GroupByNode(child=Scan("T", pk=("k",)), keys=("g",),
+                       aggs=(("total", "sum", "v"), ("n", "count", None)),
+                       num_groups=64)
+    vm = ViewManager()
+    vm.register_base("T", base)
+    vm.register_view(ViewDef("dv", plan), delta_bases=("T",), m=m,
+                     delta_group_capacity=64, with_deletes=True)
+    return vm
+
+
+def _row(k, g, v):
+    return from_columns(
+        {"k": np.asarray(k, np.int32), "g": np.asarray(g, np.int32),
+         "v": np.asarray(v, np.float32)}, pk=["k"])
+
+
+def test_with_deletes_view_refreshes_on_insert_only_window():
+    """Regression (ROADMAP): svc_refresh of a with_deletes view crashed
+    with KeyError 'T__del' when a window carried only inserts."""
+    vm = _deletes_vm()
+    svc = vm.configure_streaming(
+        StreamConfig(max_rows=10**9, max_age_s=1e9, auto_refresh=False)
+    )
+    vm.ingest("T", inserts=_row([100], [1], [50.0]), seq=0)
+    svc.refresh()  # KeyError before the _deltas_for delete stand-in fix
+    est = svc.query("dv", Query(agg="sum", col="total"), prefer="aqp")
+    truth = float(vm.query_exact_fresh("dv", Query(agg="sum", col="total")))
+    np.testing.assert_allclose(float(est.value), truth, rtol=1e-5)
+
+
+def test_streaming_deletes_watermark_boundary_invariance():
+    """The same event stream drained as ONE window or at EVERY micro-batch
+    boundary must answer identically (signed delta algebra, §3.1) — and
+    match ground truth."""
+    events = [  # (inserts, deletes) micro-batches, in seq order
+        (_row([100], [1], [50.0]), None),                       # ins k=100
+        (_row([100], [1], [70.0]), _row([100], [1], [50.0])),   # update k=100
+        (_row([101], [2], [5.0]), _row([3], [3], [3.0])),       # ins + del pre-window row
+        (None, _row([101], [2], [5.0])),                        # del the in-window ins
+    ]
+
+    def run(drain_every):
+        vm = _deletes_vm()
+        svc = vm.configure_streaming(
+            StreamConfig(max_rows=10**9, max_age_s=1e9, auto_refresh=False)
+        )
+        for seq, (ins, dels) in enumerate(events):
+            vm.ingest("T", inserts=ins, deletes=dels, seq=seq)
+            if drain_every:
+                svc.refresh()
+        if not drain_every:
+            svc.refresh()
+        q = Query(agg="sum", col="total")
+        return (float(svc.query("dv", q, prefer="aqp").value),
+                float(vm.query_exact_fresh("dv", q)))
+
+    got_one, truth_one = run(drain_every=False)
+    got_per, truth_per = run(drain_every=True)
+    np.testing.assert_allclose(truth_one, truth_per, rtol=1e-6)
+    np.testing.assert_allclose(got_one, got_per, rtol=1e-6)
+    np.testing.assert_allclose(got_one, truth_one, rtol=1e-6)
+
+
 # ---------------------------------------------------------------------------
 # StreamingViewService watermarks + staleness metadata
 # ---------------------------------------------------------------------------
