@@ -1,0 +1,261 @@
+"""Budgeted fleet maintenance: planner vs clean-all / maintain-all / RR.
+
+Not a paper figure — this exercises the control plane (repro.planner) the
+paper's §5.2.2 economics implies at fleet scale: a dozen-plus registered
+views with skewed query traffic, every view drifting each epoch, and a
+per-epoch compute budget far too small to clean (let alone maintain)
+everything.  Four policies spend the SAME model-unit budget per epoch
+(every action charged the same measured median clean/maintain price):
+
+  * planner      — MaintenancePlanner: cost-model scores via the compiled
+                   kernels/fleet_score pass, greedy knapsack under budget
+  * clean_all    — svc_refresh views in registration order until budget
+  * maintain_all — full IVM in registration order until budget
+  * round_robin  — full IVM in rotating order (pointer carries across
+                   epochs) until budget
+
+Traffic is Zipf-skewed and deliberately DECORRELATED from registration
+order, so order-based policies burn budget on cold views while the
+planner follows traffic × expected-error-reduction.  The headline metric
+is the traffic-weighted fleet-wide median relative error of the final
+epoch's answers vs ground truth.
+
+Writes ``BENCH_planner.json`` (override with ``BENCH_OUT``); CI runs the
+quick mode and uploads the JSON.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+from typing import Dict, List
+
+import numpy as np
+
+from benchmarks.common import Row, timeit
+from repro.core import Query, ViewDef
+from repro.planner import MaintenancePlanner
+from repro.relational.plan import GroupByNode, Scan
+from repro.relational.relation import from_columns
+from repro.views import ViewManager
+
+N_VIEWS_QUICK = 12
+N_VIEWS_FULL = 16
+EPOCHS = 5
+
+
+def _traffic_weights(n_views: int) -> np.ndarray:
+    """Zipf over a fixed rank permutation that parks the hottest views LATE
+    in registration order (order-based policies reach them last)."""
+    rng = np.random.default_rng(123)
+    rank = rng.permutation(n_views)
+    # force the top-3 ranks into the back half of the registration order
+    back = [i for i in range(n_views) if i >= n_views // 2]
+    for hot, pos in zip(np.argsort(rank)[:3], back[-3:]):
+        rank[hot], rank[pos] = rank[pos], rank[hot]
+    w = 1.0 / (1.0 + rank) ** 1.7
+    return w / w.sum()
+
+
+def _base_rel(n: int, groups: int, rng) -> "object":
+    return from_columns(
+        {
+            "sessionId": np.arange(n, dtype=np.int32),
+            "videoId": rng.integers(0, groups, n).astype(np.int32),
+            "bytes": rng.exponential(10.0, n).astype(np.float32),
+        },
+        pk=["sessionId"],
+        capacity=4096,
+    )
+
+
+def _delta_rel(start: int, n: int, groups: int, rng) -> "object":
+    return from_columns(
+        {
+            "sessionId": np.arange(start, start + n, dtype=np.int32),
+            "videoId": rng.integers(0, groups, n).astype(np.int32),
+            "bytes": rng.exponential(10.0, n).astype(np.float32),
+        },
+        pk=["sessionId"],
+    )
+
+
+def build_fleet(n_views: int, n_rows: int, groups: int, seed: int) -> ViewManager:
+    rng = np.random.default_rng(seed)
+    vm = ViewManager()
+    for i in range(n_views):
+        base = f"Log{i}"
+        vm.register_base(base, _base_rel(n_rows, groups, rng))
+        plan = GroupByNode(
+            child=Scan(base, pk=("sessionId",)),
+            keys=("videoId",),
+            aggs=(("totalBytes", "sum", "bytes"), ("visits", "count", None)),
+            num_groups=2 * groups,
+        )
+        vm.register_view(ViewDef(f"v{i}", plan), delta_bases=(base,), m=0.25,
+                         seed=i, delta_group_capacity=2 * groups)
+    return vm
+
+
+def epoch_deltas(n_views: int, n_rows: int, groups: int, d_rows: int,
+                 epochs: int) -> List[Dict[str, object]]:
+    """One shared delta stream: every policy ingests the SAME relations."""
+    rng = np.random.default_rng(7)
+    out = []
+    start = 10 * n_rows
+    for _ in range(epochs):
+        batch = {}
+        for i in range(n_views):
+            batch[f"Log{i}"] = _delta_rel(start, d_rows, groups, rng)
+            start += d_rows
+        out.append(batch)
+    return out
+
+
+def _measure_prices(n_rows: int, groups: int, d_rows: int) -> Dict[str, float]:
+    """Median clean/maintain wall price on a throwaway 2-view fleet (also
+    pre-warms the compile caches every policy fleet reuses)."""
+    vm = build_fleet(2, n_rows, groups, seed=99)
+    rng = np.random.default_rng(99)
+    for i in range(2):
+        vm.ingest(f"Log{i}", inserts=_delta_rel(10 * n_rows, d_rows, groups, rng))
+    clean_s = timeit(lambda: vm.svc_refresh("v0"), repeats=3, warmup=1) / 1e6
+    maintain_s = timeit(lambda: vm.maintain("v1", consume=False), repeats=3, warmup=1) / 1e6
+    return {"clean_s": float(clean_s), "maintain_s": float(maintain_s)}
+
+
+def _weighted_median(errs: np.ndarray, weights: np.ndarray) -> float:
+    order = np.argsort(errs)
+    cum = np.cumsum(weights[order])
+    idx = int(np.searchsorted(cum, 0.5 * cum[-1]))
+    return float(errs[order][min(idx, len(errs) - 1)])
+
+
+def _fleet_error_rows(vm: ViewManager, n_views: int, weights: np.ndarray):
+    """(rel_err, traffic_weight) rows for one epoch's post-action answers."""
+    errs, ws = [], []
+    # sum and avg both drift with the per-group byte totals (a plain count
+    # of groups would not: the synthetic deltas only touch existing groups)
+    queries = [Query(agg="sum", col="totalBytes"), Query(agg="avg", col="totalBytes")]
+    for i in range(n_views):
+        name = f"v{i}"
+        for q in queries:
+            truth = float(vm.query_exact_fresh(name, q))
+            if abs(truth) < 1e-9:
+                continue
+            est = float(vm.query(name, q).value)
+            errs.append(abs(est - truth) / abs(truth))
+            ws.append(weights[i])
+    return errs, ws
+
+
+def run_policy(policy: str, n_views: int, n_rows: int, groups: int,
+               deltas: List[Dict[str, object]], weights: np.ndarray,
+               budget: float, prices: Dict[str, float]) -> Dict:
+    vm = build_fleet(n_views, n_rows, groups, seed=1)
+    c_s, m_s = prices["clean_s"], prices["maintain_s"]
+    planner = None
+    if policy == "planner":
+        planner = MaintenancePlanner(vm, budget_s=budget, age_cap_s=1e9)
+        planner.cost_model.pin_costs(refresh_s=c_s, maintain_s=m_s)
+        for i in range(n_views):  # observed traffic profile
+            planner.cost_model.observe_traffic(f"v{i}", int(1000 * weights[i]))
+    rr_ptr = 0
+    n_actions = 0
+    errs, ws = [], []
+    wall_s = 0.0
+    import time
+
+    for batch in deltas:
+        t0 = time.perf_counter()
+        for base, rel in batch.items():
+            vm.ingest(base, inserts=rel)
+        if policy == "planner":
+            rep = planner.step()
+            n_actions += len(rep.actions)
+        else:
+            spent = 0.0
+            order = list(range(n_views))
+            if policy == "round_robin":
+                order = [(rr_ptr + k) % n_views for k in range(n_views)]
+            for i in order:
+                cost = c_s if policy == "clean_all" else m_s
+                if spent + cost > budget + 1e-12:
+                    break
+                if policy == "clean_all":
+                    vm.svc_refresh(f"v{i}")
+                else:  # maintain_all / round_robin
+                    vm.maintain(f"v{i}")
+                    if policy == "round_robin":
+                        rr_ptr = (i + 1) % n_views
+                spent += cost
+                n_actions += 1
+        wall_s += time.perf_counter() - t0  # eval time stays off the clock
+        # serving error is sampled EVERY epoch (queries arrive continuously,
+        # not just after the last drain), then pooled into one median
+        e, w = _fleet_error_rows(vm, n_views, weights)
+        errs += e
+        ws += w
+    return {
+        "median_rel_err": _weighted_median(np.asarray(errs), np.asarray(ws)),
+        "actions_total": n_actions,
+        "wall_s": wall_s,
+    }
+
+
+def run(quick: bool = False) -> List[Row]:
+    n_views = N_VIEWS_QUICK if quick else N_VIEWS_FULL
+    n_rows, groups, d_rows = (512, 32, 160) if quick else (1024, 48, 300)
+    weights = _traffic_weights(n_views)
+    deltas = epoch_deltas(n_views, n_rows, groups, d_rows, EPOCHS)
+    prices = _measure_prices(n_rows, groups, d_rows)
+    # equal per-epoch budget: one full maintenance plus a couple of cleans —
+    # far below fleet size, so every policy must choose
+    budget = prices["maintain_s"] + 2.5 * prices["clean_s"]
+
+    results = {}
+    for policy in ("planner", "clean_all", "maintain_all", "round_robin"):
+        results[policy] = run_policy(
+            policy, n_views, n_rows, groups, deltas, weights, budget, prices
+        )
+
+    p_err = results["planner"]["median_rel_err"]
+    payload = {
+        "quick": bool(quick),
+        "n_views": n_views,
+        "epochs": EPOCHS,
+        "rows_per_view": n_rows,
+        "delta_rows_per_epoch": d_rows,
+        "budget_s": budget,
+        "prices": prices,
+        "traffic_weights": weights.tolist(),
+        "policies": results,
+        "planner_beats": {
+            "clean_all": p_err < results["clean_all"]["median_rel_err"],
+            "round_robin": p_err < results["round_robin"]["median_rel_err"],
+            "maintain_all": p_err < results["maintain_all"]["median_rel_err"],
+        },
+    }
+    out_path = os.environ.get("BENCH_OUT", "BENCH_planner.json")
+    with open(out_path, "w") as f:
+        json.dump(payload, f, indent=2)
+
+    return [
+        Row(
+            f"fig_planner_{policy}",
+            results[policy]["wall_s"] * 1e6 / EPOCHS,
+            f"median_rel_err={results[policy]['median_rel_err']:.4f} "
+            f"actions={results[policy]['actions_total']}",
+        )
+        for policy in ("planner", "clean_all", "maintain_all", "round_robin")
+    ]
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    for row in run(quick=args.quick):
+        print(row.csv(), flush=True)

@@ -24,6 +24,7 @@ MODULES = (
     "fig13_median",
     "fig14_minibatch",
     "fig_query_throughput",
+    "fig_planner_fleet",
     "appendix_minmax",
     "kernels_bench",
     "svc_training",

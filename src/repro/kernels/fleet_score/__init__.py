@@ -1,0 +1,56 @@
+"""Compiled fleet scorer: one pass prices every (view, action) pair.
+
+The budgeted maintenance control plane (repro.planner) stacks per-view
+moment/drift/traffic/cost features into one (V, N_FEATURES) panel and
+scores the whole fleet's {skip, clean, maintain} candidates in a single
+jitted call — the §5.2.2 break-even analysis generalized from one query
+to a fleet-wide error-reduction-per-second objective.  Views live on the
+lane axis in the Pallas kernel; the XLA path compiles the same one-pass
+reference math off-TPU.
+"""
+
+from repro.kernels.fleet_score.ops import fleet_scores
+from repro.kernels.fleet_score.ref import (
+    A_CLEAN,
+    A_MAINTAIN,
+    A_SKIP,
+    CORR_WINS,
+    F_AGE,
+    F_COST_CLEAN,
+    F_COST_MAINTAIN,
+    F_DRIFT_CLEAN,
+    F_DRIFT_IVM,
+    F_EX2,
+    F_HT_AQP,
+    F_HT_CORR,
+    F_M,
+    F_MEAN,
+    F_N,
+    F_TRAFFIC,
+    N_FEATURES,
+    N_SCORES,
+    fleet_score_ref,
+)
+
+__all__ = [
+    "A_CLEAN",
+    "A_MAINTAIN",
+    "A_SKIP",
+    "CORR_WINS",
+    "F_AGE",
+    "F_COST_CLEAN",
+    "F_COST_MAINTAIN",
+    "F_DRIFT_CLEAN",
+    "F_DRIFT_IVM",
+    "F_EX2",
+    "F_HT_AQP",
+    "F_HT_CORR",
+    "F_M",
+    "F_MEAN",
+    "F_N",
+    "F_TRAFFIC",
+    "N_FEATURES",
+    "N_SCORES",
+    "fleet_score_ref",
+    "fleet_scores",
+]

@@ -1,0 +1,82 @@
+"""Pallas kernel: score every view's {skip, clean, maintain} in one pass.
+
+The feature matrix arrives TRANSPOSED — features on the sublane axis
+(padded to the f32 sublane multiple), views on the lane axis — so one
+(FEAT_ROWS, BLOCK_V) VMEM tile scores BLOCK_V views with pure VPU
+elementwise math: each feature is a 1-row static slice broadcast across
+the lane axis, and the four decision rows (skip/clean/maintain scores +
+the §5.2.2 CORR_WINS flip) stack into the (OUT_ROWS, BLOCK_V) output
+block.  Per-lane independence means no accumulation across grid steps —
+each lane tile writes its own output block exactly once.
+
+Shapes: feats (FEAT_ROWS, Vp) f32 with Vp a multiple of BLOCK_V; out
+(OUT_ROWS, Vp) f32 with the row layout of ref.py's score columns (rows
+N_SCORES.. are zero padding).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.fleet_score.ref import (
+    COST_EPS,
+    F_COST_CLEAN,
+    F_COST_MAINTAIN,
+    F_DRIFT_CLEAN,
+    F_DRIFT_IVM,
+    F_EX2,
+    F_HT_AQP,
+    F_HT_CORR,
+    F_M,
+    F_MEAN,
+    F_TRAFFIC,
+    M_EPS,
+)
+
+BLOCK_V = 512   # views (lanes) per grid step
+FEAT_ROWS = 16  # N_FEATURES padded to the f32 sublane multiple
+OUT_ROWS = 8    # N_SCORES padded to the f32 sublane multiple
+
+
+def _fleet_score_kernel(f_ref, out_ref):
+    f = f_ref[...]
+    row = lambda k: f[k:k + 1, :]
+    ex2, mean = row(F_EX2), row(F_MEAN)
+    ht_aqp, ht_corr = row(F_HT_AQP), row(F_HT_CORR)
+    d_clean, d_ivm = row(F_DRIFT_CLEAN), row(F_DRIFT_IVM)
+    traffic = row(F_TRAFFIC)
+    cost_c, cost_m = row(F_COST_CLEAN), row(F_COST_MAINTAIN)
+    m = row(F_M)
+
+    e_now = jnp.minimum(ht_aqp, ht_corr)
+    e_skip = (d_clean * mean) ** 2 + d_clean * ex2 + e_now
+    ht_corr_pred = (1.0 - m) / jnp.maximum(m, M_EPS) * ex2 * d_ivm
+    e_clean = jnp.minimum(ht_aqp, ht_corr_pred)
+    gain_clean = jnp.maximum(e_skip - e_clean, 0.0)
+
+    score_clean = traffic * gain_clean / jnp.maximum(cost_c, COST_EPS)
+    score_maintain = traffic * e_skip / jnp.maximum(cost_m, COST_EPS)
+    corr_wins = (ht_corr <= ht_aqp).astype(jnp.float32)
+    zero = jnp.zeros_like(score_clean)
+    out_ref[...] = jnp.concatenate(
+        [zero, score_clean, score_maintain, corr_wins, zero, zero, zero, zero],
+        axis=0,
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def fleet_score_tiles(feats: jnp.ndarray, interpret: bool = True) -> jnp.ndarray:
+    """feats (FEAT_ROWS, Vp) f32, Vp % BLOCK_V == 0 → (OUT_ROWS, Vp) f32."""
+    Vp = feats.shape[1]
+    return pl.pallas_call(
+        _fleet_score_kernel,
+        out_shape=jax.ShapeDtypeStruct((OUT_ROWS, Vp), jnp.float32),
+        grid=(Vp // BLOCK_V,),
+        in_specs=[pl.BlockSpec((FEAT_ROWS, BLOCK_V), lambda vi: (0, vi))],
+        out_specs=pl.BlockSpec((OUT_ROWS, BLOCK_V), lambda vi: (0, vi)),
+        interpret=interpret,
+    )(feats)

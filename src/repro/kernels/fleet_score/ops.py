@@ -1,0 +1,48 @@
+"""jit wrapper: pad the fleet panel to tile multiples and dispatch.
+
+``fleet_scores`` is the op the budgeted scheduler (repro.planner) calls
+once per epoch: the whole fleet's action scores come out of ONE jitted
+call over the stacked feature matrix — no per-view Python loop.  A fixed
+fleet keeps one stable (V, N_FEATURES) shape, so every epoch after the
+first hits the jit cache.
+
+Off-TPU the op compiles the reference math (the same one-pass elementwise
+decision, lowered by XLA) instead of walking the Pallas grid in interpret
+mode; tests force the Pallas path with ``use_pallas=True`` to check the
+kernel itself.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.fleet_score.kernel import BLOCK_V, FEAT_ROWS, fleet_score_tiles
+from repro.kernels.fleet_score.ref import N_FEATURES, N_SCORES, fleet_score_ref
+
+# CPU containers run the kernel body in interpret mode; on TPU set False.
+INTERPRET = jax.default_backend() != "tpu"
+USE_PALLAS = jax.default_backend() == "tpu"
+
+_ref_jit = jax.jit(fleet_score_ref)
+
+
+def fleet_scores(features, use_pallas: Optional[bool] = None) -> jnp.ndarray:
+    """(V, N_FEATURES) per-view features → (V, N_SCORES) action scores.
+
+    Padded lanes carry all-zero features, which score 0 on every action
+    (no spurious NaN from the guarded divisors) and are sliced off.
+    """
+    feats = jnp.asarray(features, jnp.float32)
+    if feats.ndim != 2 or feats.shape[1] != N_FEATURES:
+        raise ValueError(f"expected (V, {N_FEATURES}) features, got {feats.shape}")
+    up = use_pallas if use_pallas is not None else USE_PALLAS
+    if not up:
+        return _ref_jit(feats)
+    V = feats.shape[0]
+    Vp = max(BLOCK_V, ((V + BLOCK_V - 1) // BLOCK_V) * BLOCK_V)
+    panel = jnp.pad(feats, ((0, Vp - V), (0, FEAT_ROWS - N_FEATURES))).T
+    out = fleet_score_tiles(panel, interpret=INTERPRET)
+    return out[:N_SCORES, :V].T

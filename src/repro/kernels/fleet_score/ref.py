@@ -1,0 +1,85 @@
+"""Pure-jnp oracle for the fleet scorer.
+
+One pass over a stacked per-view feature matrix emits, for every view at
+once, the expected-error-reduction-per-second of the three control-plane
+actions {skip, clean, maintain} plus the §5.2.2 estimator flip.  The error
+model is the paper's break-even analysis turned into a planner objective:
+
+  * serving WITHOUT a refresh this epoch costs the squared staleness bias
+    of the un-reflected delta rows plus the current-window estimator
+    variance (the best of AQP / CORR, §5.2.2);
+  * cleaning drops the error to the best post-clean estimator variance —
+    AQP stays at its HT variance, CORR's is predicted from the drift since
+    the last full maintenance ((1−m)/m · E[x²] · drift, the §5.2.1 HT
+    variance of a correction that touches ``drift`` rows);
+  * full maintenance drops the error to zero.
+
+Scores divide the error reduction by the action's predicted wall time
+(per-view EWMAs from planner/costs.py) and scale by traffic, so a greedy
+knapsack over scores maximizes fleet-wide expected accuracy per second of
+budget.  ``CORR_WINS`` is the §5.2.2 decision ``ht_corr ≤ ht_aqp`` on the
+ACTUAL current-window moments — bit-identical to ``variance_comparison``'s
+``corr_wins`` when the features come from the same samples.
+
+All math is elementwise over views: the oracle is the dumbest correct
+formulation, kernel.py computes the same decisions tile by tile on the VPU
+with views on the lane axis, and ops.py compiles this reference off-TPU.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+# feature columns of the (V, N_FEATURES) input panel
+F_N = 0            # estimated view rows (Σ 1/π over the clean sample)
+F_EX2 = 1          # estimated population mean of x² for the canonical query
+F_MEAN = 2         # estimated population mean of x
+F_HT_AQP = 3       # current-window HT variance of SVC+AQP (σ²_S term)
+F_HT_CORR = 4      # current-window HT variance of the SVC+CORR correction
+F_DRIFT_CLEAN = 5  # delta rows not yet reflected in the clean sample
+F_DRIFT_IVM = 6    # delta rows not yet folded by full maintenance
+F_TRAFFIC = 7      # traffic weight (decayed query hit count)
+F_COST_CLEAN = 8   # predicted svc_refresh seconds (EWMA)
+F_COST_MAINTAIN = 9  # predicted maintain seconds (EWMA)
+F_AGE = 10         # seconds since the last full maintenance
+F_M = 11           # sampling rate m
+N_FEATURES = 12
+
+# output columns of the (V, N_SCORES) result
+A_SKIP = 0
+A_CLEAN = 1
+A_MAINTAIN = 2
+CORR_WINS = 3
+N_SCORES = 4
+
+COST_EPS = 1e-6  # floor for the cost divisors (degenerate EWMA seeds)
+M_EPS = 1e-6     # floor for the sampling-rate divisor
+
+
+def fleet_score_ref(feats: jnp.ndarray) -> jnp.ndarray:
+    """(V, N_FEATURES) f32 → (V, N_SCORES) f32, no per-view loop."""
+    feats = jnp.asarray(feats, jnp.float32)
+    ex2 = feats[:, F_EX2]
+    mean = feats[:, F_MEAN]
+    ht_aqp = feats[:, F_HT_AQP]
+    ht_corr = feats[:, F_HT_CORR]
+    d_clean = feats[:, F_DRIFT_CLEAN]
+    d_ivm = feats[:, F_DRIFT_IVM]
+    traffic = feats[:, F_TRAFFIC]
+    cost_c = feats[:, F_COST_CLEAN]
+    cost_m = feats[:, F_COST_MAINTAIN]
+    m = feats[:, F_M]
+
+    e_now = jnp.minimum(ht_aqp, ht_corr)
+    e_skip = (d_clean * mean) ** 2 + d_clean * ex2 + e_now
+    ht_corr_pred = (1.0 - m) / jnp.maximum(m, M_EPS) * ex2 * d_ivm
+    e_clean = jnp.minimum(ht_aqp, ht_corr_pred)
+    gain_clean = jnp.maximum(e_skip - e_clean, 0.0)
+
+    score_clean = traffic * gain_clean / jnp.maximum(cost_c, COST_EPS)
+    score_maintain = traffic * e_skip / jnp.maximum(cost_m, COST_EPS)
+    corr_wins = (ht_corr <= ht_aqp).astype(jnp.float32)
+    return jnp.stack(
+        [jnp.zeros_like(score_clean), score_clean, score_maintain, corr_wins],
+        axis=1,
+    )

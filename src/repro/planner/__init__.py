@@ -1,0 +1,34 @@
+"""Budgeted maintenance control plane (the fleet-level §5.2.2 decision).
+
+The paper decides clean-vs-maintain per query; serving a fleet of
+registered views under finite compute needs that decision per view, per
+epoch, under an explicit budget.  Three parts:
+
+  costs.py      — online per-view cost models: EWMA refresh/maintain wall
+                  times (seeded from ViewManager's timers), drift and
+                  traffic counters, lazily-refreshed moment snapshots
+  score.py      — one compiled kernels/fleet_score pass prices every
+                  (view, action) pair: expected error reduction per second
+  scheduler.py  — MaintenancePlanner: greedy knapsack under the epoch
+                  budget + a staleness-age starvation guard; executes the
+                  plan through svc_refresh / maintain
+
+Wire-up: ``StreamingViewService.attach_planner(planner)`` routes watermark
+refreshes through ``planner.step()``; ``ServeEngine.dashboard`` surfaces
+the last ``PlanReport`` as the planner panel.
+"""
+
+from repro.planner.costs import CostModel, ViewCostStats, canonical_query
+from repro.planner.scheduler import MaintenancePlanner, PlanReport, PlannedAction
+from repro.planner.score import FleetScores, score_fleet
+
+__all__ = [
+    "CostModel",
+    "FleetScores",
+    "MaintenancePlanner",
+    "PlanReport",
+    "PlannedAction",
+    "ViewCostStats",
+    "canonical_query",
+    "score_fleet",
+]

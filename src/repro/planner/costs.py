@@ -1,0 +1,221 @@
+"""Online per-view cost and signal models for the budgeted control plane.
+
+The planner prices every (view, action) pair each epoch; this module keeps
+the inputs fresh at counter-read cost:
+
+  * **Action costs** — EWMA estimates of ``svc_refresh`` and ``maintain``
+    wall seconds per view, observed through the hooks ``ViewManager`` fires
+    after every timed refresh/maintenance (the same ``maintenance_s``
+    timers the benchmarks read) and seeded from the last recorded timer
+    when one exists.  ``pin_costs`` freezes them to fixed values for
+    deterministic tests and equal-price policy comparisons.
+  * **Drift** — per-view pending delta rows, read from the counters
+    ``ViewManager`` maintains per base (``drift_rows``): rows not yet in
+    the clean sample (staleness bias of skipping) and rows not yet folded
+    by IVM (the correction the next clean must carry).
+  * **Traffic** — decayed query hit counts per view, observed through the
+    ``query``/``query_batch`` hook.
+  * **Moment snapshots** — σ²_S-style sufficient statistics of each view's
+    canonical query (``variance_comparison`` HT variances plus the sample's
+    value scale), recomputed lazily only when the view's samples actually
+    moved (``ManagedView.sample_version``).
+
+``features()`` stacks everything into the (V, N_FEATURES) panel the
+compiled fleet scorer (kernels/fleet_score) consumes in one jitted call.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Dict, Optional, Sequence
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.estimators import OUTLIER_COL, Query, _weights, variance_comparison
+from repro.kernels.fleet_score import (
+    F_AGE,
+    F_COST_CLEAN,
+    F_COST_MAINTAIN,
+    F_DRIFT_CLEAN,
+    F_DRIFT_IVM,
+    F_EX2,
+    F_HT_AQP,
+    F_HT_CORR,
+    F_M,
+    F_MEAN,
+    F_N,
+    F_TRAFFIC,
+    N_FEATURES,
+)
+
+# default cost seeds (seconds) before the first observed timer
+DEFAULT_REFRESH_S = 0.05
+DEFAULT_MAINTAIN_S = 0.25
+# a never-maintained view falls back to this clean-to-maintain cost ratio
+MAINTAIN_OVER_REFRESH_SEED = 4.0
+
+
+def canonical_query(mv) -> Query:
+    """The view's planner probe: sum over its first value column.
+
+    Deterministic: the first non-key, non-flag column of the clean-sample
+    schema (count() when the view carries no value columns at all)."""
+    pk = set(mv.clean_sample.schema.pk)
+    for c in mv.clean_sample.schema.columns:
+        if c not in pk and c != OUTLIER_COL:
+            return Query(agg="sum", col=c)
+    return Query(agg="count")
+
+
+@dataclasses.dataclass
+class ViewCostStats:
+    """Per-view EWMA costs, traffic, and the last moment snapshot."""
+
+    refresh_s: float
+    maintain_s: float
+    traffic: float
+    last_maintain_t: float
+    snapshot_version: int = -1
+    n_rows: float = 0.0
+    ex2: float = 0.0
+    mean: float = 0.0
+    ht_aqp: float = 0.0
+    ht_corr: float = 0.0
+
+
+class CostModel:
+    """Fleet-wide signal store; attach to a ViewManager to receive hooks."""
+
+    def __init__(
+        self,
+        vm,
+        clock: Callable[[], float] = time.monotonic,
+        alpha: float = 0.3,
+        default_refresh_s: float = DEFAULT_REFRESH_S,
+        default_maintain_s: float = DEFAULT_MAINTAIN_S,
+    ):
+        self.vm = vm
+        self._clock = clock
+        self.alpha = float(alpha)
+        self.default_refresh_s = float(default_refresh_s)
+        self.default_maintain_s = float(default_maintain_s)
+        self.frozen = False  # pin_costs: ignore observed wall times
+        self.stats: Dict[str, ViewCostStats] = {}
+
+    def attach(self) -> "CostModel":
+        self.vm.cost_model = self
+        return self
+
+    def _stat(self, name: str) -> ViewCostStats:
+        st = self.stats.get(name)
+        if st is None:
+            mv = self.vm.views[name]
+            # seed from the per-op timers ViewManager already records: a
+            # view whose last timed op was a maintain must NOT price its
+            # cleans at the full-maintenance cost
+            r_seed = float(mv.refresh_s) if mv.refresh_s > 0 else 0.0
+            m_seed = float(mv.ivm_s) if mv.ivm_s > 0 else 0.0
+            st = ViewCostStats(
+                refresh_s=r_seed or self.default_refresh_s,
+                maintain_s=(m_seed
+                            or r_seed * MAINTAIN_OVER_REFRESH_SEED
+                            or self.default_maintain_s),
+                traffic=1.0,
+                last_maintain_t=self._clock(),
+            )
+            self.stats[name] = st
+        return st
+
+    # -- observation hooks (fired by ViewManager) ----------------------------
+    def _ewma(self, cur: float, obs: float) -> float:
+        return (1.0 - self.alpha) * cur + self.alpha * obs
+
+    def observe_refresh(self, name: str, dt: float) -> None:
+        st = self._stat(name)
+        if not self.frozen:
+            st.refresh_s = self._ewma(st.refresh_s, float(dt))
+
+    def observe_maintain(self, name: str, dt: float) -> None:
+        st = self._stat(name)
+        if not self.frozen:
+            st.maintain_s = self._ewma(st.maintain_s, float(dt))
+        st.last_maintain_t = self._clock()
+
+    def observe_traffic(self, name: str, n_queries: int) -> None:
+        self._stat(name).traffic += float(n_queries)
+
+    def observe_ingest(self, base: str, n_rows: int) -> None:
+        """Drift rides ViewManager's own counters; nothing to do here (the
+        hook exists so subclasses can rate-model ingest streams)."""
+
+    def decay_traffic(self, factor: float = 0.5) -> None:
+        for st in self.stats.values():
+            st.traffic *= factor
+
+    def pin_costs(self, refresh_s: float, maintain_s: float) -> None:
+        """Fix every view's action prices (deterministic tests, equal-price
+        policy A/Bs); observed wall times stop moving the EWMAs."""
+        self.default_refresh_s = float(refresh_s)
+        self.default_maintain_s = float(maintain_s)
+        for name in self.vm.views:
+            st = self._stat(name)
+            st.refresh_s = float(refresh_s)
+            st.maintain_s = float(maintain_s)
+        self.frozen = True
+
+    # -- moment snapshots ----------------------------------------------------
+    def snapshot(self, name: str, force: bool = False) -> ViewCostStats:
+        """Refresh the §5.2.2 moment snapshot iff the samples moved."""
+        mv = self.vm.views[name]
+        st = self._stat(name)
+        if not force and st.snapshot_version == mv.sample_version:
+            return st
+        q = canonical_query(mv)
+        cmp = variance_comparison(mv.clean_sample, mv.stale_sample, q, mv.m)
+        w = _weights(mv.clean_sample, mv.m)
+        valid = mv.clean_sample.valid
+        n_hat = float(jnp.sum(jnp.where(valid, w, 0.0)))
+        if q.col is not None:
+            x = jnp.asarray(mv.clean_sample.col(q.col), jnp.float32)
+        else:
+            x = jnp.ones(valid.shape, jnp.float32)
+        s1 = float(jnp.sum(jnp.where(valid, w * x, 0.0)))
+        s2 = float(jnp.sum(jnp.where(valid, w * x * x, 0.0)))
+        st.n_rows = n_hat
+        st.mean = s1 / max(n_hat, 1.0)
+        st.ex2 = s2 / max(n_hat, 1.0)
+        st.ht_aqp = float(cmp["var_aqp"])
+        st.ht_corr = float(cmp["var_corr"])
+        st.snapshot_version = mv.sample_version
+        return st
+
+    # -- the stacked feature panel ------------------------------------------
+    def age_s(self, name: str) -> float:
+        return self._clock() - self._stat(name).last_maintain_t
+
+    def features(self, names: Optional[Sequence[str]] = None) -> np.ndarray:
+        """(V, N_FEATURES) f32 panel for kernels/fleet_score, view order =
+        ``names`` (default: ViewManager registration order)."""
+        names = list(names) if names is not None else list(self.vm.views)
+        now = self._clock()
+        out = np.zeros((len(names), N_FEATURES), np.float32)
+        for i, name in enumerate(names):
+            st = self.snapshot(name)
+            mv = self.vm.views[name]
+            out[i, F_N] = st.n_rows
+            out[i, F_EX2] = st.ex2
+            out[i, F_MEAN] = st.mean
+            out[i, F_HT_AQP] = st.ht_aqp
+            out[i, F_HT_CORR] = st.ht_corr
+            out[i, F_DRIFT_CLEAN] = self.vm.drift_rows(name, since="clean")
+            out[i, F_DRIFT_IVM] = self.vm.drift_rows(name, since="ivm")
+            out[i, F_TRAFFIC] = st.traffic
+            out[i, F_COST_CLEAN] = st.refresh_s
+            out[i, F_COST_MAINTAIN] = st.maintain_s
+            out[i, F_AGE] = now - st.last_maintain_t
+            out[i, F_M] = mv.m
+        if not np.all(np.isfinite(out)):
+            raise ValueError("non-finite planner features")
+        return out

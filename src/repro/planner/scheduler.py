@@ -1,0 +1,163 @@
+"""Budgeted maintenance scheduler: greedy knapsack over (view, action).
+
+``MaintenancePlanner.step()`` is the control-plane epoch: score the fleet
+(one compiled kernels/fleet_score call), pick the best-scoring actions
+whose predicted cost fits the per-epoch time budget, then execute them —
+``svc_refresh`` for *clean*, full ``maintain`` for *maintain* — feeding
+the observed wall times back into the cost EWMAs.  Views the budget cannot
+reach serve stale this epoch, exactly the per-view generalization of the
+paper's per-query clean-vs-maintain economics (§5.2.2 / Fig 6).
+
+The **starvation guard** bounds how long "serve stale" can win: a view
+whose full-maintenance age exceeds ``age_cap_s`` while it still carries
+unapplied deltas is forced into the plan as a maintain, ahead of the
+knapsack and regardless of remaining budget — staleness is bounded, never
+silently unbounded (and the forced maintenance advances the pending-log
+floor, so delta memory stays bounded too).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Dict, List, Optional
+
+from repro.kernels.fleet_score import A_CLEAN, A_MAINTAIN
+from repro.planner.costs import CostModel
+from repro.planner.score import FleetScores, score_fleet
+
+COST_FIT_EPS = 1e-9  # float slack when charging predicted costs
+
+
+@dataclasses.dataclass
+class PlannedAction:
+    view: str
+    action: str  # "clean" | "maintain"
+    score: float
+    predicted_s: float
+    forced: bool = False  # starvation guard, not knapsack
+    actual_s: float = 0.0  # observed wall time once executed
+
+    def to_dict(self) -> Dict:
+        return dataclasses.asdict(self)
+
+
+@dataclasses.dataclass
+class PlanReport:
+    """One epoch's decisions + accounting (the dashboard planner panel)."""
+
+    epoch: int
+    budget_s: float
+    actions: List[PlannedAction]
+    skipped: List[str]  # views left to serve stale this epoch
+    corr_wins: Dict[str, bool]  # §5.2.2 estimator flip per view
+    predicted_spend_s: float = 0.0
+    actual_spend_s: float = 0.0
+
+    def to_dict(self) -> Dict:
+        return {
+            "epoch": self.epoch,
+            "budget_s": self.budget_s,
+            "predicted_spend_s": self.predicted_spend_s,
+            "actual_spend_s": self.actual_spend_s,
+            "actions": [a.to_dict() for a in self.actions],
+            "skipped": list(self.skipped),
+            "corr_wins": dict(self.corr_wins),
+        }
+
+
+class MaintenancePlanner:
+    """Cost-model-driven clean/maintain/serve-stale scheduler for a fleet."""
+
+    def __init__(
+        self,
+        vm,
+        budget_s: float = 0.25,
+        age_cap_s: float = 60.0,
+        clock: Callable[[], float] = time.monotonic,
+        cost_model: Optional[CostModel] = None,
+        traffic_decay: float = 0.5,
+        use_pallas: Optional[bool] = None,
+    ):
+        self.vm = vm
+        self.budget_s = float(budget_s)
+        self.age_cap_s = float(age_cap_s)
+        self.traffic_decay = float(traffic_decay)
+        self.use_pallas = use_pallas
+        self.cost_model = (cost_model or CostModel(vm, clock=clock)).attach()
+        self.epoch = 0
+        self.last_report: Optional[PlanReport] = None
+
+    # -- decision ------------------------------------------------------------
+    def plan(self, budget_s: Optional[float] = None) -> PlanReport:
+        """Score the fleet and pick this epoch's actions (no execution)."""
+        budget = self.budget_s if budget_s is None else float(budget_s)
+        fs: FleetScores = score_fleet(
+            self.cost_model, use_pallas=self.use_pallas
+        )
+        chosen: Dict[str, PlannedAction] = {}
+        remaining = budget
+
+        # starvation guard: overdue drifting views maintain unconditionally
+        for name in fs.names:
+            if (self.cost_model.age_s(name) > self.age_cap_s
+                    and self.vm.drift_rows(name, since="ivm") > 0):
+                cost = self.cost_model._stat(name).maintain_s
+                chosen[name] = PlannedAction(
+                    view=name, action="maintain", forced=True,
+                    score=float(fs.scores[fs.names.index(name), A_MAINTAIN]),
+                    predicted_s=cost,
+                )
+                remaining -= cost
+
+        # greedy knapsack over the remaining (view, action) candidates;
+        # deterministic tie-break by (view, action) keeps plans reproducible
+        cands = []
+        for i, name in enumerate(fs.names):
+            if name in chosen:
+                continue
+            st = self.cost_model._stat(name)
+            cands.append((float(fs.scores[i, A_CLEAN]), name, "clean", st.refresh_s))
+            cands.append((float(fs.scores[i, A_MAINTAIN]), name, "maintain", st.maintain_s))
+        cands.sort(key=lambda c: (-c[0], c[1], c[2]))
+        for score, name, action, cost in cands:
+            if score <= 0.0 or name in chosen:
+                continue
+            if cost <= remaining + COST_FIT_EPS:
+                chosen[name] = PlannedAction(
+                    view=name, action=action, score=score, predicted_s=cost
+                )
+                remaining -= cost
+
+        actions = [chosen[n] for n in fs.names if n in chosen]
+        return PlanReport(
+            epoch=self.epoch,
+            budget_s=budget,
+            actions=actions,
+            skipped=[n for n in fs.names if n not in chosen],
+            corr_wins=fs.corr_wins(),
+            predicted_spend_s=sum(a.predicted_s for a in actions),
+        )
+
+    # -- the control-plane epoch ---------------------------------------------
+    def step(self, budget_s: Optional[float] = None, execute: bool = True,
+             fused: Optional[bool] = None) -> PlanReport:
+        """One epoch: plan, then execute under the budget.
+
+        ``execute=False`` is a pure preview (same as ``plan()``: no state
+        moves, no traffic decay, no epoch advance).  ``fused`` forwards to
+        the clean actions' ``svc_refresh`` (StreamConfig.fused rides this
+        when the streaming service drives the planner)."""
+        report = self.plan(budget_s=budget_s)
+        if not execute:
+            return report
+        for act in report.actions:
+            if act.action == "maintain":
+                act.actual_s = self.vm.maintain(act.view)
+            else:
+                act.actual_s = self.vm.svc_refresh(act.view, fused=fused)
+        report.actual_spend_s = sum(a.actual_s for a in report.actions)
+        self.cost_model.decay_traffic(self.traffic_decay)
+        self.epoch += 1
+        self.last_report = report
+        return report

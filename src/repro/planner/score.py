@@ -1,0 +1,55 @@
+"""Fleet scoring: stack the cost-model features, score in ONE jitted call.
+
+This is the planner's only device round trip per epoch: the per-view
+feature gather (counter reads + lazily-refreshed moment snapshots) stacks
+into a (V, N_FEATURES) panel and kernels/fleet_score prices every
+(view, action) candidate simultaneously — no per-view Python loop touches
+the scoring math, and a fixed fleet reuses one compiled shape forever.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.kernels.fleet_score import (
+    A_CLEAN,
+    A_MAINTAIN,
+    A_SKIP,
+    CORR_WINS,
+    fleet_scores,
+)
+from repro.planner.costs import CostModel
+
+
+@dataclasses.dataclass
+class FleetScores:
+    """Host-side view of one scoring pass, in fleet order."""
+
+    names: List[str]
+    features: np.ndarray  # (V, N_FEATURES) f32, the scorer's exact input
+    scores: np.ndarray    # (V, N_SCORES) f32
+
+    def score(self, name: str, action: str) -> float:
+        i = self.names.index(name)
+        col = {"skip": A_SKIP, "clean": A_CLEAN, "maintain": A_MAINTAIN}[action]
+        return float(self.scores[i, col])
+
+    def corr_wins(self) -> Dict[str, bool]:
+        """Per-view §5.2.2 estimator flip (CORR while ht_corr ≤ ht_aqp)."""
+        return {n: bool(self.scores[i, CORR_WINS] > 0.5)
+                for i, n in enumerate(self.names)}
+
+
+def score_fleet(
+    cost_model: CostModel,
+    names: Optional[Sequence[str]] = None,
+    use_pallas: Optional[bool] = None,
+) -> FleetScores:
+    """Gather features and price the whole fleet in one compiled pass."""
+    names = list(names) if names is not None else list(cost_model.vm.views)
+    feats = cost_model.features(names)
+    scores = np.asarray(fleet_scores(feats, use_pallas=use_pallas))
+    return FleetScores(names=names, features=feats, scores=scores)

@@ -186,4 +186,12 @@ class ServeEngine:
                     queries[stat] = Query(agg=agg, col=col)
         names = list(queries)
         ests = self.telemetry.query_batch(view_name, [queries[n] for n in names])
-        return dict(zip(names, ests))
+        out = dict(zip(names, ests))
+        # planner panel: when the telemetry service routes refreshes through
+        # a MaintenancePlanner, surface its last epoch's decisions (budget,
+        # per-view action/score/cost, skipped views, §5.2.2 flips) next to
+        # the stats — the control plane is observable from the dashboard
+        planner = getattr(self.telemetry, "planner", None)
+        if planner is not None and planner.last_report is not None:
+            out["planner"] = planner.last_report.to_dict()
+        return out

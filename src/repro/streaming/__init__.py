@@ -9,6 +9,7 @@ aggregation in core/distributed_svc.
 
 from repro.streaming.delta_log import Backpressure, DeltaLog, MicroBatch, PartitionedDeltaLog
 from repro.streaming.service import (
+    BaseStaleness,
     StalenessInfo,
     StreamConfig,
     StreamedEstimate,
@@ -17,6 +18,7 @@ from repro.streaming.service import (
 
 __all__ = [
     "Backpressure",
+    "BaseStaleness",
     "DeltaLog",
     "MicroBatch",
     "PartitionedDeltaLog",

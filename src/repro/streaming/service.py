@@ -36,6 +36,15 @@ class StreamConfig:
 
 
 @dataclasses.dataclass
+class BaseStaleness:
+    """Per-base-relation view of the buffered (pre-drain) delta log."""
+
+    pending_rows: int
+    pending_batches: int
+    oldest_pending_s: float
+
+
+@dataclasses.dataclass
 class StalenessInfo:
     """What the latest refreshed sample does NOT yet reflect."""
 
@@ -45,6 +54,9 @@ class StalenessInfo:
     refresh_age_s: float  # seconds since the last svc_refresh (-1: never)
     refreshed_through_seq: Dict[str, int]  # per base: highest seq cleaned in
     watermark_due: bool
+    # per-base breakdown of the global counters above, so planner decisions
+    # (which base's traffic is backing up) are observable from telemetry
+    per_base: Dict[str, BaseStaleness] = dataclasses.field(default_factory=dict)
 
 
 @dataclasses.dataclass
@@ -73,6 +85,14 @@ class StreamingViewService:
         self.logs: Dict[str, DeltaLog] = {}
         self._last_refresh: Optional[float] = None
         self.refresh_count = 0
+        self.planner = None  # MaintenancePlanner once attach_planner ran
+
+    def attach_planner(self, planner):
+        """Route watermark refreshes through the budgeted control plane:
+        each drain becomes a ``planner.step()`` epoch (clean/maintain/
+        serve-stale per view under the budget) instead of clean-everything."""
+        self.planner = planner
+        return planner
 
     def _log(self, base: str) -> DeltaLog:
         if base not in self.logs:
@@ -110,15 +130,22 @@ class StreamingViewService:
         return False
 
     # -- refresh -------------------------------------------------------------
-    def refresh(self) -> float:
-        """Drain every log into the ViewManager and clean all affected
-        samples; returns total svc_refresh wall time (seconds).
+    def refresh(self, plan=None) -> float:
+        """Drain every log into the ViewManager and refresh the fleet;
+        returns total refresh/maintain wall time (seconds).
 
-        Outlier-index maintenance (§6.1) rides the same drain: the
-        coalesced inserts flow through the incremental threshold-gated
-        ``update_outlier_index`` inside ``_ingest_pending`` — a
-        sub-threshold window costs O(|∂D|) and never touches the index —
+        Without a planner, every affected sample is cleaned (the paper's
+        clean-all workflow).  With one — passed as ``plan`` or attached via
+        ``attach_planner`` — the drain becomes a control-plane epoch: the
+        planner picks clean/maintain/serve-stale per view under its budget
+        (repro.planner.MaintenancePlanner).
+
+        Outlier-index maintenance (§6.1) rides the same drain: the window's
+        offers are buffered by ``_ingest_pending`` and flushed as ONE
+        threshold-gated ``update_outlier_index`` merge per refresh window —
+        a sub-threshold window costs O(|∂D|) and never touches the index —
         before ``svc_refresh`` re-derives the pin set for cleaning."""
+        planner = plan if plan is not None else self.planner
         touched = set()
         for base, log in self.logs.items():
             ins, dels = log.drain()
@@ -127,9 +154,12 @@ class StreamingViewService:
             self.vm._ingest_pending(base, inserts=ins, deletes=dels)
             touched.add(base)
         total = 0.0
-        for name, mv in self.vm.views.items():
-            if touched & set(mv.delta_bases):
-                total += self.vm.svc_refresh(name, fused=self.config.fused)
+        if planner is not None:
+            total = planner.step(fused=self.config.fused).actual_spend_s
+        else:
+            for name, mv in self.vm.views.items():
+                if touched & set(mv.delta_bases):
+                    total += self.vm.svc_refresh(name, fused=self.config.fused)
         self._last_refresh = self._clock()
         self.refresh_count += 1
         return total
@@ -137,7 +167,16 @@ class StreamingViewService:
     # -- consumer side -------------------------------------------------------
     def staleness(self) -> StalenessInfo:
         now = self._clock()
+        per_base = {
+            b: BaseStaleness(
+                pending_rows=l.pending_rows(),
+                pending_batches=l.pending_batches(),
+                oldest_pending_s=l.oldest_age_s(now),
+            )
+            for b, l in self.logs.items()
+        }
         return StalenessInfo(
+            per_base=per_base,
             pending_rows=sum(l.pending_rows() for l in self.logs.values()),
             pending_batches=sum(l.pending_batches() for l in self.logs.values()),
             oldest_pending_s=max(

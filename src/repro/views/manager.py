@@ -66,19 +66,47 @@ class ManagedView:
     outlier_index: Optional[OutlierIndex] = None
     outlier_pin: Optional[Relation] = None  # view-key pin set from push-up
     stale_since_ivm: bool = False
-    maintenance_s: float = 0.0  # last maintenance wall time (for benchmarks)
+    maintenance_s: float = 0.0  # last timed op (refresh OR maintain) wall time
+    refresh_s: float = 0.0  # last svc_refresh wall time (cost-model seed)
+    ivm_s: float = 0.0  # last full-maintenance wall time (cost-model seed)
     # per-refresh-window correspondence cache (repro.query.engine): the
     # query-independent clean↔stale outer-join alignment, built lazily on
     # the first query of a window and invalidated by refresh/maintain
     corr_cache: Optional[object] = None
+    # -- control-plane bookkeeping (repro.planner) ---------------------------
+    # pending-segment cursor: segments [0, applied_seg) are already folded
+    # into ``materialized`` (per-view IVM pace under the budgeted scheduler)
+    applied_seg: int = 0
+    # per-base lifetime delta-row counts at the last maintain / svc_refresh
+    # (drift counters: pending rows = ViewManager.ingested_rows − these)
+    applied_rows: Dict[str, int] = dataclasses.field(default_factory=dict)
+    cleaned_rows: Dict[str, int] = dataclasses.field(default_factory=dict)
+    # delta micro-batches offered to the outlier index but not yet merged;
+    # flushed as ONE update_outlier_index call per refresh window
+    outlier_offers: List[Relation] = dataclasses.field(default_factory=list)
+    # bumped whenever either sample moves (planner moment-snapshot staleness)
+    sample_version: int = 0
 
 
 class ViewManager:
     def __init__(self):
         self.base: Dict[str, Relation] = {}
         self.views: Dict[str, ManagedView] = {}
-        self.pending = DeltaSet()
+        # pending deltas as an ordered SEGMENT log (one DeltaSet per ingest
+        # batch): per-view cursors let the budgeted planner maintain views
+        # at different paces; a segment is applied to the base relations and
+        # popped once every dependent view has folded it in (the floor)
+        self.pending_segments: List[DeltaSet] = []
+        self._merged_cache: Dict[Tuple[int, int], DeltaSet] = {}
+        self.ingested_rows: Dict[str, int] = {}  # lifetime delta rows per base
+        self._base_applied_rows: Dict[str, int] = {}  # rows folded into base
         self.stream = None  # StreamingViewService once configure_streaming ran
+        self.cost_model = None  # planner/costs.CostModel once attached
+
+    @property
+    def pending(self) -> DeltaSet:
+        """All not-yet-base-applied deltas merged per base (read-only view)."""
+        return self._pending_from(0)
 
     # -- streaming -----------------------------------------------------------
     def configure_streaming(self, config=None):
@@ -131,6 +159,10 @@ class ViewManager:
             clean_sample=compact(stale_sample, cap),
             sample_capacity=cap,
             delta_bases=delta_bases,
+            # drift counters start at the base-applied watermark: rows
+            # already folded into the base are part of ``materialized``
+            applied_rows={b: self._base_applied_rows.get(b, 0) for b in delta_bases},
+            cleaned_rows={b: self._base_applied_rows.get(b, 0) for b in delta_bases},
         )
         self.views[view.name] = mv
         return mv
@@ -158,6 +190,7 @@ class ViewManager:
         )
         mv.clean_sample = mv.stale_sample
         mv.corr_cache = None
+        mv.sample_version += 1
 
     # -- delta ingestion -----------------------------------------------------
     def ingest(self, base: str, inserts: Optional[Relation] = None,
@@ -172,27 +205,74 @@ class ViewManager:
 
     def _ingest_pending(self, base: str, inserts: Optional[Relation] = None,
                         deletes: Optional[Relation] = None):
+        seg = DeltaSet()
+        n_rows = 0
         if inserts is not None:
-            cur = self.pending.inserts.get(base)
-            self.pending.inserts[base] = _concat(cur, inserts) if cur is not None else inserts
+            seg.inserts[base] = inserts
+            n_rows += int(np.asarray(inserts.valid).sum())
         if deletes is not None:
-            cur = self.pending.deletes.get(base)
-            self.pending.deletes[base] = _concat(cur, deletes) if cur is not None else deletes
+            seg.deletes[base] = deletes
+            n_rows += int(np.asarray(deletes.valid).sum())
+        if not seg.is_empty():
+            self.pending_segments.append(seg)
+            self._merged_cache.clear()
+            self.ingested_rows[base] = self.ingested_rows.get(base, 0) + n_rows
         for mv in self.views.values():
             if base in mv.delta_bases:
                 mv.stale_since_ivm = True
             if mv.outlier_index is not None and mv.outlier_index.base == base and inserts is not None:
-                mv.outlier_index = update_outlier_index(mv.outlier_index, inserts)
+                # deferred: the window's offers merge as ONE incremental
+                # update at the next refresh (_flush_outlier_offers)
+                mv.outlier_offers.append(inserts)
+        if self.cost_model is not None and n_rows:
+            self.cost_model.observe_ingest(base, n_rows)
+
+    def _pending_from(self, lo: int) -> DeltaSet:
+        """Segments [lo:] merged per base (memoized per refresh window)."""
+        hi = len(self.pending_segments)
+        key = (lo, hi)
+        merged = self._merged_cache.get(key)
+        if merged is None:
+            ins: Dict[str, List[Relation]] = {}
+            dels: Dict[str, List[Relation]] = {}
+            for seg in self.pending_segments[lo:]:
+                for b, r in seg.inserts.items():
+                    ins.setdefault(b, []).append(r)
+                for b, r in seg.deletes.items():
+                    dels.setdefault(b, []).append(r)
+            merged = DeltaSet(
+                inserts={b: _concat_many(rs) for b, rs in ins.items()},
+                deletes={b: _concat_many(rs) for b, rs in dels.items()},
+            )
+            self._merged_cache[key] = merged
+        return merged
+
+    def drift_rows(self, view_name: str, since: str = "ivm") -> int:
+        """Delta rows a view has not yet absorbed.
+
+        ``since="ivm"``: rows not folded by full maintenance (the correction
+        the clean sample must carry); ``since="clean"``: rows not yet
+        reflected in the clean sample (the staleness bias of serving without
+        a refresh).  Both are O(#bases) counter reads — the planner's drift
+        signal costs no scans."""
+        mv = self.views[view_name]
+        snap = mv.applied_rows if since == "ivm" else mv.cleaned_rows
+        return sum(
+            max(self.ingested_rows.get(b, 0) - snap.get(b, 0), 0)
+            for b in mv.delta_bases
+        )
 
     def _deltas_for(self, mv: ManagedView) -> DeltaSet:
-        """Pending deltas, with EMPTY stand-ins for quiet delta bases so the
-        cleaning/maintenance plans always find their Scan leaves.
+        """Pending deltas beyond the view's applied cursor, with EMPTY
+        stand-ins for quiet delta bases so the cleaning/maintenance plans
+        always find their Scan leaves.
 
         Insert AND delete leaves are both back-filled (a ``with_deletes``
         strategy has ``base__del`` Scans that must resolve even on an
         insert-only refresh window — previously a KeyError)."""
-        out = DeltaSet(inserts=dict(self.pending.inserts),
-                       deletes=dict(self.pending.deletes))
+        merged = self._pending_from(mv.applied_seg)
+        out = DeltaSet(inserts=dict(merged.inserts),
+                       deletes=dict(merged.deletes))
         leaves = {leaf.name for leaf in plan_leaves(mv.strategy)}
         for b in mv.delta_bases:
             base = self.base[b]
@@ -202,6 +282,26 @@ class ViewManager:
             if b + DEL in leaves and b not in out.deletes:
                 out.deletes[b] = empty_relation(dtypes, base.schema.pk, capacity=8)
         return out
+
+    def _flush_outlier_offers(self, mv: ManagedView) -> None:
+        """Merge the window's buffered index offers in ONE incremental
+        update (threshold gate + bounded merge) instead of one per
+        micro-batch; concat order is offer order, so the result is
+        bit-equal to the per-batch path (stable survivor sort)."""
+        offers, mv.outlier_offers = mv.outlier_offers, []
+        if not offers or mv.outlier_index is None:
+            return
+        if len(offers) == 1:
+            delta = offers[0]
+        else:
+            schema = offers[0].schema
+            cols = {
+                c: jnp.concatenate([r.col(c) for r in offers])
+                for c in schema.columns
+            }
+            valid = jnp.concatenate([r.valid for r in offers])
+            delta = Relation(cols, valid, schema)
+        mv.outlier_index = update_outlier_index(mv.outlier_index, delta)
 
     # -- SVC: clean the samples only (cheap, between maintenance periods) ----
     def svc_refresh(self, view_name: str, fused: Optional[bool] = None) -> float:
@@ -213,6 +313,7 @@ class ViewManager:
         mv = self.views[view_name]
         t0 = time.perf_counter()
         if mv.outlier_index is not None:
+            self._flush_outlier_offers(mv)
             self._refresh_pin_keys_only(mv)
         extra = dict(self.base)
         pin_name = None
@@ -238,6 +339,12 @@ class ViewManager:
         jnp.asarray(mv.clean_sample.valid).block_until_ready()
         dt = time.perf_counter() - t0
         mv.maintenance_s = dt
+        mv.refresh_s = dt
+        mv.sample_version += 1
+        for b in mv.delta_bases:  # the clean sample now reflects all deltas
+            mv.cleaned_rows[b] = self.ingested_rows.get(b, 0)
+        if self.cost_model is not None:
+            self.cost_model.observe_refresh(view_name, dt)
         return dt
 
     def _refresh_pin_keys_only(self, mv: ManagedView) -> None:
@@ -251,9 +358,31 @@ class ViewManager:
         )
 
     # -- full IVM (the expensive path; runs at maintenance periods) ----------
-    def maintain(self, view_name: str) -> float:
+    def maintain(self, view_name: str, consume: bool = True) -> float:
+        """Full IVM for ONE view at its own pace: fold the pending segments
+        beyond this view's cursor into the materialized view, advance the
+        cursor, and let the shared floor (min cursor over dependent views)
+        apply fully-absorbed segments to the base relations — the planner
+        can maintain hot views every epoch without double-applying deltas
+        to views it deferred.
+
+        ``consume=False`` is the timing probe for benchmarks: the same
+        maintenance work runs into a scratch result and NO state moves, so
+        repeated calls measure the full per-maintenance cost (a consuming
+        call leaves nothing pending for the next repeat to fold)."""
         mv = self.views[view_name]
+        if not consume:
+            t0 = time.perf_counter()
+            scratch = full_maintenance(
+                mv.strategy, mv.view.name, mv.materialized,
+                self._deltas_for(mv), extra_env=self.base,
+                out_capacity=mv.materialized.capacity,
+            )
+            jnp.asarray(scratch.valid).block_until_ready()
+            return time.perf_counter() - t0
+        self._flush_outlier_offers(mv)
         t0 = time.perf_counter()
+        hi = len(self.pending_segments)
         mv.materialized = full_maintenance(
             mv.strategy,
             mv.view.name,
@@ -272,6 +401,15 @@ class ViewManager:
         mv.corr_cache = None
         mv.stale_since_ivm = False
         mv.maintenance_s = dt
+        mv.ivm_s = dt
+        mv.sample_version += 1
+        mv.applied_seg = hi
+        for b in mv.delta_bases:
+            mv.applied_rows[b] = self.ingested_rows.get(b, 0)
+            mv.cleaned_rows[b] = self.ingested_rows.get(b, 0)
+        self._advance_pending_floor()
+        if self.cost_model is not None:
+            self.cost_model.observe_maintain(view_name, dt)
         return dt
 
     def maintain_all(self) -> float:
@@ -283,16 +421,42 @@ class ViewManager:
         total = 0.0
         for name in self.views:
             total += self.maintain(name)
-        self._apply_deltas_to_base()
-        self.pending = DeltaSet()
+        self._advance_pending_floor()  # no views registered: drain anyway
         return total
 
-    def _apply_deltas_to_base(self) -> None:
-        for b, rel in self.pending.inserts.items():
+    def _advance_pending_floor(self) -> None:
+        """Apply and pop every leading segment that all dependent views have
+        already folded in (their cursors are past it); cursors shift with
+        the pop so pending memory stays bounded by the slowest view — which
+        the planner's starvation guard forces to maintain eventually."""
+        popped = False
+        while self.pending_segments:
+            seg = self.pending_segments[0]
+            bases = set(seg.inserts) | set(seg.deletes)
+            gating = [mv for mv in self.views.values()
+                      if bases & set(mv.delta_bases)]
+            if any(mv.applied_seg < 1 for mv in gating):
+                break
+            self._apply_segment_to_base(seg)
+            self.pending_segments.pop(0)
+            for mv in self.views.values():
+                mv.applied_seg = max(0, mv.applied_seg - 1)
+            popped = True
+        if popped:
+            self._merged_cache.clear()
+
+    def _apply_segment_to_base(self, seg: DeltaSet) -> None:
+        for b, rel in seg.inserts.items():
             grown = max(self.base[b].capacity, _next_pow2(int(np.asarray(self.base[b].valid.sum())) + rel.capacity))
             self.base[b] = upsert(self.base[b], rel, capacity=grown)
-        for b, rel in self.pending.deletes.items():
+            self._base_applied_rows[b] = (
+                self._base_applied_rows.get(b, 0) + int(np.asarray(rel.valid).sum())
+            )
+        for b, rel in seg.deletes.items():
             self.base[b] = delete_keys(self.base[b], rel)
+            self._base_applied_rows[b] = (
+                self._base_applied_rows.get(b, 0) + int(np.asarray(rel.valid).sum())
+            )
 
     # -- query API ------------------------------------------------------------
     def query(
@@ -330,6 +494,8 @@ class ViewManager:
         view.  Non-encodable queries fall back per query; result order
         matches ``queries``.  ``fused=False`` keeps the batch machinery but
         computes moments query-by-query (benchmark A/B)."""
+        if self.cost_model is not None:  # planner traffic counter
+            self.cost_model.observe_traffic(view_name, len(queries))
         mv = self.views[view_name]
         results: List[Optional[Estimate]] = [None] * len(queries)
         cols = sample_columns(mv.clean_sample)
@@ -414,16 +580,22 @@ class ViewManager:
         return exact(fresh, q)
 
 
-def _concat(a: Relation, b: Relation) -> Relation:
-    """Concatenate delta buffers into a size-bucketed arena.
+def _concat_many(rels: List[Relation]) -> Relation:
+    """Concatenate delta segments into one size-bucketed arena.
 
     Capacity is sized by the VALID row count (next pow2, ≥4096), so a
     steady ingest stream keeps one stable shape → the compiled cleaning
-    plan is reused across refreshes instead of retracing every step."""
-    cols = {c: jnp.concatenate([a.col(c), b.col(c)]) for c in a.schema.columns}
-    valid = jnp.concatenate([a.valid, b.valid])
-    merged = Relation(cols, valid, a.schema)
-    n_valid = int(np.asarray(valid).sum())  # host sync at ingest: acceptable
+    plan is reused across refreshes instead of retracing every step.  A
+    single segment passes through unchanged (the common fresh-window
+    case), and the merge is one concatenate + compact regardless of
+    segment count — not a pairwise fold."""
+    if len(rels) == 1:
+        return rels[0]
+    schema = rels[0].schema
+    cols = {c: jnp.concatenate([r.col(c) for r in rels]) for c in schema.columns}
+    valid = jnp.concatenate([r.valid for r in rels])
+    merged = Relation(cols, valid, schema)
+    n_valid = int(np.asarray(valid).sum())  # host sync per refresh window
     cap = _next_pow2(max(n_valid, 4096))
     from repro.relational.relation import compact as _compact
     return _compact(merged, cap)

@@ -535,3 +535,58 @@ def test_multi_agg_ht_d_excludes_pinned_rows():
     mom0 = np.asarray(multi_agg_moments(x_new, vn, ones_w, ompi, sel, meta,
                                         x_old, vo, ones_w, ompi, use_pallas=False))
     np.testing.assert_allclose(mom0[HT_D], (1.0 - m) * mom0[SS_D], rtol=2e-5, atol=1e-2)
+
+
+# ---------------------------------------------------------------------------
+# kernels/fleet_score: the planner's one-pass fleet scorer
+# ---------------------------------------------------------------------------
+
+def _random_fleet_features(rng, V):
+    from repro.kernels.fleet_score import (
+        F_AGE, F_COST_CLEAN, F_COST_MAINTAIN, F_DRIFT_CLEAN, F_DRIFT_IVM,
+        F_EX2, F_HT_AQP, F_HT_CORR, F_M, F_MEAN, F_N, F_TRAFFIC, N_FEATURES,
+    )
+
+    f = np.zeros((V, N_FEATURES), np.float32)
+    f[:, F_N] = rng.uniform(10, 1e4, V)
+    f[:, F_EX2] = rng.uniform(0.1, 500, V)
+    f[:, F_MEAN] = rng.uniform(-20, 20, V)
+    f[:, F_HT_AQP] = rng.uniform(0, 1e5, V)
+    f[:, F_HT_CORR] = rng.uniform(0, 1e5, V)
+    f[:, F_DRIFT_CLEAN] = rng.integers(0, 2000, V)
+    f[:, F_DRIFT_IVM] = rng.integers(0, 4000, V)
+    f[:, F_TRAFFIC] = rng.uniform(0, 100, V)
+    f[:, F_COST_CLEAN] = rng.uniform(1e-3, 2.0, V)
+    f[:, F_COST_MAINTAIN] = rng.uniform(1e-2, 10.0, V)
+    f[:, F_AGE] = rng.uniform(0, 1e3, V)
+    f[:, F_M] = rng.uniform(0.01, 1.0, V)
+    return f
+
+
+@pytest.mark.parametrize("V", [1, 5, 37, 513])
+def test_fleet_score_kernel_matches_oracle(V):
+    """Pallas tile pass == pure-jnp oracle == XLA path (≤1e-6 relative)."""
+    from repro.kernels.fleet_score import fleet_score_ref
+    from repro.kernels.fleet_score.ops import fleet_scores
+
+    rng = np.random.default_rng(V)
+    feats = _random_fleet_features(rng, V)
+    want = np.asarray(fleet_score_ref(feats))
+    got_xla = np.asarray(fleet_scores(feats, use_pallas=False))
+    got_pl = np.asarray(fleet_scores(feats, use_pallas=True))
+    assert got_pl.shape == (V, 4)
+    np.testing.assert_allclose(got_xla, want, rtol=1e-6, atol=1e-6)
+    np.testing.assert_allclose(got_pl, want, rtol=1e-6, atol=1e-6)
+
+
+def test_fleet_score_degenerate_views_score_zero():
+    """All-zero feature rows (padding, empty views) must score 0 on every
+    action — no NaN/Inf leaks from the guarded divisors."""
+    from repro.kernels.fleet_score import N_FEATURES
+    from repro.kernels.fleet_score.ops import fleet_scores
+
+    feats = np.zeros((3, N_FEATURES), np.float32)
+    for up in (False, True):
+        got = np.asarray(fleet_scores(feats, use_pallas=up))
+        assert np.all(np.isfinite(got))
+        np.testing.assert_array_equal(got[:, :3], 0.0)

@@ -220,3 +220,63 @@ def test_no_double_counting():
     q = Query(agg="sum", col="v")
     est = float(svc_aqp(sample, q, m=1.0).value)
     assert abs(est - float(vals.sum())) < 1e-2 * float(vals.sum())
+
+
+def test_outlier_offers_flush_once_per_window_bit_equal():
+    """Deferred index maintenance (ROADMAP): micro-batches offered between
+    refreshes merge as ONE update_outlier_index call at the refresh, and
+    the result is bit-equal to the per-batch update path — across shuffled
+    offer orders."""
+    import repro.views.manager as manager_mod
+
+    rng = np.random.default_rng(9)
+    nv, nl = 60, 1200
+    log, video = make_log_video(rng, nv, nl)
+    plan = GroupByNode(
+        child=FKJoin(fact=Scan("Log", pk=("sessionId",)),
+                     dim=Scan("Video", pk=("videoId",)), fact_key="videoId"),
+        keys=("videoId",),
+        aggs=(("totalBytes", "sum", "bytes"), ("visits", "count", None)),
+        num_groups=128,
+    )
+    batches = []
+    key0 = nl
+    for _ in range(6):
+        sz = int(rng.integers(5, 40))
+        batches.append(grow_log(rng, nv, key0, sz))
+        key0 += sz
+
+    for perm_seed in range(3):
+        order = np.random.default_rng(perm_seed).permutation(len(batches))
+        vm = ViewManager()
+        vm.register_base("Log", log)
+        vm.register_base("Video", video)
+        vm.register_view(ViewDef("v", plan), delta_bases=("Log",), m=0.2,
+                         seed=1, delta_group_capacity=128)
+        vm.register_outlier_index("v", "Log", "bytes", k=25)
+        idx0 = vm.views["v"].outlier_index
+
+        calls = []
+        real_update = manager_mod.update_outlier_index
+        manager_mod.update_outlier_index = (
+            lambda idx, d, **kw: calls.append(1) or real_update(idx, d, **kw)
+        )
+        try:
+            for bi in order:
+                vm.ingest("Log", inserts=batches[bi])
+            assert calls == []  # nothing merged at ingest time
+            vm.svc_refresh("v")
+        finally:
+            manager_mod.update_outlier_index = real_update
+        assert calls == [1]  # ONE merge for the whole window
+
+        # per-batch reference path, same offer order
+        expect = idx0
+        for bi in order:
+            expect = update_outlier_index(expect, batches[bi])
+        got = vm.views["v"].outlier_index
+        ga, ea = to_host(got.records), to_host(expect.records)
+        for c in ga:
+            np.testing.assert_array_equal(ga[c], ea[c])
+        np.testing.assert_array_equal(
+            np.asarray(got.threshold), np.asarray(expect.threshold))

@@ -1,0 +1,400 @@
+"""Budgeted maintenance control plane: planner invariants.
+
+Covers the scheduler's contract — budget monotonicity, the starvation
+guard, §5.2.2 flip agreement with ``variance_comparison`` — plus the
+per-view maintenance pacing the planner relies on (segment cursors: no
+double-apply when views maintain at different rates) and the streaming /
+dashboard wire-up.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import Query, ViewDef
+from repro.core.estimators import variance_comparison
+from repro.planner import MaintenancePlanner, canonical_query
+from repro.relational.execute import execute
+from repro.relational.plan import GroupByNode, Scan
+from repro.relational.relation import from_columns
+from repro.streaming import StreamConfig
+from repro.views import ViewManager
+
+from tests import oracle
+
+
+class FakeClock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+
+def _base_rel(n, groups, rng, scale=10.0):
+    return from_columns(
+        {
+            "sessionId": np.arange(n, dtype=np.int32),
+            "videoId": rng.integers(0, groups, n).astype(np.int32),
+            "bytes": rng.exponential(scale, n).astype(np.float32),
+        },
+        pk=["sessionId"],
+        capacity=4096,
+    )
+
+
+def _delta_rel(start, n, groups, rng, scale=10.0):
+    return from_columns(
+        {
+            "sessionId": np.arange(start, start + n, dtype=np.int32),
+            "videoId": rng.integers(0, groups, n).astype(np.int32),
+            "bytes": rng.exponential(scale, n).astype(np.float32),
+        },
+        pk=["sessionId"],
+    )
+
+
+def _fleet(n_views, n_rows=400, groups=32, m=0.25, shared_base=False):
+    rng = np.random.default_rng(0)
+    vm = ViewManager()
+    if shared_base:
+        vm.register_base("Log", _base_rel(n_rows, groups, rng))
+    for i in range(n_views):
+        base = "Log" if shared_base else f"Log{i}"
+        if not shared_base:
+            vm.register_base(base, _base_rel(n_rows, groups, rng))
+        plan = GroupByNode(
+            child=Scan(base, pk=("sessionId",)),
+            keys=("videoId",),
+            aggs=(("totalBytes", "sum", "bytes"), ("visits", "count", None)),
+            num_groups=2 * groups,
+        )
+        vm.register_view(ViewDef(f"v{i}", plan), delta_bases=(base,), m=m,
+                         seed=i, delta_group_capacity=2 * groups)
+    return vm, rng
+
+
+Q_SUM = Query(agg="sum", col="totalBytes")
+
+
+def _fleet_mean_err(vm, n_views):
+    errs = []
+    for i in range(n_views):
+        truth = float(vm.query_exact_fresh(f"v{i}", Q_SUM))
+        est = float(vm.query(f"v{i}", Q_SUM).value)
+        errs.append(abs(est - truth) / max(abs(truth), 1e-9))
+    return float(np.mean(errs))
+
+
+# ---------------------------------------------------------------------------
+# Budget + knapsack invariants
+# ---------------------------------------------------------------------------
+
+def test_budget_monotonicity_larger_budget_no_worse():
+    """Equal action prices ⇒ greedy picks are nested across budgets, and a
+    bigger budget can only lower the fleet error."""
+    n_views = 4
+
+    def run(budget):
+        vm, rng = _fleet(n_views)
+        planner = MaintenancePlanner(vm, budget_s=budget, age_cap_s=1e9)
+        planner.cost_model.pin_costs(refresh_s=1.0, maintain_s=1.0)
+        for i in range(n_views):
+            vm.ingest(f"Log{i}", inserts=_delta_rel(5000, 120 + 40 * i, 32,
+                                                    np.random.default_rng(i)))
+        planner.step()
+        return _fleet_mean_err(vm, n_views)
+
+    errs = [run(b) for b in (0.0, 1.0, 2.0, 4.0)]
+    for lo, hi in zip(errs[1:], errs[:-1]):
+        assert lo <= hi + 1e-9, errs
+    assert errs[-1] < errs[0]  # the full budget actually fixed the fleet
+
+
+def test_budget_respected_and_actions_reported():
+    n_views = 5
+    vm, rng = _fleet(n_views)
+    planner = MaintenancePlanner(vm, budget_s=2.0, age_cap_s=1e9)
+    planner.cost_model.pin_costs(refresh_s=1.0, maintain_s=5.0)
+    for i in range(n_views):
+        vm.ingest(f"Log{i}", inserts=_delta_rel(5000, 150, 32,
+                                                np.random.default_rng(i)))
+    report = planner.step()
+    assert report.predicted_spend_s <= report.budget_s + 1e-9
+    assert len(report.actions) == 2  # two cleans fit, a maintain never does
+    assert all(a.action == "clean" for a in report.actions)
+    assert set(report.corr_wins) == {f"v{i}" for i in range(n_views)}
+    assert len(report.actions) + len(report.skipped) == n_views
+    # drifting-but-skipped views are exactly the serve-stale decision
+    assert all(vm.drift_rows(v, "clean") > 0 for v in report.skipped)
+
+
+def test_zero_budget_serves_everything_stale():
+    vm, rng = _fleet(3)
+    planner = MaintenancePlanner(vm, budget_s=0.0, age_cap_s=1e9)
+    planner.cost_model.pin_costs(refresh_s=1.0, maintain_s=2.0)
+    for i in range(3):
+        vm.ingest(f"Log{i}", inserts=_delta_rel(5000, 100, 32,
+                                                np.random.default_rng(i)))
+    report = planner.step()
+    assert report.actions == []
+    assert sorted(report.skipped) == ["v0", "v1", "v2"]
+
+
+# ---------------------------------------------------------------------------
+# Starvation guard
+# ---------------------------------------------------------------------------
+
+def test_starvation_guard_bounds_staleness_age():
+    """A drifting view the knapsack never favors is force-maintained once
+    its staleness age crosses the cap."""
+    clock = FakeClock()
+    vm, rng = _fleet(2)
+    planner = MaintenancePlanner(vm, budget_s=1.0, age_cap_s=25.0, clock=clock)
+    planner.cost_model.pin_costs(refresh_s=1.0, maintain_s=1.0)
+    planner.cost_model.observe_traffic("v0", 10_000)  # v1 stays cold
+
+    maintained_at = None
+    for epoch in range(8):
+        clock.t += 10.0
+        for i in range(2):
+            vm.ingest(f"Log{i}", inserts=_delta_rel(5000 + 1000 * epoch, 80, 32,
+                                                    np.random.default_rng(epoch)))
+        report = planner.step()
+        by_view = {a.view: a for a in report.actions}
+        if "v1" in by_view:
+            assert by_view["v1"].action == "maintain"
+            assert by_view["v1"].forced
+            maintained_at = clock.t
+            break
+        # until the cap trips, the budget goes to the hot view
+        assert by_view and all(a.view == "v0" for a in report.actions)
+    assert maintained_at is not None
+    # age at the forced maintenance ≤ cap + one epoch of slack
+    assert maintained_at <= 25.0 + 10.0 + 1e-9
+    assert vm.drift_rows("v1", "ivm") == 0  # fully maintained, not cleaned
+
+
+# ---------------------------------------------------------------------------
+# §5.2.2: the scorer's estimator flip == variance_comparison
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("d_rows,scale", [(20, 10.0), (300, 10.0), (1500, 50.0)])
+def test_scorer_flip_agrees_with_variance_comparison(d_rows, scale):
+    """Fig 6b break-even sweep: the fleet scorer's CORR_WINS decision must
+    equal variance_comparison's corr_wins on the same samples."""
+    vm, rng = _fleet(1)
+    vm.ingest("Log0", inserts=_delta_rel(5000, d_rows, 32, rng, scale=scale))
+    vm.svc_refresh("v0")
+    planner = MaintenancePlanner(vm, budget_s=1.0, age_cap_s=1e9)
+    planner.cost_model.pin_costs(refresh_s=1.0, maintain_s=2.0)
+    report = planner.plan()
+    mv = vm.views["v0"]
+    cmp = variance_comparison(mv.clean_sample, mv.stale_sample,
+                              canonical_query(mv), mv.m)
+    assert report.corr_wins["v0"] == bool(cmp["corr_wins"])
+
+
+def test_scorer_flips_clean_to_corr_loss_across_drift():
+    """The break-even exists: CORR wins at small drift and loses once the
+    deltas rewrite most of each group (the §5.2.2 crossover — |d| > |t'|
+    when a group shrinks by more than half — that the planner's error
+    model is built on)."""
+    def corr_wins(delta_per_group):
+        groups, per_group = 32, 10
+        n = groups * per_group
+        base = from_columns(
+            {
+                "sessionId": np.arange(n, dtype=np.int32),
+                "videoId": np.repeat(np.arange(groups), per_group).astype(np.int32),
+                "bytes": np.full(n, 10.0, np.float32),
+            },
+            pk=["sessionId"], capacity=4096,
+        )
+        vm = ViewManager()
+        vm.register_base("Log0", base)
+        plan = GroupByNode(
+            child=Scan("Log0", pk=("sessionId",)), keys=("videoId",),
+            aggs=(("totalBytes", "sum", "bytes"), ("visits", "count", None)),
+            num_groups=2 * groups,
+        )
+        vm.register_view(ViewDef("v0", plan), delta_bases=("Log0",), m=0.25,
+                         seed=0, delta_group_capacity=2 * groups)
+        delta = from_columns(
+            {
+                "sessionId": np.arange(5000, 5000 + groups, dtype=np.int32),
+                "videoId": np.arange(groups, dtype=np.int32),
+                "bytes": np.full(groups, delta_per_group, np.float32),
+            },
+            pk=["sessionId"],
+        )
+        vm.ingest("Log0", inserts=delta)
+        vm.svc_refresh("v0")
+        planner = MaintenancePlanner(vm, budget_s=1.0, age_cap_s=1e9)
+        planner.cost_model.pin_costs(refresh_s=1.0, maintain_s=2.0)
+        return planner.plan().corr_wins["v0"]
+
+    assert corr_wins(+5.0) is True    # mild growth: |d| ≪ |t'|
+    assert corr_wins(-70.0) is False  # groups shrink 100 → 30: |d| > |t'|
+
+
+# ---------------------------------------------------------------------------
+# Per-view maintenance pacing (segment cursors)
+# ---------------------------------------------------------------------------
+
+def test_per_view_maintenance_no_double_apply():
+    """Two views over ONE base maintained at different paces: each folds
+    every delta exactly once, and the pending log drains when the slowest
+    view catches up."""
+    vm, rng = _fleet(2, shared_base=True)
+    vm.ingest("Log", inserts=_delta_rel(5000, 200, 32, rng))
+    vm.maintain("v0")  # v1 has not applied this segment: floor stays put
+    assert len(vm.pending_segments) == 1
+    vm.ingest("Log", inserts=_delta_rel(6000, 150, 32, rng))
+    vm.maintain("v0")  # folds ONLY the second segment into v0
+    assert vm.drift_rows("v0", "ivm") == 0
+    assert vm.drift_rows("v1", "ivm") == 350
+    vm.maintain("v1")  # slowest view catches up: floor applies + truncates
+    assert len(vm.pending_segments) == 0
+    # every view now equals a full recompute from the (updated) base
+    for name in ("v0", "v1"):
+        recomputed = execute(vm.views[name].view.plan, vm.base)
+        assert oracle.rows_equal(
+            oracle.from_relation(vm.views[name].materialized),
+            oracle.from_relation(recomputed),
+            keys=("videoId",),
+        )
+
+
+def test_repeated_maintain_is_idempotent():
+    """Maintaining the same view twice must not re-apply absorbed deltas
+    (the seed double-counted here)."""
+    vm, rng = _fleet(1)
+    vm.ingest("Log0", inserts=_delta_rel(5000, 200, 32, rng))
+    truth = float(vm.query_exact_fresh("v0", Q_SUM))
+    vm.maintain("v0")
+    once = float(vm.query_stale("v0", Q_SUM))
+    vm.maintain("v0")
+    twice = float(vm.query_stale("v0", Q_SUM))
+    np.testing.assert_allclose(once, truth, rtol=1e-5)
+    np.testing.assert_allclose(twice, once, rtol=1e-6)
+
+
+def test_svc_refresh_cleans_from_view_cursor():
+    """A view maintained past some segments cleans only the remainder —
+    the clean sample equals the hash of the fully-fresh view."""
+    vm, rng = _fleet(2, shared_base=True)
+    vm.ingest("Log", inserts=_delta_rel(5000, 200, 32, rng))
+    vm.maintain("v0")
+    vm.ingest("Log", inserts=_delta_rel(6000, 150, 32, rng))
+    vm.svc_refresh("v0")  # must clean from the post-maintain stale sample
+    truth = float(vm.query_exact_fresh("v0", Q_SUM))
+    est = float(vm.query("v0", Q_SUM, prefer="corr").value)
+    stale = float(vm.query_stale("v0", Q_SUM))
+    assert abs(est - truth) < abs(stale - truth)
+
+
+# ---------------------------------------------------------------------------
+# Streaming + dashboard wire-up
+# ---------------------------------------------------------------------------
+
+def test_streaming_refresh_routes_through_planner():
+    vm, rng = _fleet(3)
+    svc = vm.configure_streaming(
+        StreamConfig(max_rows=10**9, max_age_s=1e9, auto_refresh=False)
+    )
+    planner = svc.attach_planner(
+        MaintenancePlanner(vm, budget_s=1.0, age_cap_s=1e9)
+    )
+    planner.cost_model.pin_costs(refresh_s=1.0, maintain_s=3.0)
+    planner.cost_model.observe_traffic("v2", 1000)
+    for i in range(3):
+        vm.ingest(f"Log{i}", inserts=_delta_rel(5000, 120, 32,
+                                                np.random.default_rng(i)), seq=0)
+    before = {n: vm.views[n].sample_version for n in vm.views}
+    svc.refresh()
+    assert planner.epoch == 1 and planner.last_report is not None
+    acted = {a.view for a in planner.last_report.actions}
+    assert acted == {"v2"}  # the budget covers exactly the hot view
+    for name in vm.views:
+        moved = vm.views[name].sample_version != before[name]
+        assert moved == (name in acted)
+    # per-base staleness telemetry (satellite): drained logs report empty
+    st = svc.staleness()
+    assert set(st.per_base) == {"Log0", "Log1", "Log2"}
+    assert all(b.pending_rows == 0 for b in st.per_base.values())
+
+
+def test_staleness_reports_per_base_breakdown():
+    vm, rng = _fleet(2)
+    clock = FakeClock()
+    svc = vm.configure_streaming(
+        StreamConfig(max_rows=10**9, max_age_s=1e9, auto_refresh=False)
+    )
+    svc._clock = clock
+    vm.ingest("Log0", inserts=_delta_rel(5000, 100, 32, rng), seq=0)
+    clock.t = 4.0
+    vm.ingest("Log1", inserts=_delta_rel(5000, 40, 32, rng), seq=0)
+    st = svc.staleness()
+    assert st.per_base["Log0"].pending_rows == 100
+    assert st.per_base["Log1"].pending_rows == 40
+    assert st.per_base["Log0"].oldest_pending_s == pytest.approx(4.0)
+    assert st.per_base["Log1"].oldest_pending_s == pytest.approx(0.0)
+    assert st.pending_rows == 140  # global counters stay consistent
+
+
+def test_dashboard_surfaces_planner_panel():
+    from repro.serving.engine import Request, ServeEngine
+
+    vm = ViewManager()
+    base = from_columns(
+        {
+            "tickId": np.arange(4, dtype=np.int32),
+            "active": np.zeros(4, np.float32),
+            "emitted": np.zeros(4, np.float32),
+            "queued": np.zeros(4, np.float32),
+        },
+        pk=["tickId"],
+        capacity=64,
+    )
+    vm.register_base("ServeLog", base)
+    plan = GroupByNode(
+        child=Scan("ServeLog", pk=("tickId",)),
+        keys=("tickId",),
+        aggs=(("ticks", "count", None), ("tokens", "sum", "emitted")),
+        num_groups=64,
+    )
+    vm.register_view(ViewDef("serveView", plan), delta_bases=("ServeLog",),
+                     m=1.0, delta_group_capacity=64)
+    svc = vm.configure_streaming(
+        StreamConfig(max_rows=10**9, max_age_s=1e9, auto_refresh=False)
+    )
+    planner = svc.attach_planner(
+        MaintenancePlanner(vm, budget_s=10.0, age_cap_s=1e9)
+    )
+    planner.cost_model.pin_costs(refresh_s=1.0, maintain_s=3.0)
+
+    class _StubModel:
+        vocab = 16
+
+        def init_cache(self, max_batch, max_seq):
+            return {}
+
+        def decode_step(self, params, cache, tokens, pos):
+            import jax.numpy as jnp
+
+            B, T = tokens.shape
+            return jnp.zeros((B, T, self.vocab), jnp.float32), cache
+
+    eng = ServeEngine(_StubModel(), params={}, max_batch=2, max_seq=8,
+                      telemetry=svc, telemetry_base="ServeLog")
+    eng.submit(Request(rid=0, prompt=np.array([1, 2], np.int32), max_new=3))
+    eng.run(max_ticks=10)
+    svc.refresh()  # planner epoch
+    dash = eng.dashboard()
+    panel = dash["planner"]
+    assert panel["epoch"] == 0 and panel["budget_s"] == 10.0
+    assert {a["view"] for a in panel["actions"]} <= {"serveView"}
+    assert "corr_wins" in panel
+    # the stat entries still answer under one shared staleness snapshot
+    stats = {k: v for k, v in dash.items() if k != "planner"}
+    assert len({id(v.staleness) for v in stats.values()}) == 1
