@@ -326,6 +326,33 @@ def _match_fused_groupby(p: Plan, env: Mapping[str, Relation]) -> Optional[_Fuse
     )
 
 
+def _assemble_fused_output(spec: _FusedSpec, num_groups: int,
+                           counts: jnp.ndarray, sums: jnp.ndarray) -> Relation:
+    """(counts, sums) → the materialized delta-view relation.
+
+    The ONE assembly both fused paths share (per-view ``_fused_eval_fn``
+    and the fleet's ``_fleet_assemble_fn``), so batched and sequential
+    refreshes emit identical relations by construction.  Compacts to the
+    group-by's static capacity: stable shapes ⇒ the compiled merge
+    remainder is reused across refreshes."""
+    from repro.relational.relation import SENTINEL_KEY, from_columns
+
+    group_valid = counts > 0
+    key_vals = jnp.where(
+        group_valid, jnp.arange(num_groups, dtype=jnp.int32), SENTINEL_KEY
+    )
+    out_cols = {spec.key: key_vals}
+    i = 0
+    for out, fn_name, _val in spec.node.aggs:
+        if fn_name == "count":
+            out_cols[out] = counts
+        else:
+            out_cols[out] = sums[:, i]
+            i += 1
+    rel = from_columns(out_cols, pk=(spec.key,), valid=group_valid)
+    return compact(rel, spec.node.num_groups)
+
+
 @functools.lru_cache(maxsize=256)
 def _fused_eval_fn(spec: _FusedSpec, num_groups: int):
     """Compiled fused evaluation for one spec + key-domain bound: join-hit
@@ -333,7 +360,7 @@ def _fused_eval_fn(spec: _FusedSpec, num_groups: int):
     all live in ONE jitted computation (steady-state refreshes reuse it)."""
     from repro.core.outliers import member_keys
     from repro.kernels.fused_clean.ops import fused_clean_groupby
-    from repro.relational.relation import SENTINEL_KEY, from_columns
+    from repro.relational.relation import SENTINEL_KEY
 
     sum_cols = tuple(val for _o, fn, val in spec.node.aggs if fn == "sum")
 
@@ -363,23 +390,7 @@ def _fused_eval_fn(spec: _FusedSpec, num_groups: int):
         counts, sums = fused_clean_groupby(
             keys, vals, valid, spec.m, spec.seed, num_groups, pin_mask=pin_mask
         )
-
-        group_valid = counts > 0
-        key_vals = jnp.where(
-            group_valid, jnp.arange(num_groups, dtype=jnp.int32), SENTINEL_KEY
-        )
-        out_cols = {spec.key: key_vals}
-        i = 0
-        for out, fn_name, _val in spec.node.aggs:
-            if fn_name == "count":
-                out_cols[out] = counts
-            else:
-                out_cols[out] = sums[:, i]
-                i += 1
-        rel = from_columns(out_cols, pk=(spec.key,), valid=group_valid)
-        # mirror the unfused groupby's static output capacity (stable shapes
-        # ⇒ the compiled merge remainder is reused across refreshes)
-        return compact(rel, spec.node.num_groups)
+        return _assemble_fused_output(spec, num_groups, counts, sums)
 
     return jax.jit(fn)
 
@@ -424,7 +435,31 @@ def _fused_scan_name(spec: _FusedSpec) -> str:
     return "__fused__" + "__".join(parts)
 
 
-def fuse_delta_groupbys(plan: Plan, env: Mapping[str, Relation]):
+def collect_fused_specs(plan: Plan, env: Mapping[str, Relation]):
+    """The fusable delta-aggregation sub-trees of a pushed cleaning plan.
+
+    Same walk as ``fuse_delta_groupbys`` but evaluation-free: callers (the
+    fleet refresh path) use the returned specs to batch the expensive η+γ
+    stage across views before splicing the results back in via the
+    ``precomputed`` argument."""
+    out = []
+
+    def walk(p: Plan) -> None:
+        spec = _match_fused_groupby(p, env)
+        if spec is not None:
+            out.append(spec)
+            return
+        for f in dataclasses.fields(p):
+            v = getattr(p, f.name)
+            if isinstance(v, Plan):
+                walk(v)
+
+    walk(plan)
+    return out
+
+
+def fuse_delta_groupbys(plan: Plan, env: Mapping[str, Relation],
+                        precomputed: Optional[Mapping["_FusedSpec", Relation]] = None):
     """Splice fused-kernel results in place of fusable delta aggregations.
 
     Walks the pushed cleaning plan; every sub-tree matching the canonical
@@ -435,6 +470,10 @@ def fuse_delta_groupbys(plan: Plan, env: Mapping[str, Relation]):
     fused spec (_fused_scan_name), so steady-state refreshes reuse the
     compiled merge remainder and distinct group-bys over one delta leaf
     never collide.
+
+    ``precomputed`` maps specs to already-evaluated delta-view relations
+    (the fleet refresh path batches many views' aggregations into one
+    dispatch first); matching specs splice those instead of re-evaluating.
     """
     new_env = dict(env)
     fused_any = False
@@ -443,7 +482,9 @@ def fuse_delta_groupbys(plan: Plan, env: Mapping[str, Relation]):
         nonlocal fused_any
         spec = _match_fused_groupby(p, new_env)
         if spec is not None:
-            rel = _eval_fused_groupby(spec, new_env)
+            rel = None if precomputed is None else precomputed.get(spec)
+            if rel is None:
+                rel = _eval_fused_groupby(spec, new_env)
             if rel is not None:
                 name = _fused_scan_name(spec)
                 new_env[name] = rel
@@ -462,6 +503,90 @@ def fuse_delta_groupbys(plan: Plan, env: Mapping[str, Relation]):
     return (new_plan, new_env) if fused_any else (plan, env)
 
 
+# ---------------------------------------------------------------------------
+# Fleet-batched delta aggregation (the epoch refresh path)
+# ---------------------------------------------------------------------------
+
+@functools.lru_cache(maxsize=256)
+def _fleet_assemble_fn(spec: _FusedSpec, num_groups: int):
+    """Compiled per-view slice assembly for the fleet path — the same
+    ``_assemble_fused_output`` the per-view jit runs."""
+
+    def fn(counts: jnp.ndarray, sums: jnp.ndarray) -> Relation:
+        return _assemble_fused_output(spec, num_groups, counts, sums)
+
+    return jax.jit(fn)
+
+
+def fleet_eval_fused_groupbys(candidates) -> Dict[str, Dict[_FusedSpec, Relation]]:
+    """Batch many views' η+γ delta aggregations into shared fused dispatches.
+
+    ``candidates`` is a list of (view_name, env, spec) with exactly one
+    pin-free, dim-free fused spec per view.  Views are grouped by the
+    stacked dispatch shape — delta arena capacity × value-column count —
+    and every group of ≥2 runs as ONE compiled
+    ``kernels/fused_clean.fused_clean_groupby_fleet`` call with per-view
+    sampling thresholds and seeds; singletons (and views whose key domain
+    is unbounded) are left out and take the per-view path.  Returns
+    {view_name: {spec: delta-view Relation}} for the views that batched.
+    """
+    from repro.kernels.fused_clean.ops import fused_clean_groupby_fleet
+
+    groups: Dict[Tuple[int, int], list] = {}
+    for name, env, spec in candidates:
+        fact = env[spec.fact_name]
+        sum_cols = tuple(val for _o, fn, val in spec.node.aggs if fn == "sum")
+        groups.setdefault((fact.capacity, len(sum_cols)), []).append(
+            (name, fact, spec, sum_cols)
+        )
+
+    out: Dict[str, Dict[_FusedSpec, Relation]] = {}
+    for (_cap, n_sum), members in groups.items():
+        if len(members) < 2:
+            continue
+        # one host sync for every member's key bounds (the per-view path
+        # pays one sync per view here)
+        bounds = np.asarray(jnp.stack([
+            jnp.stack([
+                jnp.min(jnp.where(fact.valid, fact.col(spec.key),
+                                  np.iinfo(np.int32).max)),
+                jnp.max(jnp.where(fact.valid, fact.col(spec.key), -1)),
+            ])
+            for _n, fact, spec, _sc in members
+        ]))
+        # exclude (only) members with negative keys or a key domain past the
+        # dense-accumulator bound — one wide-key view must not knock its
+        # shape-mates off the batched path; survivors' shared pow2 bound is
+        # ≤ MAX_FUSED_GROUPS by construction
+        keep = [
+            i for i in range(len(members))
+            if int(bounds[i, 0]) >= 0
+            and _next_pow2_int(max(int(bounds[i, 1]) + 1, 64)) <= MAX_FUSED_GROUPS
+        ]
+        if len(keep) < 2:
+            continue
+        hi = max(int(bounds[i, 1]) for i in keep)
+        num_groups = _next_pow2_int(max(hi + 1, 64))
+        sel = [members[i] for i in keep]
+        gid = jnp.stack([fact.col(spec.key) for _n, fact, spec, _sc in sel])
+        valid = jnp.stack([fact.valid for _n, fact, _s, _sc in sel])
+        vals = jnp.stack([
+            jnp.stack([fact.col(c).astype(jnp.float32) for c in sc], axis=1)
+            if sc else jnp.zeros((fact.capacity, 0), jnp.float32)
+            for _n, fact, _s, sc in sel
+        ])
+        counts, sums = fused_clean_groupby_fleet(
+            gid, vals, valid,
+            ms=tuple(spec.m for _n, _f, spec, _sc in sel),
+            seeds=tuple(spec.seed for _n, _f, spec, _sc in sel),
+            num_groups=num_groups,
+        )
+        for i, (name, _fact, spec, _sc) in enumerate(sel):
+            rel = _fleet_assemble_fn(spec, num_groups)(counts[i], sums[i])
+            out[name] = {spec: rel}
+    return out
+
+
 def clean_sample(
     strategy: Plan,
     view_name: str,
@@ -477,6 +602,7 @@ def clean_sample(
     # (the O(n log n) compaction sort costs more than the join it shrinks);
     # enable for deep multi-join/multi-agg pipelines where downstream >> sort.
     fused: Optional[bool] = None,  # None ⇒ module default (use_fused)
+    precomputed: Optional[Mapping[_FusedSpec, Relation]] = None,
 ) -> Relation:
     """Ŝ' = C(Ŝ, D, ∂D) — the up-to-date sample at ratio m (Problem 1).
 
@@ -495,7 +621,7 @@ def clean_sample(
     if extra_env:
         env.update(extra_env)
     if fused if fused is not None else _FUSED_DEFAULT:
-        plan, env = fuse_delta_groupbys(plan, env)
+        plan, env = fuse_delta_groupbys(plan, env, precomputed=precomputed)
     if compact_leaves and pin_name is None:
         plan, env = _compact_eta_leaves(plan, env, m)
     out = execute_jit(plan, env)

@@ -1,0 +1,32 @@
+"""Batched fleet moment pass: one scan snapshots every view's §5.2.2 stats.
+
+The planner cost model stacks every registered view's correspondence-
+aligned clean/stale canonical-column pair into one padded (V, R) panel
+(repro.views.panel.FleetPanel) and computes all per-view moment
+snapshots — estimated rows, weighted totals, and the AQP/CORR HT
+variances behind ``variance_comparison`` — in a single compiled call.
+Views live on the lane axis in the Pallas kernel; the XLA path compiles
+the same one-pass reference reductions off-TPU.
+"""
+
+from repro.kernels.fleet_moments.ops import fleet_moments
+from repro.kernels.fleet_moments.ref import (
+    M_HT_AQP,
+    M_HT_CORR,
+    M_N,
+    M_S1,
+    M_S2,
+    N_MOMENTS,
+    fleet_moments_ref,
+)
+
+__all__ = [
+    "M_HT_AQP",
+    "M_HT_CORR",
+    "M_N",
+    "M_S1",
+    "M_S2",
+    "N_MOMENTS",
+    "fleet_moments",
+    "fleet_moments_ref",
+]

@@ -1,0 +1,67 @@
+"""Pallas kernel: one pass over the fleet panel moments every view at once.
+
+The planner's per-epoch moment snapshot used to be a per-view Python loop
+(one ``variance_comparison`` trace per view).  Here the whole fleet lives
+in one stacked panel with views on the LANE axis and aligned rows on the
+sublane axis: each (BLOCK_R, BLOCK_V) tile reduces a row slab of BLOCK_V
+views with pure VPU elementwise math, and the five moment rows accumulate
+into the (MOM_ROWS, BLOCK_V) output block across the row-tile grid steps
+(sequential TPU grid ⇒ the revisited-block accumulation is safe, same
+discipline as kernels/multi_agg).
+
+Shapes: eight (Rp, Vp) f32 channel panels — x/valid/w/ompi per side,
+TRANSPOSED from the host's (V, R) layout — with Rp a multiple of BLOCK_R
+and Vp a multiple of BLOCK_V; out (MOM_ROWS, Vp) f32 with ref.py's moment
+rows (rows N_MOMENTS.. are zero padding).  Padding rows/lanes carry
+all-zero channels and therefore contribute zero to every reduction.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK_R = 256  # aligned rows (sublanes) per grid step
+BLOCK_V = 128  # views (lanes) per grid step
+MOM_ROWS = 8   # N_MOMENTS padded to the f32 sublane multiple
+
+
+def _fleet_moments_kernel(xn_ref, vn_ref, wn_ref, on_ref,
+                          xo_ref, vo_ref, wo_ref, oo_ref, out_ref):
+    rj = pl.program_id(1)
+
+    @pl.when(rj == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    vn, wn, on = vn_ref[...], wn_ref[...], on_ref[...]
+    t_new = wn * xn_ref[...] * vn
+    t_old = wo_ref[...] * xo_ref[...] * vo_ref[...]
+    d = t_new - t_old
+    n_hat = jnp.sum(vn * wn, axis=0)
+    s1 = jnp.sum(t_new, axis=0)
+    s2 = jnp.sum(t_new * xn_ref[...], axis=0)
+    ht_aqp = jnp.sum(on * t_new * t_new, axis=0)
+    ht_corr = jnp.sum(jnp.minimum(on, oo_ref[...]) * d * d, axis=0)
+    z = jnp.zeros_like(n_hat)
+    out_ref[...] += jnp.stack([n_hat, s1, s2, ht_aqp, ht_corr, z, z, z])
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def fleet_moments_tiles(xn, vn, wn, on, xo, vo, wo, oo,
+                        interpret: bool = True) -> jnp.ndarray:
+    """Eight (Rp, Vp) f32 panels, Rp % BLOCK_R == Vp % BLOCK_V == 0 →
+    (MOM_ROWS, Vp) f32."""
+    Rp, Vp = xn.shape
+    tile = pl.BlockSpec((BLOCK_R, BLOCK_V), lambda vi, rj: (rj, vi))
+    return pl.pallas_call(
+        _fleet_moments_kernel,
+        out_shape=jax.ShapeDtypeStruct((MOM_ROWS, Vp), jnp.float32),
+        grid=(Vp // BLOCK_V, Rp // BLOCK_R),
+        in_specs=[tile] * 8,
+        out_specs=pl.BlockSpec((MOM_ROWS, BLOCK_V), lambda vi, rj: (0, vi)),
+        interpret=interpret,
+    )(xn, vn, wn, on, xo, vo, wo, oo)

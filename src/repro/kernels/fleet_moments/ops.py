@@ -1,0 +1,66 @@
+"""jit wrapper: pad the fleet panel to tile multiples and dispatch.
+
+``fleet_moments`` is the op the planner cost model calls once per epoch:
+every view's §5.2.2 moment snapshot comes out of ONE compiled call over
+the stacked (V, R) channel panels instead of a per-view
+``variance_comparison`` trace.  A fixed fleet keeps one stable panel
+shape, so every epoch after the first hits the jit cache.
+
+Off-TPU the op compiles the reference math (the same single reduction
+pass, lowered by XLA) instead of walking the Pallas grid in interpret
+mode; tests force the Pallas path with ``use_pallas=True`` to check the
+kernel itself.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.fleet_moments.kernel import (
+    BLOCK_R,
+    BLOCK_V,
+    fleet_moments_tiles,
+)
+from repro.kernels.fleet_moments.ref import N_MOMENTS, fleet_moments_ref
+
+# CPU containers run the kernel body in interpret mode; on TPU set False.
+INTERPRET = jax.default_backend() != "tpu"
+USE_PALLAS = jax.default_backend() == "tpu"
+
+_ref_jit = jax.jit(fleet_moments_ref)
+
+
+def _pad_to(n: int, mult: int) -> int:
+    return ((n + mult - 1) // mult) * mult
+
+
+def fleet_moments(
+    x_new, valid_new, w_new, ompi_new,
+    x_old, valid_old, w_old, ompi_old,
+    use_pallas: Optional[bool] = None,
+) -> jnp.ndarray:
+    """Eight (V, R) channel panels → (V, N_MOMENTS) per-view moments.
+
+    Padding rows/views must carry all-zero channels (the fleet panel's
+    contract) so they reduce to zero on every moment.
+    """
+    args = [jnp.asarray(a, jnp.float32) for a in (
+        x_new, valid_new, w_new, ompi_new,
+        x_old, valid_old, w_old, ompi_old,
+    )]
+    V, R = args[0].shape
+    for a in args:
+        if a.shape != (V, R):
+            raise ValueError(f"ragged channel panel: {a.shape} != {(V, R)}")
+    if V == 0:
+        return jnp.zeros((0, N_MOMENTS), jnp.float32)
+    if not (use_pallas if use_pallas is not None else USE_PALLAS):
+        return _ref_jit(*args)
+    Vp = _pad_to(max(V, BLOCK_V), BLOCK_V)
+    Rp = _pad_to(max(R, BLOCK_R), BLOCK_R)
+    padded = [jnp.pad(a, ((0, Vp - V), (0, Rp - R))).T for a in args]
+    out = fleet_moments_tiles(*padded, interpret=INTERPRET)
+    return out[:N_MOMENTS, :V].T

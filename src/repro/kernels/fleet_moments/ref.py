@@ -1,0 +1,75 @@
+"""Pure-jnp oracle for the batched fleet moment pass.
+
+One scan over the stacked fleet panel — every registered view's
+correspondence-aligned clean/stale canonical-column pair, padded to a
+common row count — emits, for ALL views at once, the sufficient
+statistics the planner's moment snapshot needs:
+
+  N_HAT    Σ v_new·w_new            estimated view rows (Σ 1/π)
+  S1       Σ t_new                  weighted canonical-column total
+  S2       Σ t_new·x_new            weighted canonical-column Σx²
+  HT_AQP   Σ o_new·t_new²           §5.2.1 HT variance of SVC+AQP
+  HT_CORR  Σ min(o_new,o_old)·d²    §5.2.2 HT variance of the correction
+
+with t = w·x·valid per side and d = t_new − t_old over the outer-join row
+space (absent rows carry t = 0, the Def. 4 Ø→0 fill).  These are exactly
+the per-view numbers ``planner/costs.CostModel.snapshot`` derives from
+``variance_comparison`` one view at a time — the batched pass replaces
+that per-view Python loop with ONE compiled call (the retained loop is
+the parity reference).  The §6.3 outlier stratum rides the channels: a
+pinned row has w = 1 and ompi = 0 on its side, so it contributes fully to
+the totals and nothing to either HT variance; padding rows have every
+channel 0 and contribute nothing anywhere.
+
+kernel.py computes the same reductions tile by tile with views on the
+lane axis; this module is its parity oracle and the XLA-compiled CPU
+path.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+# moment columns of the (V, N_MOMENTS) output
+M_N = 0        # Σ 1/π over the clean sample (estimated rows)
+M_S1 = 1       # Σ w·x (weighted canonical-column total)
+M_S2 = 2       # Σ w·x² (weighted canonical-column sum of squares)
+M_HT_AQP = 3   # Σ (1−π)·t² over the clean sample
+M_HT_CORR = 4  # Σ min(1−π_new, 1−π_old)·d² over the joined row space
+N_MOMENTS = 5
+
+
+def fleet_moments_ref(
+    x_new: jnp.ndarray,
+    valid_new: jnp.ndarray,
+    w_new: jnp.ndarray,
+    ompi_new: jnp.ndarray,
+    x_old: jnp.ndarray,
+    valid_old: jnp.ndarray,
+    w_old: jnp.ndarray,
+    ompi_old: jnp.ndarray,
+) -> jnp.ndarray:
+    """Eight (V, R) f32 channel panels → (V, N_MOMENTS) f32, no view loop.
+
+    Channels are row-aligned per view (the correspondence join's row
+    space); rows beyond a view's joined length must be zero in EVERY
+    channel.
+    """
+    xn = jnp.asarray(x_new, jnp.float32)
+    vn = jnp.asarray(valid_new, jnp.float32)
+    wn = jnp.asarray(w_new, jnp.float32)
+    on = jnp.asarray(ompi_new, jnp.float32)
+    xo = jnp.asarray(x_old, jnp.float32)
+    vo = jnp.asarray(valid_old, jnp.float32)
+    wo = jnp.asarray(w_old, jnp.float32)
+    oo = jnp.asarray(ompi_old, jnp.float32)
+
+    t_new = wn * xn * vn
+    t_old = wo * xo * vo
+    d = t_new - t_old
+    n_hat = jnp.sum(vn * wn, axis=1)
+    s1 = jnp.sum(t_new, axis=1)
+    s2 = jnp.sum(t_new * xn, axis=1)
+    ht_aqp = jnp.sum(on * t_new * t_new, axis=1)
+    ht_corr = jnp.sum(jnp.minimum(on, oo) * d * d, axis=1)
+    return jnp.stack([n_hat, s1, s2, ht_aqp, ht_corr], axis=1)

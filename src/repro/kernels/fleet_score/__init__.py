@@ -27,8 +27,14 @@ from repro.kernels.fleet_score.ref import (
     F_MEAN,
     F_N,
     F_TRAFFIC,
+    M_MAX,
+    M_MIN,
+    M_REL_HI,
+    M_REL_LO,
+    M_STEP,
     N_FEATURES,
     N_SCORES,
+    REC_M,
     fleet_score_ref,
 )
 
@@ -49,8 +55,14 @@ __all__ = [
     "F_MEAN",
     "F_N",
     "F_TRAFFIC",
+    "M_MAX",
+    "M_MIN",
+    "M_REL_HI",
+    "M_REL_LO",
+    "M_STEP",
     "N_FEATURES",
     "N_SCORES",
+    "REC_M",
     "fleet_score_ref",
     "fleet_scores",
 ]

@@ -4,9 +4,9 @@ The feature matrix arrives TRANSPOSED — features on the sublane axis
 (padded to the f32 sublane multiple), views on the lane axis — so one
 (FEAT_ROWS, BLOCK_V) VMEM tile scores BLOCK_V views with pure VPU
 elementwise math: each feature is a 1-row static slice broadcast across
-the lane axis, and the four decision rows (skip/clean/maintain scores +
-the §5.2.2 CORR_WINS flip) stack into the (OUT_ROWS, BLOCK_V) output
-block.  Per-lane independence means no accumulation across grid steps —
+the lane axis, and the five decision rows (skip/clean/maintain scores,
+the §5.2.2 CORR_WINS flip, and the REC_M sampling-ratio recommendation)
+stack into the (OUT_ROWS, BLOCK_V) output block.  Per-lane independence means no accumulation across grid steps —
 each lane tile writes its own output block exactly once.
 
 Shapes: feats (FEAT_ROWS, Vp) f32 with Vp a multiple of BLOCK_V; out
@@ -33,8 +33,15 @@ from repro.kernels.fleet_score.ref import (
     F_HT_CORR,
     F_M,
     F_MEAN,
+    F_N,
     F_TRAFFIC,
     M_EPS,
+    M_MAX,
+    M_MIN,
+    M_REL_HI,
+    M_REL_LO,
+    M_STEP,
+    TOTAL_EPS,
 )
 
 BLOCK_V = 512   # views (lanes) per grid step
@@ -45,6 +52,7 @@ OUT_ROWS = 8    # N_SCORES padded to the f32 sublane multiple
 def _fleet_score_kernel(f_ref, out_ref):
     f = f_ref[...]
     row = lambda k: f[k:k + 1, :]
+    n = row(F_N)
     ex2, mean = row(F_EX2), row(F_MEAN)
     ht_aqp, ht_corr = row(F_HT_AQP), row(F_HT_CORR)
     d_clean, d_ivm = row(F_DRIFT_CLEAN), row(F_DRIFT_IVM)
@@ -61,9 +69,19 @@ def _fleet_score_kernel(f_ref, out_ref):
     score_clean = traffic * gain_clean / jnp.maximum(cost_c, COST_EPS)
     score_maintain = traffic * e_skip / jnp.maximum(cost_m, COST_EPS)
     corr_wins = (ht_corr <= ht_aqp).astype(jnp.float32)
+    rel_se = jnp.sqrt(jnp.maximum(ht_aqp, 0.0)) / jnp.maximum(
+        jnp.abs(n * mean), TOTAL_EPS
+    )
+    up = jnp.maximum(jnp.minimum(m * M_STEP, M_MAX), m)
+    down = jnp.minimum(jnp.maximum(m / M_STEP, M_MIN), m)
+    rec_m = jnp.where(
+        rel_se > M_REL_HI, up,
+        jnp.where((rel_se < M_REL_LO) & (ht_aqp > 0.0), down, m),
+    )
+    rec_m = jnp.where(m > 0.0, rec_m, 0.0)
     zero = jnp.zeros_like(score_clean)
     out_ref[...] = jnp.concatenate(
-        [zero, score_clean, score_maintain, corr_wins, zero, zero, zero, zero],
+        [zero, score_clean, score_maintain, corr_wins, rec_m, zero, zero, zero],
         axis=0,
     )
 

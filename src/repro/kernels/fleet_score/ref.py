@@ -50,15 +50,29 @@ A_SKIP = 0
 A_CLEAN = 1
 A_MAINTAIN = 2
 CORR_WINS = 3
-N_SCORES = 4
+REC_M = 4  # recommended sampling ratio (clamped step from the current m)
+N_SCORES = 5
 
 COST_EPS = 1e-6  # floor for the cost divisors (degenerate EWMA seeds)
 M_EPS = 1e-6     # floor for the sampling-rate divisor
+
+# m-adaptation band: the canonical total's relative standard error under
+# the current window's best estimator.  Outside [M_REL_LO, M_REL_HI] the
+# recommendation steps the ratio by ×M_STEP (too noisy) or ÷M_STEP (over-
+# sampled), clamped to [M_MIN, M_MAX] — one bounded step per epoch, never
+# a jump, so a mis-estimated window cannot blow the sample arena.
+M_REL_LO = 0.005
+M_REL_HI = 0.02
+M_STEP = 2.0
+M_MIN = 1.0 / 256.0
+M_MAX = 1.0
+TOTAL_EPS = 1e-9  # floor for the |total| divisor (empty/zero-sum views)
 
 
 def fleet_score_ref(feats: jnp.ndarray) -> jnp.ndarray:
     """(V, N_FEATURES) f32 → (V, N_SCORES) f32, no per-view loop."""
     feats = jnp.asarray(feats, jnp.float32)
+    n = feats[:, F_N]
     ex2 = feats[:, F_EX2]
     mean = feats[:, F_MEAN]
     ht_aqp = feats[:, F_HT_AQP]
@@ -79,7 +93,32 @@ def fleet_score_ref(feats: jnp.ndarray) -> jnp.ndarray:
     score_clean = traffic * gain_clean / jnp.maximum(cost_c, COST_EPS)
     score_maintain = traffic * e_skip / jnp.maximum(cost_m, COST_EPS)
     corr_wins = (ht_corr <= ht_aqp).astype(jnp.float32)
+    # recommended m: step the ratio when the canonical total's relative
+    # standard error leaves the target band (0 for zero-m padding lanes).
+    # The band is judged on the AQP HT variance — the sample's intrinsic
+    # §5.2.1 resolution, monotone in m — not on e_now, which is 0 right
+    # after any sync (clean ≡ stale ⇒ zero-variance correction) and would
+    # shrink every freshly-maintained view.
+    rel_se = jnp.sqrt(jnp.maximum(ht_aqp, 0.0)) / jnp.maximum(
+        jnp.abs(n * mean), TOTAL_EPS
+    )
+    # zero sampling variance (empty view, all-outlier stratum, m = 1) is
+    # the absence of a signal, not evidence of over-sampling: hold, never
+    # step down — otherwise an m = 1 view (ht_aqp ≡ 0) with a noisy total
+    # would oscillate 1.0 ⇄ 0.5 forever, paying a sample re-derivation
+    # per flip.  Bounds clamp only the STEPPED value and never push past
+    # the current ratio (a view whose m sits outside [M_MIN, M_MAX] must
+    # hold or move toward the band, not be yanked to a bound), and an
+    # in-band view recommends exactly m — no spurious retune.
+    up = jnp.maximum(jnp.minimum(m * M_STEP, M_MAX), m)
+    down = jnp.minimum(jnp.maximum(m / M_STEP, M_MIN), m)
+    rec_m = jnp.where(
+        rel_se > M_REL_HI, up,
+        jnp.where((rel_se < M_REL_LO) & (ht_aqp > 0.0), down, m),
+    )
+    rec_m = jnp.where(m > 0.0, rec_m, 0.0)
     return jnp.stack(
-        [jnp.zeros_like(score_clean), score_clean, score_maintain, corr_wins],
+        [jnp.zeros_like(score_clean), score_clean, score_maintain, corr_wins,
+         rec_m],
         axis=1,
     )

@@ -34,6 +34,54 @@ def _fused_ref_path(gid, vals, valid, pin_mask, m, seed, num_groups):
     return fused_clean_ref(gid, vals, valid, m, seed, num_groups, pin_mask=pin_mask)
 
 
+@functools.partial(jax.jit, static_argnames=("num_groups",))
+def _fleet_path(gid, vals, valid, thresh, seed_mixes, num_groups):
+    from repro.core.hashing import splitmix32
+
+    V = gid.shape[0]
+    h = splitmix32(seed_mixes[:, None] ^ splitmix32(gid.astype(jnp.uint32)))
+    u = h.astype(jnp.float32) * jnp.float32(1.0 / 4294967296.0)
+    keep = (u < thresh[:, None]) & valid
+    g = jnp.where(keep, gid, num_groups)  # per-view overflow slot
+    nseg = num_groups + 1
+    gg = (g + nseg * jnp.arange(V, dtype=jnp.int32)[:, None]).reshape(-1)
+    counts = jax.ops.segment_sum(
+        keep.astype(jnp.float32).reshape(-1), gg, num_segments=V * nseg
+    ).reshape(V, nseg)[:, :num_groups]
+    sums = jax.ops.segment_sum(
+        jnp.where(keep[:, :, None], vals, 0.0).reshape(V * gid.shape[1], -1),
+        gg, num_segments=V * nseg,
+    ).reshape(V, nseg, -1)[:, :num_groups, :]
+    return counts, sums
+
+
+def fused_clean_groupby_fleet(
+    gid: jnp.ndarray,
+    vals: jnp.ndarray,
+    valid: jnp.ndarray,
+    ms: Tuple[float, ...],
+    seeds: Tuple[int, ...],
+    num_groups: int,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """One dispatch cleans a whole fleet's delta aggregations (pin-free).
+
+    gid (V, R) int32 per-view group keys; vals (V, R, C) f32 value columns;
+    valid (V, R) bool; ``ms``/``seeds`` the per-view sampling ratios and η
+    seeds (the per-view seed folds exactly as in ``hash_threshold_ref``, so
+    each view's slice is identical to its own ``fused_clean_groupby`` call).
+    Returns (counts (V, G), sums (V, G, C)).  One batched segment pass —
+    the offset-segment trick keeps V views in a single accumulator — lowers
+    through XLA on every backend; the per-view Pallas kernel remains the
+    single-view fast path.
+    """
+    thresh = jnp.asarray([float(m) for m in ms], jnp.float32)
+    mixes = jnp.asarray([_seed_mix(int(s)) for s in seeds], jnp.uint32)
+    return _fleet_path(
+        jnp.asarray(gid, jnp.int32), jnp.asarray(vals, jnp.float32),
+        jnp.asarray(valid, bool), thresh, mixes, int(num_groups),
+    )
+
+
 def fused_clean_groupby(
     gid: jnp.ndarray,
     vals: jnp.ndarray,

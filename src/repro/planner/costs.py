@@ -22,6 +22,12 @@ the inputs fresh at counter-read cost:
 
 ``features()`` stacks everything into the (V, N_FEATURES) panel the
 compiled fleet scorer (kernels/fleet_score) consumes in one jitted call.
+The moment columns come, by default, from ONE batched
+``kernels/fleet_moments`` pass over the ViewManager's fleet panel
+(``ViewManager.fleet_panel()``) — per-view laziness survives (only moved
+views rebuild their panel slot) but the per-view ``variance_comparison``
+trace is gone.  ``CostModel(use_panel=False)`` keeps the per-view
+``snapshot()`` loop as the parity reference path.
 """
 
 from __future__ import annotations
@@ -33,7 +39,15 @@ from typing import Callable, Dict, Optional, Sequence
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.estimators import OUTLIER_COL, Query, _weights, variance_comparison
+from repro.core.estimators import _weights, variance_comparison
+from repro.kernels.fleet_moments import (
+    M_HT_AQP,
+    M_HT_CORR,
+    M_N,
+    M_S1,
+    M_S2,
+)
+from repro.views.panel import canonical_query
 from repro.kernels.fleet_score import (
     F_AGE,
     F_COST_CLEAN,
@@ -57,16 +71,9 @@ DEFAULT_MAINTAIN_S = 0.25
 MAINTAIN_OVER_REFRESH_SEED = 4.0
 
 
-def canonical_query(mv) -> Query:
-    """The view's planner probe: sum over its first value column.
-
-    Deterministic: the first non-key, non-flag column of the clean-sample
-    schema (count() when the view carries no value columns at all)."""
-    pk = set(mv.clean_sample.schema.pk)
-    for c in mv.clean_sample.schema.columns:
-        if c not in pk and c != OUTLIER_COL:
-            return Query(agg="sum", col=c)
-    return Query(agg="count")
+# canonical_query moved to repro.views.panel (the fleet panel derives its
+# slot columns from it); re-exported here for the public planner API.
+__all__ = ["CostModel", "ViewCostStats", "canonical_query"]
 
 
 @dataclasses.dataclass
@@ -95,6 +102,7 @@ class CostModel:
         alpha: float = 0.3,
         default_refresh_s: float = DEFAULT_REFRESH_S,
         default_maintain_s: float = DEFAULT_MAINTAIN_S,
+        use_panel: bool = True,
     ):
         self.vm = vm
         self._clock = clock
@@ -102,6 +110,9 @@ class CostModel:
         self.default_refresh_s = float(default_refresh_s)
         self.default_maintain_s = float(default_maintain_s)
         self.frozen = False  # pin_costs: ignore observed wall times
+        # False keeps the per-view variance_comparison snapshot loop (the
+        # batched fleet panel's parity reference)
+        self.use_panel = bool(use_panel)
         self.stats: Dict[str, ViewCostStats] = {}
 
     def attach(self) -> "CostModel":
@@ -195,14 +206,35 @@ class CostModel:
     def age_s(self, name: str) -> float:
         return self._clock() - self._stat(name).last_maintain_t
 
-    def features(self, names: Optional[Sequence[str]] = None) -> np.ndarray:
+    def features(self, names: Optional[Sequence[str]] = None,
+                 use_pallas: Optional[bool] = None) -> np.ndarray:
         """(V, N_FEATURES) f32 panel for kernels/fleet_score, view order =
-        ``names`` (default: ViewManager registration order)."""
+        ``names`` (default: ViewManager registration order).
+
+        The moment columns come from ONE batched kernels/fleet_moments
+        pass over the ViewManager's fleet panel (only views whose samples
+        moved rebuild their slot); ``use_panel=False`` falls back to the
+        per-view ``snapshot()`` loop, the retained parity reference."""
         names = list(names) if names is not None else list(self.vm.views)
         now = self._clock()
         out = np.zeros((len(names), N_FEATURES), np.float32)
+        if self.use_panel and names:
+            mom = self.vm.fleet_panel().moments(names, use_pallas=use_pallas)
+            for i, name in enumerate(names):
+                st = self._stat(name)
+                mv = self.vm.views[name]
+                n_hat = float(mom[i, M_N])
+                st.n_rows = n_hat
+                st.mean = float(mom[i, M_S1]) / max(n_hat, 1.0)
+                st.ex2 = float(mom[i, M_S2]) / max(n_hat, 1.0)
+                st.ht_aqp = float(mom[i, M_HT_AQP])
+                st.ht_corr = float(mom[i, M_HT_CORR])
+                st.snapshot_version = mv.sample_version
+        else:
+            for name in names:
+                self.snapshot(name)
         for i, name in enumerate(names):
-            st = self.snapshot(name)
+            st = self.stats[name]
             mv = self.vm.views[name]
             out[i, F_N] = st.n_rows
             out[i, F_EX2] = st.ex2

@@ -51,8 +51,14 @@ class PlanReport:
     actions: List[PlannedAction]
     skipped: List[str]  # views left to serve stale this epoch
     corr_wins: Dict[str, bool]  # §5.2.2 estimator flip per view
+    recommended_m: Dict[str, float] = dataclasses.field(default_factory=dict)
     predicted_spend_s: float = 0.0
     actual_spend_s: float = 0.0
+    # where the epoch's wall time went: the fleet snapshot + scoring pass,
+    # the knapsack, and the executed actions (regression observability)
+    snapshot_s: float = 0.0
+    schedule_s: float = 0.0
+    act_s: float = 0.0
 
     def to_dict(self) -> Dict:
         return {
@@ -60,9 +66,13 @@ class PlanReport:
             "budget_s": self.budget_s,
             "predicted_spend_s": self.predicted_spend_s,
             "actual_spend_s": self.actual_spend_s,
+            "snapshot_s": self.snapshot_s,
+            "schedule_s": self.schedule_s,
+            "act_s": self.act_s,
             "actions": [a.to_dict() for a in self.actions],
             "skipped": list(self.skipped),
             "corr_wins": dict(self.corr_wins),
+            "recommended_m": dict(self.recommended_m),
         }
 
 
@@ -78,6 +88,7 @@ class MaintenancePlanner:
         cost_model: Optional[CostModel] = None,
         traffic_decay: float = 0.5,
         use_pallas: Optional[bool] = None,
+        adapt_m: bool = False,
     ):
         self.vm = vm
         self.budget_s = float(budget_s)
@@ -85,6 +96,11 @@ class MaintenancePlanner:
         self.traffic_decay = float(traffic_decay)
         self.use_pallas = use_pallas
         self.cost_model = (cost_model or CostModel(vm, clock=clock)).attach()
+        # opt-in m adaptation: plan() writes the scorer's REC_M onto each
+        # ManagedView and svc_refresh applies it (ViewManager.adaptive_m)
+        self.adapt_m = bool(adapt_m)
+        if self.adapt_m:
+            vm.adaptive_m = True
         self.epoch = 0
         self.last_report: Optional[PlanReport] = None
 
@@ -92,9 +108,13 @@ class MaintenancePlanner:
     def plan(self, budget_s: Optional[float] = None) -> PlanReport:
         """Score the fleet and pick this epoch's actions (no execution)."""
         budget = self.budget_s if budget_s is None else float(budget_s)
+        t0 = time.perf_counter()
         fs: FleetScores = score_fleet(
             self.cost_model, use_pallas=self.use_pallas
         )
+        snapshot_s = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        rec_m = fs.recommended_m()
         chosen: Dict[str, PlannedAction] = {}
         remaining = budget
 
@@ -136,7 +156,10 @@ class MaintenancePlanner:
             actions=actions,
             skipped=[n for n in fs.names if n not in chosen],
             corr_wins=fs.corr_wins(),
+            recommended_m=rec_m,
             predicted_spend_s=sum(a.predicted_s for a in actions),
+            snapshot_s=snapshot_s,
+            schedule_s=time.perf_counter() - t0,
         )
 
     # -- the control-plane epoch ---------------------------------------------
@@ -151,11 +174,26 @@ class MaintenancePlanner:
         report = self.plan(budget_s=budget_s)
         if not execute:
             return report
+        if self.adapt_m:
+            # applying a recommendation is an executing effect: only a real
+            # epoch arms the views' ratios (plan() stays a pure preview)
+            for name, rm in report.recommended_m.items():
+                if rm > 0.0:
+                    self.vm.views[name].recommended_m = rm
+        t0 = time.perf_counter()
+        cleans = [a for a in report.actions if a.action != "maintain"]
         for act in report.actions:
             if act.action == "maintain":
                 act.actual_s = self.vm.maintain(act.view)
-            else:
-                act.actual_s = self.vm.svc_refresh(act.view, fused=fused)
+        if cleans:
+            # the epoch's scheduled cleans go through the fleet refresh
+            # path: delta aggregations sharing a plan shape run as ONE
+            # batched fused dispatch instead of len(cleans) sequential ones
+            dts = self.vm.svc_refresh_many([a.view for a in cleans],
+                                           fused=fused)
+            for act in cleans:
+                act.actual_s = dts[act.view]
+        report.act_s = time.perf_counter() - t0
         report.actual_spend_s = sum(a.actual_s for a in report.actions)
         self.cost_model.decay_traffic(self.traffic_decay)
         self.epoch += 1

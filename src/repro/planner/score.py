@@ -19,6 +19,7 @@ from repro.kernels.fleet_score import (
     A_MAINTAIN,
     A_SKIP,
     CORR_WINS,
+    REC_M,
     fleet_scores,
 )
 from repro.planner.costs import CostModel
@@ -42,6 +43,13 @@ class FleetScores:
         return {n: bool(self.scores[i, CORR_WINS] > 0.5)
                 for i, n in enumerate(self.names)}
 
+    def recommended_m(self) -> Dict[str, float]:
+        """Per-view sampling-ratio recommendation (REC_M): one clamped step
+        up/down from the current ratio when the canonical total's relative
+        standard error leaves the scorer's target band."""
+        return {n: float(self.scores[i, REC_M])
+                for i, n in enumerate(self.names)}
+
 
 def score_fleet(
     cost_model: CostModel,
@@ -50,6 +58,6 @@ def score_fleet(
 ) -> FleetScores:
     """Gather features and price the whole fleet in one compiled pass."""
     names = list(names) if names is not None else list(cost_model.vm.views)
-    feats = cost_model.features(names)
+    feats = cost_model.features(names, use_pallas=use_pallas)
     scores = np.asarray(fleet_scores(feats, use_pallas=use_pallas))
     return FleetScores(names=names, features=feats, scores=scores)

@@ -157,9 +157,15 @@ class StreamingViewService:
         if planner is not None:
             total = planner.step(fused=self.config.fused).actual_spend_s
         else:
-            for name, mv in self.vm.views.items():
-                if touched & set(mv.delta_bases):
-                    total += self.vm.svc_refresh(name, fused=self.config.fused)
+            # clean-all epoch: every affected sample refreshes through the
+            # fleet path, so delta aggregations sharing a plan shape run as
+            # ONE batched fused dispatch instead of V sequential calls
+            affected = [name for name, mv in self.vm.views.items()
+                        if touched & set(mv.delta_bases)]
+            if affected:
+                total = sum(self.vm.svc_refresh_many(
+                    affected, fused=self.config.fused
+                ).values())
         self._last_refresh = self._clock()
         self.refresh_count += 1
         return total

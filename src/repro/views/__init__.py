@@ -1,3 +1,4 @@
 from repro.views.manager import ManagedView, ViewManager
+from repro.views.panel import FleetPanel, canonical_query
 
-__all__ = ["ManagedView", "ViewManager"]
+__all__ = ["FleetPanel", "ManagedView", "ViewManager", "canonical_query"]

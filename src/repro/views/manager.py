@@ -84,8 +84,13 @@ class ManagedView:
     # delta micro-batches offered to the outlier index but not yet merged;
     # flushed as ONE update_outlier_index call per refresh window
     outlier_offers: List[Relation] = dataclasses.field(default_factory=list)
-    # bumped whenever either sample moves (planner moment-snapshot staleness)
+    # bumped whenever either sample moves (planner moment-snapshot and
+    # fleet-panel slot staleness)
     sample_version: int = 0
+    # planner-recommended sampling ratio (fleet scorer REC_M); applied by
+    # svc_refresh only when ViewManager.adaptive_m is opted in
+    recommended_m: Optional[float] = None
+    delta_group_capacity: int = 1024  # registration-time arena bound
 
 
 class ViewManager:
@@ -102,6 +107,10 @@ class ViewManager:
         self._base_applied_rows: Dict[str, int] = {}  # rows folded into base
         self.stream = None  # StreamingViewService once configure_streaming ran
         self.cost_model = None  # planner/costs.CostModel once attached
+        self._panel = None  # FleetPanel once fleet_panel() ran
+        # opt-in: svc_refresh honors planner-recommended sampling ratios
+        # (MaintenancePlanner(adapt_m=True) turns this on)
+        self.adaptive_m = False
 
     @property
     def pending(self) -> DeltaSet:
@@ -163,9 +172,28 @@ class ViewManager:
             # already folded into the base are part of ``materialized``
             applied_rows={b: self._base_applied_rows.get(b, 0) for b in delta_bases},
             cleaned_rows={b: self._base_applied_rows.get(b, 0) for b in delta_bases},
+            delta_group_capacity=delta_group_capacity,
         )
         self.views[view.name] = mv
         return mv
+
+    # -- the fleet panel ------------------------------------------------------
+    def fleet_panel(self):
+        """The stacked (V, R) clean/stale sample panel of the whole fleet
+        (repro.views.panel.FleetPanel), created lazily.  Slots are
+        incrementally invalidated per view by ``svc_refresh``/``maintain``
+        (via ``_bump_sample_version``); accessing the panel rebuilds only
+        the views whose samples moved."""
+        if self._panel is None:
+            from repro.views.panel import FleetPanel
+
+            self._panel = FleetPanel(self)
+        return self._panel
+
+    def _bump_sample_version(self, mv: ManagedView) -> None:
+        mv.sample_version += 1
+        if self._panel is not None:
+            self._panel.invalidate(mv.view.name)
 
     def register_outlier_index(self, view_name: str, base: str, attr: str, k: int) -> None:
         """§6: index top-k of base[attr]; push keys up into the view pin set."""
@@ -190,7 +218,7 @@ class ViewManager:
         )
         mv.clean_sample = mv.stale_sample
         mv.corr_cache = None
-        mv.sample_version += 1
+        self._bump_sample_version(mv)
 
     # -- delta ingestion -----------------------------------------------------
     def ingest(self, base: str, inserts: Optional[Relation] = None,
@@ -304,14 +332,23 @@ class ViewManager:
         mv.outlier_index = update_outlier_index(mv.outlier_index, delta)
 
     # -- SVC: clean the samples only (cheap, between maintenance periods) ----
-    def svc_refresh(self, view_name: str, fused: Optional[bool] = None) -> float:
+    def svc_refresh(self, view_name: str, fused: Optional[bool] = None,
+                    _precomputed=None, _extra_s: float = 0.0) -> float:
         """Clean the view's sample from the pending deltas (Problem 1).
 
         ``fused`` routes the delta aggregation through the single-pass
         kernels/fused_clean op (None = module default; it falls back to the
-        plan executor when the plan shape does not qualify)."""
+        plan executor when the plan shape does not qualify).  With the
+        opt-in ``adaptive_m`` flag, a planner-recommended sampling ratio
+        (``ManagedView.recommended_m``) is applied first.  ``_precomputed``/
+        ``_extra_s`` are the ``svc_refresh_many`` internals: already-batched
+        fused delta aggregations and this view's share of the batched
+        dispatch wall time."""
         mv = self.views[view_name]
-        t0 = time.perf_counter()
+        t0 = time.perf_counter()  # a retune below is part of the clean's cost
+        if (self.adaptive_m and mv.recommended_m is not None
+                and abs(mv.recommended_m - mv.m) > 1e-9):
+            self._retune_sample_ratio(mv, mv.recommended_m)
         if mv.outlier_index is not None:
             self._flush_outlier_offers(mv)
             self._refresh_pin_keys_only(mv)
@@ -332,20 +369,119 @@ class ViewManager:
             out_capacity=mv.sample_capacity,
             pin_name=pin_name,
             fused=fused,
+            precomputed=_precomputed,
         )
         mv.clean_sample = flag_outliers(mv.clean_sample, mv.outlier_pin)
         mv.stale_sample = flag_outliers(mv.stale_sample, mv.outlier_pin)
         mv.corr_cache = None  # samples moved: new correspondence window
         jnp.asarray(mv.clean_sample.valid).block_until_ready()
-        dt = time.perf_counter() - t0
+        dt = time.perf_counter() - t0 + float(_extra_s)
         mv.maintenance_s = dt
         mv.refresh_s = dt
-        mv.sample_version += 1
+        self._bump_sample_version(mv)
         for b in mv.delta_bases:  # the clean sample now reflects all deltas
             mv.cleaned_rows[b] = self.ingested_rows.get(b, 0)
         if self.cost_model is not None:
             self.cost_model.observe_refresh(view_name, dt)
         return dt
+
+    def _retune_sample_ratio(self, mv: ManagedView, new_m: float) -> None:
+        """Planner-driven m adaptation (opt-in via ``adaptive_m``): re-derive
+        the sample pair from the materialized view at the new ratio.
+
+        The stale sample's invariant — Ŝ = η(S) for the CURRENT materialized
+        view — is preserved (η is re-applied to ``materialized``, not to the
+        old sample, so stepping m UP recovers rows the old sample dropped);
+        the following clean folds every pending delta beyond the view's
+        segment cursor into the new sample.  Sample arenas and the m-scaled
+        group capacities are re-bucketed for the new ratio — the sample
+        arena SCALES from its current size (preserving any explicit
+        ``sample_capacity`` override's slack policy, never shrinking below
+        the registration-time default formula)."""
+        new_m = float(new_m)
+        old_m = mv.m
+        mv.m = new_m
+        mv.sample_capacity = _next_pow2(max(
+            64,
+            int(mv.sample_capacity * (new_m / old_m)),
+            int(mv.materialized.capacity * new_m * 4),
+        ))
+        mv.sampled_strategy = _replace_groupby_capacity(
+            mv.strategy,
+            _next_pow2(max(64, int(mv.delta_group_capacity * new_m * 4))),
+        )
+        mv.stale_sample = compact(
+            hashing.apply_hash(
+                mv.materialized, mv.view.pk, new_m, mv.seed, pin=mv.outlier_pin
+            ),
+            mv.sample_capacity,
+        )
+        mv.clean_sample = mv.stale_sample
+        mv.corr_cache = None
+        mv.recommended_m = None
+        self._bump_sample_version(mv)
+
+    def svc_refresh_many(self, names: Sequence[str],
+                         fused: Optional[bool] = None) -> Dict[str, float]:
+        """Refresh several views' samples as one epoch-level dispatch.
+
+        The expensive stage of each qualifying clean — the η-filtered
+        delta group-by — is batched across every view that shares the
+        canonical fused plan shape (same delta arena capacity and value-
+        column count) into ONE compiled kernels/fused_clean fleet pass
+        with per-view seeds/ratios, instead of V sequential dispatches;
+        each view then runs only its small merge remainder (one compiled
+        shape shared by the group).  Views that do not qualify (outlier
+        pins, non-canonical plans, unbounded key domains, ``fused=False``)
+        fall back to plain per-view ``svc_refresh``.  Returns per-view
+        wall seconds (each member carries its share of the batched
+        dispatch)."""
+        from repro.core.maintenance import (
+            _FUSED_DEFAULT,
+            cleaning_plan,
+            collect_fused_specs,
+            delta_env,
+            fleet_eval_fused_groupbys,
+        )
+
+        names = list(names)
+        out: Dict[str, float] = {}
+        do_fused = _FUSED_DEFAULT if fused is None else bool(fused)
+        candidates = []
+        retune_s: Dict[str, float] = {}
+        if do_fused and len(names) > 1:
+            for name in names:
+                mv = self.views[name]
+                if mv.outlier_index is not None or mv.outlier_pin is not None:
+                    continue
+                if (self.adaptive_m and mv.recommended_m is not None
+                        and abs(mv.recommended_m - mv.m) > 1e-9):
+                    tr = time.perf_counter()  # charge the retune to this view
+                    self._retune_sample_ratio(mv, mv.recommended_m)
+                    retune_s[name] = time.perf_counter() - tr
+                plan = cleaning_plan(
+                    mv.sampled_strategy, mv.view.pk, mv.m, mv.seed
+                )
+                env = delta_env(mv.view.name, mv.stale_sample, self._deltas_for(mv))
+                env.update(self.base)
+                specs = collect_fused_specs(plan, env)
+                if len(specs) == 1 and specs[0].dim_name is None \
+                        and specs[0].pin_name is None:
+                    candidates.append((name, env, specs[0]))
+        t0 = time.perf_counter()
+        precomputed = fleet_eval_fused_groupbys(candidates) if candidates else {}
+        share = (
+            (time.perf_counter() - t0) / max(len(precomputed), 1)
+            if precomputed else 0.0
+        )
+        for name in names:
+            extra = share if name in precomputed else 0.0
+            out[name] = self.svc_refresh(
+                name, fused=fused,
+                _precomputed=precomputed.get(name),
+                _extra_s=extra + retune_s.get(name, 0.0),
+            )
+        return out
 
     def _refresh_pin_keys_only(self, mv: ManagedView) -> None:
         idx = mv.outlier_index
@@ -402,7 +538,7 @@ class ViewManager:
         mv.stale_since_ivm = False
         mv.maintenance_s = dt
         mv.ivm_s = dt
-        mv.sample_version += 1
+        self._bump_sample_version(mv)
         mv.applied_seg = hi
         for b in mv.delta_bases:
             mv.applied_rows[b] = self.ingested_rows.get(b, 0)
@@ -466,6 +602,7 @@ class ViewManager:
         confidence: float = 0.95,
         prefer: Optional[str] = None,  # "corr" | "aqp" | None (auto, §5.2.2)
         rng=None,
+        record_traffic: bool = True,
     ) -> Estimate:
         """Estimate one query — a batch-of-1 through the compiled engine.
 
@@ -474,7 +611,8 @@ class ViewManager:
         correspondence cache; everything else (median/percentile/min/max,
         exotic predicates) falls back to the per-query estimators."""
         return self.query_batch(
-            view_name, [q], confidence=confidence, prefer=prefer, rng=rng
+            view_name, [q], confidence=confidence, prefer=prefer, rng=rng,
+            record_traffic=record_traffic,
         )[0]
 
     def query_batch(
@@ -485,6 +623,7 @@ class ViewManager:
         prefer: Optional[str] = None,
         rng=None,
         fused: Optional[bool] = None,
+        record_traffic: bool = True,
     ) -> List[Estimate]:
         """Answer N queries in one fused pass (multi-query optimization).
 
@@ -493,8 +632,12 @@ class ViewManager:
         resolves to SVC+CORR) one batched exact scan of the materialized
         view.  Non-encodable queries fall back per query; result order
         matches ``queries``.  ``fused=False`` keeps the batch machinery but
-        computes moments query-by-query (benchmark A/B)."""
-        if self.cost_model is not None:  # planner traffic counter
+        computes moments query-by-query (benchmark A/B).
+
+        ``record_traffic=False`` answers without feeding the planner's
+        per-view traffic counter (evaluation/ground-truth probes must not
+        masquerade as user demand)."""
+        if self.cost_model is not None and record_traffic:
             self.cost_model.observe_traffic(view_name, len(queries))
         mv = self.views[view_name]
         results: List[Optional[Estimate]] = [None] * len(queries)

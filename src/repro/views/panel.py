@@ -1,0 +1,205 @@
+"""FleetPanel: the stacked, padded clean/stale sample panel of a fleet.
+
+The planner's moment snapshot (planner/costs) and any future multi-tenant
+execution layer want the SAME device-side view of the fleet: every
+registered view's correspondence-aligned clean/stale sample pair for its
+canonical planner query, stacked along a leading view axis and padded to
+one common row count so a single compiled pass (kernels/fleet_moments)
+can reduce all of them at once.  ``ViewManager`` owns one ``FleetPanel``
+(``ViewManager.fleet_panel()``) and the panel is **incrementally
+invalidated per view**: every slot records the ``ManagedView.sample_version``
+it was built from (``svc_refresh`` / ``maintain`` / pin re-derivation bump
+it), and only moved views rebuild on the next access.
+
+Padding contract: each view's slot holds eight row-aligned f32 channels —
+x/valid/weight/1−π per side over the Def. 4 outer-join row space — padded
+with zeros to ``pad_rows`` (a power-of-two bucket of the fleet's largest
+joined capacity, so steady fleets keep ONE stable (V, R) shape and the
+moment kernel never retraces).  All-zero padding rows reduce to zero in
+every moment; §6.3 outlier-pinned rows carry w = 1 / ompi = 0 exactly as
+in the query engine's correspondence cache.
+
+Slot construction reuses ``ManagedView.corr_cache`` when the query engine
+already materialized the window's alignment (a dashboard that queried the
+view this window makes its snapshot free); otherwise a jitted single-
+column join builds just the canonical channels — one compiled shape per
+capacity bucket, shared across the whole fleet.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.estimators import OUTLIER_COL, Query
+from repro.query.engine import _gather_side, _rows_only
+from repro.relational import ops
+from repro.relational.relation import Relation, next_pow2
+
+N_CHANNELS = 8  # x/valid/w/ompi per side
+
+
+def canonical_query(mv) -> Query:
+    """The view's planner probe: sum over its first value column.
+
+    Deterministic: the first non-key, non-flag column of the clean-sample
+    schema (count() when the view carries no value columns at all)."""
+    pk = set(mv.clean_sample.schema.pk)
+    for c in mv.clean_sample.schema.columns:
+        if c not in pk and c != OUTLIER_COL:
+            return Query(agg="sum", col=c)
+    return Query(agg="count")
+
+
+def _gather_channels(rel: Relation, idx: jnp.ndarray, present: jnp.ndarray,
+                     col: Optional[str], m: float):
+    """(x, valid, w, ompi) single-column channels on the joined row space.
+
+    Delegates to the query engine's ``_gather_side`` so the Def. 4 channel
+    semantics (presence masking, §6.3 pin → w = 1 / ompi = 0) have exactly
+    one implementation; a count() probe gathers a throwaway pk column and
+    substitutes the presence mask as the trans value (1 on sampled rows)."""
+    cols = (col,) if col is not None else rel.schema.pk[:1]
+    x, v, w, ompi = _gather_side(rel, idx, present, cols, m)
+    x = x[:, 0] if col is not None else v.astype(jnp.float32)
+    return x, v.astype(jnp.float32), w, ompi
+
+
+@functools.partial(jax.jit, static_argnames=("col", "m", "pad_rows"))
+def _slot_from_samples(clean: Relation, stale: Relation, col: Optional[str],
+                       m: float, pad_rows: int) -> jnp.ndarray:
+    """One (N_CHANNELS, pad_rows) slot straight from the sample pair.
+
+    The same Def. 4 outer join the query engine's correspondence cache
+    materializes, narrowed to the canonical column — compiled once per
+    capacity bucket and reused by every view sharing the shape.
+    """
+    pk = clean.schema.pk
+    joined = ops.outer_join_unique(
+        _rows_only(clean), _rows_only(stale),
+        on=pk, how="outer", suffixes=("_new", "_old"),
+    )
+    lp = joined.col("__left_present").astype(bool) & joined.valid
+    rp = joined.col("__right_present").astype(bool) & joined.valid
+    new = _gather_channels(clean, joined.col("__row_new"), lp, col, m)
+    old = _gather_channels(stale, joined.col("__row_old"), rp, col, m)
+    chan = jnp.stack(new + old)
+    return jnp.pad(chan, ((0, 0), (0, pad_rows - chan.shape[1])))
+
+
+@functools.partial(jax.jit, static_argnames=("ci", "pad_rows"))
+def _slot_from_cache(xn, vn, wn, on, xo, vo, wo, oo,
+                     ci: Optional[int], pad_rows: int) -> jnp.ndarray:
+    """Reuse the query engine's per-window correspondence cache panels:
+    gather the canonical column (ones for count probes) and stack the row
+    channels."""
+    def side(x_panel, valid, w, ompi):
+        v = valid.astype(jnp.float32)
+        x = v if ci is None else x_panel[:, ci]  # count(): 1 on present rows
+        return x, v, w, ompi
+
+    chan = jnp.stack(side(xn, vn, wn, on) + side(xo, vo, wo, oo))
+    return jnp.pad(chan, ((0, 0), (0, pad_rows - chan.shape[1])))
+
+
+class FleetPanel:
+    """Stacked per-view channel slots + the compiled fleet moment pass."""
+
+    def __init__(self, vm):
+        self.vm = vm
+        self.pad_rows = 0
+        self._slots: Dict[str, jnp.ndarray] = {}
+        self._versions: Dict[str, int] = {}
+        self._stacked: Optional[Tuple[jnp.ndarray, ...]] = None
+        self._stacked_names: Optional[Tuple[str, ...]] = None
+
+    # -- invalidation --------------------------------------------------------
+    def invalidate(self, name: str) -> None:
+        """Drop one view's slot (ViewManager calls this from svc_refresh /
+        maintain; version tracking would catch it lazily anyway)."""
+        self._slots.pop(name, None)
+        self._versions.pop(name, None)
+        self._stacked = None
+
+    def _joined_rows(self, mv) -> int:
+        return mv.clean_sample.capacity + mv.stale_sample.capacity
+
+    def _ensure(self, names: Sequence[str]) -> None:
+        views = self.vm.views
+        # bucket over EVERY registered view, not just the requested subset:
+        # a per-view dashboard access must land in the same bucket as the
+        # planner's full-fleet pass, or alternating the two would clear and
+        # rebuild every slot twice per cycle
+        target = next_pow2(max((self._joined_rows(mv) for mv in views.values()),
+                               default=1))
+        if target != self.pad_rows:  # capacity bucket moved: rebuild all
+            self.pad_rows = target
+            self._slots.clear()
+            self._versions.clear()
+            self._stacked = None
+        for n in names:
+            mv = views[n]
+            if self._versions.get(n) == mv.sample_version:
+                continue
+            self._slots[n] = self._build_slot(mv)
+            self._versions[n] = mv.sample_version
+            self._stacked = None
+
+    def _build_slot(self, mv) -> jnp.ndarray:
+        q = canonical_query(mv)
+        cache = mv.corr_cache
+        if cache is not None:  # the query window already paid for the join
+            ci = cache.columns.index(q.col) if q.col is not None else None
+            return _slot_from_cache(
+                cache.x_new, cache.valid_new, cache.w_new, cache.ompi_new,
+                cache.x_old, cache.valid_old, cache.w_old, cache.ompi_old,
+                ci, self.pad_rows,
+            )
+        return _slot_from_samples(
+            mv.clean_sample, mv.stale_sample, q.col, mv.m, self.pad_rows
+        )
+
+    # -- accessors -----------------------------------------------------------
+    def channels(self, names: Optional[Sequence[str]] = None) -> Tuple[jnp.ndarray, ...]:
+        """Eight stacked (V, pad_rows) f32 channel panels in ``names`` order
+        (default: ViewManager registration order): x/valid/w/ompi for the
+        clean side then the stale side — kernels/fleet_moments input."""
+        names = tuple(names) if names is not None else tuple(self.vm.views)
+        self._ensure(names)
+        if self._stacked is not None and self._stacked_names == names:
+            return self._stacked
+        if not names:
+            empty = jnp.zeros((0, max(self.pad_rows, 1)), jnp.float32)
+            stacked = (empty,) * N_CHANNELS
+        else:
+            slabs = jnp.stack([self._slots[n] for n in names])  # (V, 8, R)
+            stacked = tuple(slabs[:, c, :] for c in range(N_CHANNELS))
+        self._stacked = stacked
+        self._stacked_names = names
+        return stacked
+
+    def moments(self, names: Optional[Sequence[str]] = None,
+                use_pallas: Optional[bool] = None) -> np.ndarray:
+        """(V, fleet_moments.N_MOMENTS) host array — every view's snapshot
+        moments from ONE compiled pass over the stacked panel."""
+        from repro.kernels.fleet_moments import fleet_moments
+
+        chan = self.channels(names)
+        return np.asarray(fleet_moments(*chan, use_pallas=use_pallas))
+
+    def meta(self, names: Optional[Sequence[str]] = None) -> Dict[str, np.ndarray]:
+        """Per-view panel metadata (padding contract observability): joined
+        row count before padding, sampling ratio m, outlier-index flag."""
+        names = list(names) if names is not None else list(self.vm.views)
+        views = self.vm.views
+        return {
+            "rows": np.array([self._joined_rows(views[n]) for n in names], np.int32),
+            "m": np.array([views[n].m for n in names], np.float32),
+            "has_outlier_index": np.array(
+                [views[n].outlier_index is not None for n in names], bool
+            ),
+        }

@@ -1,0 +1,326 @@
+"""Fleet-panel parity: the batched snapshot path vs the per-view loop.
+
+The fleet panel (repro.views.panel) + kernels/fleet_moments replace the
+planner's per-view ``variance_comparison`` snapshot loop with one compiled
+pass over a stacked (V, R) channel panel.  The per-view loop stays in the
+tree (``CostModel(use_panel=False)`` / ``CostModel.snapshot``) as the
+reference path; this suite pins the two together to ≤1e-6 over ragged
+fleets, empty views, and all-outlier-stratum views, and covers the
+panel's incremental invalidation and the batched epoch refresh.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import Query, ViewDef
+from repro.kernels.fleet_score import F_HT_AQP, F_HT_CORR, F_M, F_MEAN, F_N
+from repro.planner import CostModel, canonical_query
+from repro.relational.plan import GroupByNode, Scan
+from repro.relational.relation import from_columns, to_host
+from repro.views import ViewManager
+
+
+class FakeClock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+
+def _base_rel(n, groups, rng, key_start=0):
+    return from_columns(
+        {
+            "sessionId": np.arange(key_start, key_start + n, dtype=np.int32),
+            "videoId": rng.integers(0, groups, n).astype(np.int32),
+            "bytes": rng.exponential(10.0, n).astype(np.float32),
+        },
+        pk=["sessionId"],
+        capacity=max(64, 2 * n),
+    )
+
+
+def _delta_rel(start, n, groups, rng):
+    return from_columns(
+        {
+            "sessionId": np.arange(start, start + n, dtype=np.int32),
+            "videoId": rng.integers(0, groups, n).astype(np.int32),
+            "bytes": rng.exponential(10.0, n).astype(np.float32),
+        },
+        pk=["sessionId"],
+    )
+
+
+def _register(vm, i, base_rows, groups, rng, m=0.25):
+    base = f"Log{i}"
+    vm.register_base(base, _base_rel(base_rows, groups, rng))
+    plan = GroupByNode(
+        child=Scan(base, pk=("sessionId",)),
+        keys=("videoId",),
+        aggs=(("totalBytes", "sum", "bytes"), ("visits", "count", None)),
+        num_groups=2 * groups,
+    )
+    vm.register_view(ViewDef(f"v{i}", plan), delta_bases=(base,), m=m,
+                     seed=i, delta_group_capacity=2 * groups)
+
+
+def _ragged_fleet(n_views=5, seed=0):
+    """Views over bases of very different sizes/group counts — ragged
+    sample capacities exercise the panel's padding contract."""
+    rng = np.random.default_rng(seed)
+    vm = ViewManager()
+    for i in range(n_views):
+        _register(vm, i, base_rows=60 + 150 * i, groups=8 * (i + 1), rng=rng,
+                  m=(0.25 if i % 2 == 0 else 0.5))
+    return vm, rng
+
+
+def _panel_vs_reference(vm, clock=None):
+    clock = clock or FakeClock()
+    cm_ref = CostModel(vm, clock=clock, use_panel=False)
+    cm_pan = CostModel(vm, clock=clock, use_panel=True)
+    f_ref = cm_ref.features()
+    f_pan = cm_pan.features()
+    return f_ref, f_pan
+
+
+MOMENT_COLS = (F_N, F_MEAN, F_HT_AQP, F_HT_CORR, F_M)
+
+
+def _assert_feature_parity(f_ref, f_pan):
+    for col in range(f_ref.shape[1]):
+        np.testing.assert_allclose(
+            f_pan[:, col], f_ref[:, col], rtol=1e-6,
+            atol=1e-6 * max(1.0, float(np.max(np.abs(f_ref[:, col])))),
+            err_msg=f"feature column {col}",
+        )
+
+
+# ---------------------------------------------------------------------------
+# Parity: batched panel moments vs the per-view variance_comparison loop
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_panel_features_match_reference_ragged_fleet(seed):
+    vm, rng = _ragged_fleet(seed=seed)
+    for i in range(5):
+        vm.ingest(f"Log{i}", inserts=_delta_rel(5000, 40 + 30 * i,
+                                                8 * (i + 1), rng))
+    for i in (0, 2):  # some views refreshed, some drifting: mixed windows
+        vm.svc_refresh(f"v{i}")
+    _assert_feature_parity(*_panel_vs_reference(vm))
+
+
+def test_panel_scorer_outputs_match_reference():
+    """End to end: the compiled scorer over panel features equals the
+    scorer over reference-loop features to ≤1e-6 (the acceptance bar)."""
+    from repro.kernels.fleet_score.ops import fleet_scores
+
+    vm, rng = _ragged_fleet(seed=3)
+    for i in range(5):
+        vm.ingest(f"Log{i}", inserts=_delta_rel(5000, 100, 8 * (i + 1), rng))
+    vm.svc_refresh("v1")
+    f_ref, f_pan = _panel_vs_reference(vm)
+    s_ref = np.asarray(fleet_scores(f_ref))
+    s_pan = np.asarray(fleet_scores(f_pan))
+    np.testing.assert_allclose(
+        s_pan, s_ref, rtol=1e-6,
+        atol=1e-6 * max(1.0, float(np.max(np.abs(s_ref)))),
+    )
+
+
+def test_panel_handles_empty_view():
+    """A view over an empty base occupies a slot of all-zero channels and
+    snapshots to all-zero moments on both paths."""
+    rng = np.random.default_rng(7)
+    vm = ViewManager()
+    _register(vm, 0, base_rows=200, groups=16, rng=rng)
+    vm.register_base("Empty", _base_rel(0, 4, rng))
+    plan = GroupByNode(
+        child=Scan("Empty", pk=("sessionId",)), keys=("videoId",),
+        aggs=(("totalBytes", "sum", "bytes"),), num_groups=8,
+    )
+    vm.register_view(ViewDef("vEmpty", plan), delta_bases=("Empty",), m=0.5,
+                     seed=9, delta_group_capacity=8)
+    f_ref, f_pan = _panel_vs_reference(vm)
+    _assert_feature_parity(f_ref, f_pan)
+    empty_row = list(vm.views).index("vEmpty")
+    assert f_pan[empty_row, F_N] == 0.0
+    assert f_pan[empty_row, F_HT_AQP] == 0.0
+
+
+def test_panel_handles_all_outlier_stratum_view():
+    """Every key pinned by the §6 index ⇒ w = 1 / ompi = 0 everywhere: the
+    totals survive, both HT variances are exactly zero, and the panel path
+    still matches the reference loop."""
+    rng = np.random.default_rng(8)
+    vm = ViewManager()
+    _register(vm, 0, base_rows=120, groups=6, rng=rng, m=0.25)
+    # index ALL base rows: the push-up pins every group of the view
+    vm.register_outlier_index("v0", "Log0", "bytes", k=120)
+    f_ref, f_pan = _panel_vs_reference(vm)
+    _assert_feature_parity(f_ref, f_pan)
+    assert f_pan[0, F_HT_AQP] == 0.0
+    assert f_pan[0, F_HT_CORR] == 0.0
+    assert f_pan[0, F_N] > 0.0  # the deterministic stratum still counts
+
+
+def test_panel_matches_reference_after_drift_and_maintain():
+    """Windows where clean ≠ stale (post-refresh drift) and windows reset
+    by full maintenance both stay in parity."""
+    vm, rng = _ragged_fleet(seed=4)
+    for i in range(5):
+        vm.ingest(f"Log{i}", inserts=_delta_rel(5000, 120, 8 * (i + 1), rng))
+    for i in range(5):
+        vm.svc_refresh(f"v{i}")  # clean != stale everywhere
+    _assert_feature_parity(*_panel_vs_reference(vm))
+    vm.maintain("v3")  # resets one view's window
+    _assert_feature_parity(*_panel_vs_reference(vm))
+
+
+# ---------------------------------------------------------------------------
+# Incremental invalidation + cache reuse
+# ---------------------------------------------------------------------------
+
+def test_panel_slots_invalidate_per_view():
+    """Only the refreshed view's slot rebuilds; untouched slots are reused
+    (identity) across accesses."""
+    vm, rng = _ragged_fleet()
+    panel = vm.fleet_panel()
+    panel.channels()
+    slots_before = dict(panel._slots)
+    vm.ingest("Log1", inserts=_delta_rel(5000, 50, 16, rng))
+    vm.svc_refresh("v1")
+    assert "v1" not in panel._slots  # invalidated eagerly by the refresh
+    panel.channels()
+    for name, slab in panel._slots.items():
+        if name == "v1":
+            continue
+        assert slab is slots_before[name], name  # untouched slots reused
+
+
+def test_panel_reuses_query_window_corr_cache():
+    """A dashboard query materializes the window's correspondence cache;
+    the panel slot built from it equals the slot built from raw samples."""
+    vm, rng = _ragged_fleet()
+    vm.ingest("Log0", inserts=_delta_rel(5000, 80, 8, rng))
+    vm.svc_refresh("v0")
+    m_cold = vm.fleet_panel().moments()  # no caches: jitted join path
+    # drop panel state, run a query (builds mv.corr_cache), rebuild
+    vm._panel = None
+    vm.query("v0", Query(agg="sum", col="totalBytes"))
+    assert vm.views["v0"].corr_cache is not None
+    m_warm = vm.fleet_panel().moments()
+    np.testing.assert_allclose(m_warm, m_cold, rtol=1e-5, atol=1e-4)
+
+
+def test_canonical_query_reexported_and_deterministic():
+    vm, _ = _ragged_fleet(n_views=1)
+    q = canonical_query(vm.views["v0"])
+    assert q.agg == "sum" and q.col == "totalBytes"
+
+
+# ---------------------------------------------------------------------------
+# Batched epoch refresh (svc_refresh_many)
+# ---------------------------------------------------------------------------
+
+def _uniform_fleet(n_views, seed=0):
+    rng = np.random.default_rng(seed)
+    vm = ViewManager()
+    for i in range(n_views):
+        _register(vm, i, base_rows=400, groups=32, rng=rng)
+    return vm, rng
+
+
+def test_svc_refresh_many_matches_sequential():
+    """One batched fused dispatch per shared plan shape produces the same
+    clean samples as per-view svc_refresh, and the per-view bookkeeping
+    (versions, drift watermarks, timers) still moves."""
+    def fleet_with_deltas(seed):
+        vm, rng = _uniform_fleet(4, seed=seed)
+        d_rng = np.random.default_rng(99)
+        for i in range(4):
+            vm.ingest(f"Log{i}", inserts=_delta_rel(5000, 150, 32, d_rng))
+        return vm
+
+    vm_a = fleet_with_deltas(5)
+    vm_b = fleet_with_deltas(5)
+    versions = {n: vm_a.views[n].sample_version for n in vm_a.views}
+    dts = vm_a.svc_refresh_many(list(vm_a.views))
+    for name in vm_b.views:
+        vm_b.svc_refresh(name)
+    for name in vm_a.views:
+        a = to_host(vm_a.views[name].clean_sample)
+        b = to_host(vm_b.views[name].clean_sample)
+        order_a = np.argsort(a["videoId"])
+        order_b = np.argsort(b["videoId"])
+        for col in a:
+            np.testing.assert_allclose(
+                a[col][order_a], b[col][order_b], rtol=1e-6, atol=1e-4,
+                err_msg=f"{name}:{col}",
+            )
+        assert vm_a.views[name].sample_version == versions[name] + 1
+        assert vm_a.drift_rows(name, since="clean") == 0
+        assert dts[name] > 0.0
+
+
+def test_svc_refresh_many_applies_recommended_m_on_the_batched_path():
+    """A pending recommended_m retunes during candidate collection (the
+    multi-view path, distinct from svc_refresh's inline retune): the
+    batched dispatch runs over the re-derived samples and matches a
+    sequential twin that retuned the same views."""
+    def fleet(seed):
+        vm, _ = _uniform_fleet(3, seed=seed)
+        d_rng = np.random.default_rng(23)
+        for i in range(3):
+            vm.ingest(f"Log{i}", inserts=_delta_rel(5000, 120, 32, d_rng))
+        vm.adaptive_m = True
+        for i in range(3):
+            vm.views[f"v{i}"].recommended_m = 0.5
+        return vm
+
+    vm_a, vm_b = fleet(9), fleet(9)
+    dts = vm_a.svc_refresh_many(list(vm_a.views))
+    for name in vm_b.views:
+        vm_b.svc_refresh(name)
+    for name in vm_a.views:
+        assert vm_a.views[name].m == 0.5  # retuned before the batch
+        assert vm_a.views[name].recommended_m is None
+        assert dts[name] > 0.0  # the retune wall time was charged
+        a = to_host(vm_a.views[name].clean_sample)
+        b = to_host(vm_b.views[name].clean_sample)
+        order_a = np.argsort(a["videoId"])
+        order_b = np.argsort(b["videoId"])
+        for col in a:
+            np.testing.assert_allclose(
+                a[col][order_a], b[col][order_b], rtol=1e-6, atol=1e-4,
+                err_msg=f"{name}:{col}",
+            )
+
+
+def test_svc_refresh_many_mixed_shapes_and_outliers_fall_back():
+    """Ragged plan shapes batch only within a shape group, and views with
+    an outlier index take the per-view path — results match sequential."""
+    vm_a, rng_a = _ragged_fleet(seed=6)
+    vm_b, rng_b = _ragged_fleet(seed=6)
+    vm_a.register_outlier_index("v0", "Log0", "bytes", k=5)
+    vm_b.register_outlier_index("v0", "Log0", "bytes", k=5)
+    d_rng = np.random.default_rng(17)
+    deltas = {f"Log{i}": _delta_rel(5000, 60, 8 * (i + 1), d_rng)
+              for i in range(5)}
+    for vm in (vm_a, vm_b):
+        for base, rel in deltas.items():
+            vm.ingest(base, inserts=rel)
+    vm_a.svc_refresh_many(list(vm_a.views))
+    for name in vm_b.views:
+        vm_b.svc_refresh(name)
+    for name in vm_a.views:
+        a = to_host(vm_a.views[name].clean_sample)
+        b = to_host(vm_b.views[name].clean_sample)
+        order_a = np.argsort(a["videoId"])
+        order_b = np.argsort(b["videoId"])
+        for col in a:
+            np.testing.assert_allclose(
+                a[col][order_a], b[col][order_b], rtol=1e-6, atol=1e-4,
+                err_msg=f"{name}:{col}",
+            )

@@ -574,15 +574,18 @@ def test_fleet_score_kernel_matches_oracle(V):
     want = np.asarray(fleet_score_ref(feats))
     got_xla = np.asarray(fleet_scores(feats, use_pallas=False))
     got_pl = np.asarray(fleet_scores(feats, use_pallas=True))
-    assert got_pl.shape == (V, 4)
+    from repro.kernels.fleet_score import N_SCORES
+
+    assert got_pl.shape == (V, N_SCORES)
     np.testing.assert_allclose(got_xla, want, rtol=1e-6, atol=1e-6)
     np.testing.assert_allclose(got_pl, want, rtol=1e-6, atol=1e-6)
 
 
 def test_fleet_score_degenerate_views_score_zero():
     """All-zero feature rows (padding, empty views) must score 0 on every
-    action — no NaN/Inf leaks from the guarded divisors."""
-    from repro.kernels.fleet_score import N_FEATURES
+    action — no NaN/Inf leaks from the guarded divisors — and recommend no
+    ratio change (REC_M 0 for zero-m lanes)."""
+    from repro.kernels.fleet_score import N_FEATURES, REC_M
     from repro.kernels.fleet_score.ops import fleet_scores
 
     feats = np.zeros((3, N_FEATURES), np.float32)
@@ -590,3 +593,116 @@ def test_fleet_score_degenerate_views_score_zero():
         got = np.asarray(fleet_scores(feats, use_pallas=up))
         assert np.all(np.isfinite(got))
         np.testing.assert_array_equal(got[:, :3], 0.0)
+        np.testing.assert_array_equal(got[:, REC_M], 0.0)
+
+
+def test_fleet_score_recommended_m_steps_and_clamps():
+    """REC_M steps the ratio by ×/÷M_STEP when the canonical total's
+    relative standard error leaves the band, holds inside it, and clamps
+    at the [M_MIN, M_MAX] bounds."""
+    from repro.kernels.fleet_score import (
+        F_HT_AQP, F_M, F_MEAN, F_N, M_MAX, M_MIN, M_STEP, N_FEATURES, REC_M,
+    )
+    from repro.kernels.fleet_score.ops import fleet_scores
+
+    def rec(m, rel_se, up):
+        f = np.zeros((1, N_FEATURES), np.float32)
+        f[0, F_N], f[0, F_MEAN], f[0, F_M] = 100.0, 10.0, m
+        f[0, F_HT_AQP] = (rel_se * 1000.0) ** 2
+        return float(np.asarray(fleet_scores(f, use_pallas=up))[0, REC_M])
+
+    for up in (False, True):
+        assert rec(0.25, 0.05, up) == pytest.approx(0.25 * M_STEP)  # noisy
+        assert rec(0.25, 0.001, up) == pytest.approx(0.25 / M_STEP)  # over
+        assert rec(0.25, 0.01, up) == pytest.approx(0.25)  # in band
+        assert rec(M_MAX, 0.05, up) == pytest.approx(M_MAX)  # clamp high
+        assert rec(M_MIN, 0.001, up) == pytest.approx(M_MIN)  # clamp low
+        # zero sampling variance (m = 1 / all-pinned / empty) is no signal:
+        # hold, don't step down (an m = 1 view must not oscillate 1 ⇄ 0.5)
+        assert rec(1.0, 0.0, up) == pytest.approx(1.0)
+        assert rec(0.25, 0.0, up) == pytest.approx(0.25)
+        # an m below M_MIN is never yanked to the bound: over-sampling
+        # evidence holds (a step down can't go further), noise steps up
+        # toward the band, and in-band recommends exactly m (no clip)
+        assert rec(M_MIN / 2, 0.001, up) == pytest.approx(M_MIN / 2)
+        assert rec(M_MIN / 2, 0.05, up) == pytest.approx(M_MIN)
+        assert rec(M_MIN / 2, 0.01, up) == pytest.approx(M_MIN / 2)
+
+
+# ---------------------------------------------------------------------------
+# kernels/fleet_moments: the fleet panel's batched snapshot pass
+# ---------------------------------------------------------------------------
+
+def _random_fleet_panel(rng, V, R, ragged=True):
+    """Eight (V, R) channels with per-view ragged lengths, outlier-pinned
+    rows (w = 1, ompi = 0), and the all-zero padding contract."""
+    chans = []
+    rows = rng.integers(0, R + 1, V) if ragged else np.full(V, R)
+    for _side in range(2):
+        live = np.arange(R)[None, :] < rows[:, None]
+        v = ((rng.random((V, R)) < 0.8) & live).astype(np.float32)
+        x = np.where(v > 0, rng.normal(0, 5, (V, R)), 0.0).astype(np.float32)
+        pin = (rng.random((V, R)) < 0.15) & (v > 0)
+        w = np.where(pin, 1.0, 4.0).astype(np.float32) * (live > 0)
+        o = np.where(pin, 0.0, 0.75).astype(np.float32) * (live > 0)
+        chans += [x, v, w.astype(np.float32), o.astype(np.float32)]
+    return chans
+
+
+@pytest.mark.parametrize("V,R", [(1, 64), (7, 300), (12, 1024), (130, 96)])
+def test_fleet_moments_kernel_matches_oracle(V, R):
+    """Pallas tile pass == pure-jnp oracle == XLA path over ragged fleets."""
+    from repro.kernels.fleet_moments import N_MOMENTS, fleet_moments, fleet_moments_ref
+
+    rng = np.random.default_rng(V * 1000 + R)
+    chans = _random_fleet_panel(rng, V, R)
+    want = np.asarray(fleet_moments_ref(*chans))
+    got_xla = np.asarray(fleet_moments(*chans, use_pallas=False))
+    got_pl = np.asarray(fleet_moments(*chans, use_pallas=True))
+    assert got_pl.shape == (V, N_MOMENTS)
+    np.testing.assert_allclose(got_xla, want, rtol=1e-5, atol=1e-3)
+    np.testing.assert_allclose(got_pl, want, rtol=1e-5, atol=1e-3)
+
+
+def test_fleet_moments_zero_padding_contributes_nothing():
+    """All-zero rows and views (the panel's padding contract) reduce to
+    exactly zero in every moment, on both dispatch paths."""
+    from repro.kernels.fleet_moments import fleet_moments
+
+    rng = np.random.default_rng(3)
+    chans = _random_fleet_panel(rng, 4, 200, ragged=False)
+    padded = [np.pad(c, ((0, 2), (0, 120))) for c in chans]
+    for up in (False, True):
+        base = np.asarray(fleet_moments(*chans, use_pallas=up))
+        grown = np.asarray(fleet_moments(*padded, use_pallas=up))
+        np.testing.assert_allclose(grown[:4], base, rtol=1e-6, atol=1e-6)
+        np.testing.assert_array_equal(grown[4:], 0.0)
+
+
+def test_fused_clean_groupby_fleet_matches_per_view():
+    """The batched fleet delta aggregation equals per-view
+    fused_clean_groupby for every member (per-view seeds and ratios)."""
+    from repro.kernels.fused_clean.ops import (
+        fused_clean_groupby,
+        fused_clean_groupby_fleet,
+    )
+
+    rng = np.random.default_rng(11)
+    V, R, C, G = 5, 400, 2, 64
+    gid = rng.integers(0, G, (V, R)).astype(np.int32)
+    vals = rng.normal(0, 3, (V, R, C)).astype(np.float32)
+    valid = rng.random((V, R)) < 0.9
+    ms = (0.25, 0.5, 0.125, 1.0, 0.25)
+    seeds = (0, 1, 2, 3, 40)
+    counts, sums = fused_clean_groupby_fleet(
+        gid, vals, valid, ms=ms, seeds=seeds, num_groups=G
+    )
+    for v in range(V):
+        c1, s1 = fused_clean_groupby(
+            gid[v], vals[v], valid[v], m=ms[v], seed=seeds[v], num_groups=G,
+            use_pallas=False,
+        )
+        np.testing.assert_allclose(np.asarray(counts)[v], np.asarray(c1),
+                                   rtol=0, atol=0)
+        np.testing.assert_allclose(np.asarray(sums)[v], np.asarray(s1),
+                                   rtol=1e-6, atol=1e-4)

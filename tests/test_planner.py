@@ -238,6 +238,105 @@ def test_scorer_flips_clean_to_corr_loss_across_drift():
 
 
 # ---------------------------------------------------------------------------
+# Real traffic: query_batch feeds the cost model
+# ---------------------------------------------------------------------------
+
+def test_zipf_query_stream_shifts_actions_toward_hot_views():
+    """No manual traffic seeding: a skewed stream of REAL queries through
+    query_batch shifts the planner's budgeted actions toward the hot views
+    (ROADMAP follow-up (c))."""
+    n_views = 4
+    vm, rng = _fleet(n_views)
+    planner = MaintenancePlanner(vm, budget_s=2.0, age_cap_s=1e9)
+    planner.cost_model.pin_costs(refresh_s=1.0, maintain_s=5.0)
+    # Zipf-ish stream: v3 hot, v0 coldest — decorrelated from registration
+    hits = {"v3": 60, "v1": 12, "v2": 4, "v0": 1}
+    for name, k in hits.items():
+        for _ in range(k):
+            vm.query_batch(name, [Q_SUM], prefer="aqp")
+    for i in range(n_views):
+        vm.ingest(f"Log{i}", inserts=_delta_rel(5000, 150, 32,
+                                                np.random.default_rng(i)))
+    report = planner.step()
+    acted = {a.view for a in report.actions}
+    assert len(acted) == 2  # the budget covers two cleans
+    assert acted == {"v3", "v1"}  # the hottest two views win the budget
+
+
+def test_record_traffic_false_is_invisible_to_the_planner():
+    """Evaluation probes answered with record_traffic=False must not move
+    the per-view traffic counters."""
+    vm, rng = _fleet(2)
+    planner = MaintenancePlanner(vm, budget_s=1.0, age_cap_s=1e9)
+    planner.cost_model.pin_costs(refresh_s=1.0, maintain_s=2.0)
+    before = planner.cost_model._stat("v0").traffic
+    for _ in range(25):
+        vm.query("v0", Q_SUM, prefer="aqp", record_traffic=False)
+        vm.query_batch("v0", [Q_SUM] * 4, prefer="aqp", record_traffic=False)
+    assert planner.cost_model._stat("v0").traffic == before
+    vm.query("v0", Q_SUM, prefer="aqp")  # a real query still counts
+    assert planner.cost_model._stat("v0").traffic == before + 1
+
+
+# ---------------------------------------------------------------------------
+# Planner-driven m adaptation (opt-in)
+# ---------------------------------------------------------------------------
+
+def test_recommended_m_exposed_but_inert_without_opt_in():
+    vm, rng = _fleet(1, m=0.0625)
+    planner = MaintenancePlanner(vm, budget_s=10.0, age_cap_s=1e9)
+    planner.cost_model.pin_costs(refresh_s=1.0, maintain_s=3.0)
+    vm.ingest("Log0", inserts=_delta_rel(5000, 200, 32, rng))
+    report = planner.step()
+    assert "v0" in report.recommended_m  # exposed per view in the report
+    assert vm.views["v0"].m == 0.0625  # ...but never applied
+    assert not vm.adaptive_m
+
+
+def test_adapt_m_steps_ratio_and_answers_stay_fresh():
+    """With adapt_m, a noisy under-sampled view's ratio steps up by one
+    clamped factor per refresh (never a jump), and cleaned answers keep
+    beating the stale baseline after the retune."""
+    from repro.kernels.fleet_score import M_STEP
+
+    vm, rng = _fleet(1, m=0.0625)
+    planner = MaintenancePlanner(vm, budget_s=10.0, age_cap_s=1e9,
+                                 adapt_m=True)
+    planner.cost_model.pin_costs(refresh_s=1.0, maintain_s=30.0)
+    assert vm.adaptive_m
+    seen_m = [vm.views["v0"].m]
+    for epoch in range(3):
+        vm.ingest("Log0", inserts=_delta_rel(5000 + 1000 * epoch, 150, 32, rng))
+        planner.step()
+        seen_m.append(vm.views["v0"].m)
+    for prev, cur in zip(seen_m, seen_m[1:]):  # one bounded step per epoch
+        assert cur in (prev, prev * M_STEP, prev / M_STEP)
+    assert seen_m[-1] > seen_m[0]  # the noisy view was stepped up
+    truth = float(vm.query_exact_fresh("v0", Q_SUM))
+    est = float(vm.query("v0", Q_SUM).value)
+    stale = float(vm.query_stale("v0", Q_SUM))
+    assert abs(est - truth) < abs(stale - truth)
+
+
+# ---------------------------------------------------------------------------
+# Epoch wall-time breakdown
+# ---------------------------------------------------------------------------
+
+def test_step_reports_epoch_time_breakdown():
+    vm, rng = _fleet(2)
+    planner = MaintenancePlanner(vm, budget_s=5.0, age_cap_s=1e9)
+    planner.cost_model.pin_costs(refresh_s=1.0, maintain_s=2.0)
+    for i in range(2):
+        vm.ingest(f"Log{i}", inserts=_delta_rel(5000, 100, 32,
+                                                np.random.default_rng(i)))
+    report = planner.step()
+    assert report.snapshot_s > 0.0 and report.schedule_s >= 0.0
+    assert report.actions and report.act_s > 0.0
+    d = report.to_dict()
+    assert {"snapshot_s", "schedule_s", "act_s", "recommended_m"} <= set(d)
+
+
+# ---------------------------------------------------------------------------
 # Per-view maintenance pacing (segment cursors)
 # ---------------------------------------------------------------------------
 
@@ -390,11 +489,14 @@ def test_dashboard_surfaces_planner_panel():
     eng.submit(Request(rid=0, prompt=np.array([1, 2], np.int32), max_new=3))
     eng.run(max_ticks=10)
     svc.refresh()  # planner epoch
+    traffic_before = planner.cost_model._stat("serveView").traffic
     dash = eng.dashboard()
     panel = dash["planner"]
     assert panel["epoch"] == 0 and panel["budget_s"] == 10.0
     assert {a["view"] for a in panel["actions"]} <= {"serveView"}
     assert "corr_wins" in panel
+    # the dashboard's REAL queries fed the planner's traffic counter
+    assert planner.cost_model._stat("serveView").traffic > traffic_before
     # the stat entries still answer under one shared staleness snapshot
     stats = {k: v for k, v in dash.items() if k != "planner"}
     assert len({id(v.staleness) for v in stats.values()}) == 1
