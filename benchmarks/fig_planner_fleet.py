@@ -26,10 +26,13 @@ fleet-wide median relative error of the pooled per-epoch answers vs
 ground truth; the JSON also records the planner's epoch wall-time
 breakdown (snapshot_s / schedule_s / act_s, plus the retained per-view
 reference snapshot loop's cost for comparison) and the CI regression
-guard ``planner wall_s ≤ 2× clean_all wall_s``.
+guard ``planner wall_s ≤ 1.25× clean_all wall_s`` (tightened from 2×
+once the epoch's cleans became ONE kernels/fleet_merge dispatch).
 
-Writes ``BENCH_planner.json`` (override with ``BENCH_OUT``); CI runs the
-quick mode, uploads the JSON, and enforces the wall-time guard.
+Writes ``BENCH_planner.json`` (override with ``BENCH_OUT``) plus a
+``BENCH_planner_breakdown.json`` artifact with the epoch wall-time
+breakdown alone; CI runs the quick mode, uploads both JSONs, and
+enforces the wall-time guard.
 """
 
 from __future__ import annotations
@@ -175,11 +178,42 @@ def run_policy(policy: str, n_views: int, n_rows: int, groups: int,
                deltas: List[Dict[str, object]], weights: np.ndarray,
                budget: float, prices: Dict[str, float]) -> Dict:
     vm = build_fleet(n_views, n_rows, groups, seed=1)
+    # off-the-clock warmup: the jitted cleaning/maintenance plans are per
+    # VIEW (each view's hash seed is a static argument), so the first
+    # action on every view pays a compile that would swamp the
+    # steady-state policy comparison the walls below are meant to
+    # capture.  Two ingest rounds at the EPOCH delta size: round one is
+    # consumed by svc_refresh (warms the clean path), round two is left
+    # pending so every view's maintain compiles against a real delta
+    # window of the exact raw shape the timed epochs replay.
+    w_rows = int(np.asarray(next(iter(deltas[0].values())).valid).sum())
+    w_rng = np.random.default_rng(5)
+    for i in range(n_views):
+        vm.ingest(f"Log{i}",
+                  inserts=_delta_rel(5 * n_rows + w_rows * i, w_rows, groups,
+                                     w_rng))
+        vm.svc_refresh(f"v{i}")
+    for i in range(n_views):
+        vm.ingest(f"Log{i}",
+                  inserts=_delta_rel(7 * n_rows + w_rows * i, w_rows, groups,
+                                     w_rng))
+    for i in range(n_views):
+        vm.maintain(f"v{i}")
+    # round three warms the BATCHED clean path (fused fleet pass +
+    # fleet_merge dispatch) the planner routes its epoch cleans through —
+    # sized at the knapsack's typical pick so the stacked panel shapes
+    # match the timed epochs
+    for i in range(n_views):
+        vm.ingest(f"Log{i}",
+                  inserts=_delta_rel(9 * n_rows + w_rows * i, w_rows, groups,
+                                     w_rng))
+    vm.svc_refresh_many([f"v{i}" for i in range(min(3, n_views))])
     c_s, m_s = prices["clean_s"], prices["maintain_s"]
     planner = None
     if policy == "planner":
         planner = MaintenancePlanner(vm, budget_s=budget, age_cap_s=1e9)
         planner.cost_model.pin_costs(refresh_s=c_s, maintain_s=m_s)
+        planner.plan()  # pure preview: compiles the snapshot + scorer pass
     rr_ptr = 0
     n_actions = 0
     errs, ws = [], []
@@ -276,18 +310,34 @@ def run(quick: bool = False) -> List[Row]:
             "round_robin": p_err < results["round_robin"]["median_rel_err"],
             "maintain_all": p_err < results["maintain_all"]["median_rel_err"],
         },
-        # regression guard (enforced by CI): the batched fleet panel keeps
-        # planner epochs near the clean-all baseline's wall time
+        # regression guard (enforced by CI): with the epoch's cleans going
+        # through one batched fleet_merge dispatch, planner epochs stay
+        # within 1.25× the clean-all baseline's wall time
         "wall_guard": {
             "planner_wall_s": p_wall,
             "clean_all_wall_s": c_wall,
             "ratio": p_wall / max(c_wall, 1e-9),
-            "ok": p_wall <= 2.0 * c_wall,
+            "ok": p_wall <= 1.25 * c_wall,
         },
     }
     out_path = os.environ.get("BENCH_OUT", "BENCH_planner.json")
     with open(out_path, "w") as f:
         json.dump(payload, f, indent=2)
+    # the epoch wall-time breakdown rides as its own CI artifact, so wall
+    # regressions localize (snapshot vs knapsack vs action execution)
+    # without digging through the full payload
+    breakdown_path = os.environ.get(
+        "BENCH_BREAKDOWN_OUT",
+        os.path.join(os.path.dirname(out_path) or ".",
+                     "BENCH_planner_breakdown.json"),
+    )
+    with open(breakdown_path, "w") as f:
+        json.dump({
+            "epochs": EPOCHS,
+            "breakdown": results["planner"]["breakdown"],
+            "snapshot_reference_s": results["planner"]["snapshot_reference_s"],
+            "wall_guard": payload["wall_guard"],
+        }, f, indent=2)
 
     return [
         Row(

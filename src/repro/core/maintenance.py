@@ -518,31 +518,33 @@ def _fleet_assemble_fn(spec: _FusedSpec, num_groups: int):
     return jax.jit(fn)
 
 
-def fleet_eval_fused_groupbys(candidates) -> Dict[str, Dict[_FusedSpec, Relation]]:
-    """Batch many views' η+γ delta aggregations into shared fused dispatches.
+def _fleet_fused_counts(entries, min_group: int = 2):
+    """Batched fused η+γ over many delta relations → raw dense accumulators.
 
-    ``candidates`` is a list of (view_name, env, spec) with exactly one
-    pin-free, dim-free fused spec per view.  Views are grouped by the
-    stacked dispatch shape — delta arena capacity × value-column count —
-    and every group of ≥2 runs as ONE compiled
-    ``kernels/fused_clean.fused_clean_groupby_fleet`` call with per-view
-    sampling thresholds and seeds; singletons (and views whose key domain
-    is unbounded) are left out and take the per-view path.  Returns
-    {view_name: {spec: delta-view Relation}} for the views that batched.
+    ``entries`` is a list of (entry_id, fact, spec).  Entries are grouped
+    by the stacked dispatch shape — delta arena capacity × value-column
+    count — and every group of ≥ ``min_group`` runs as ONE compiled
+    ``kernels/fused_clean.fused_clean_groupby_fleet`` call with per-entry
+    sampling thresholds and seeds.  Entries whose key domain is unbounded
+    (negative keys, or past MAX_FUSED_GROUPS) are excluded — one wide-key
+    entry must not knock its shape-mates off the batched path; survivors'
+    shared pow2 bound is ≤ MAX_FUSED_GROUPS by construction.
+
+    Returns {entry_id: (counts (num_groups,), sums (num_groups, n_sum),
+    num_groups)} for entries that ran; callers fall back for the rest.
     """
     from repro.kernels.fused_clean.ops import fused_clean_groupby_fleet
 
     groups: Dict[Tuple[int, int], list] = {}
-    for name, env, spec in candidates:
-        fact = env[spec.fact_name]
+    for eid, fact, spec in entries:
         sum_cols = tuple(val for _o, fn, val in spec.node.aggs if fn == "sum")
         groups.setdefault((fact.capacity, len(sum_cols)), []).append(
-            (name, fact, spec, sum_cols)
+            (eid, fact, spec, sum_cols)
         )
 
-    out: Dict[str, Dict[_FusedSpec, Relation]] = {}
+    out = {}
     for (_cap, n_sum), members in groups.items():
-        if len(members) < 2:
+        if len(members) < min_group:
             continue
         # one host sync for every member's key bounds (the per-view path
         # pays one sync per view here)
@@ -554,16 +556,12 @@ def fleet_eval_fused_groupbys(candidates) -> Dict[str, Dict[_FusedSpec, Relation
             ])
             for _n, fact, spec, _sc in members
         ]))
-        # exclude (only) members with negative keys or a key domain past the
-        # dense-accumulator bound — one wide-key view must not knock its
-        # shape-mates off the batched path; survivors' shared pow2 bound is
-        # ≤ MAX_FUSED_GROUPS by construction
         keep = [
             i for i in range(len(members))
             if int(bounds[i, 0]) >= 0
             and _next_pow2_int(max(int(bounds[i, 1]) + 1, 64)) <= MAX_FUSED_GROUPS
         ]
-        if len(keep) < 2:
+        if len(keep) < min_group:
             continue
         hi = max(int(bounds[i, 1]) for i in keep)
         num_groups = _next_pow2_int(max(hi + 1, 64))
@@ -581,10 +579,189 @@ def fleet_eval_fused_groupbys(candidates) -> Dict[str, Dict[_FusedSpec, Relation
             seeds=tuple(spec.seed for _n, _f, spec, _sc in sel),
             num_groups=num_groups,
         )
-        for i, (name, _fact, spec, _sc) in enumerate(sel):
-            rel = _fleet_assemble_fn(spec, num_groups)(counts[i], sums[i])
-            out[name] = {spec: rel}
+        for i, (eid, _fact, _spec, _sc) in enumerate(sel):
+            out[eid] = (counts[i], sums[i], num_groups)
     return out
+
+
+def fleet_eval_fused_groupbys(candidates) -> Dict[str, Dict[_FusedSpec, Relation]]:
+    """Batch many views' η+γ delta aggregations into shared fused dispatches.
+
+    ``candidates`` is a list of (view_name, env, spec) with exactly one
+    pin-free, dim-free fused spec per view.  Thin wrapper over
+    ``_fleet_fused_counts`` (≥2 per shape group; singletons and unbounded
+    key domains take the per-view path) that assembles each member's
+    delta-view relation the same way the per-view jit does.  Returns
+    {view_name: {spec: delta-view Relation}} for the views that batched.
+    """
+    raw = _fleet_fused_counts(
+        [(name, env[spec.fact_name], spec) for name, env, spec in candidates],
+        min_group=2,
+    )
+    out: Dict[str, Dict[_FusedSpec, Relation]] = {}
+    for name, _env, spec in candidates:
+        got = raw.get(name)
+        if got is None:
+            continue
+        counts, sums, num_groups = got
+        out[name] = {spec: _fleet_assemble_fn(spec, num_groups)(counts, sums)}
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Fleet-batched merge remainder (kernels/fleet_merge dispatch)
+# ---------------------------------------------------------------------------
+
+def _cap_group_validity(counts: jnp.ndarray, cap: int) -> jnp.ndarray:
+    """Which dense delta groups survive ``_assemble_fused_output``'s compact.
+
+    The per-view path materializes the dense accumulator as a relation and
+    compacts it to the group-by's static capacity; when more than ``cap``
+    groups are live, compact's key-ascending truncation keeps the ``cap``
+    LOWEST-keyed ones.  Reproducing that drop here keeps the batched merge
+    bit-equal to the per-view path even in overflow."""
+    nz = counts > 0
+    rank = jnp.cumsum(nz.astype(jnp.int32))
+    return nz & (rank <= cap)
+
+
+@dataclasses.dataclass
+class _MergeJob:
+    """One view's inputs to the fleet-batched merge remainder.
+
+    ``stale_*`` come from the view panel's merge slot (common padded Rp
+    across the fleet, SENTINEL keys / zero values on invalid rows);
+    ``ins``/``dele`` are (delta fact, fused spec) pairs whose aggregations
+    ``fleet_clean_merge`` batches before the single merge dispatch."""
+
+    name: str
+    key: str                       # group-key column name
+    agg_cols: Tuple[str, ...]      # aggregate output columns, spec order
+    col_dtypes: Mapping[str, np.dtype]  # clean-sample column dtypes
+    stale_keys: jnp.ndarray        # (Rp,) int32, SENTINEL on invalid rows
+    stale_valid: jnp.ndarray       # (Rp,) bool
+    stale_vals: jnp.ndarray        # (Rp, A) f32, agg_cols order
+    ins: Tuple[Relation, _FusedSpec]
+    dele: Optional[Tuple[Relation, _FusedSpec]]
+    out_capacity: int              # the view's sample arena capacity
+
+
+def _dense_side(spec: _FusedSpec, counts: jnp.ndarray, sums: jnp.ndarray,
+                num_groups: int, g_pad: int):
+    """Raw accumulators → (valid (g_pad,), vals (g_pad, A)) dense panels.
+
+    Value columns follow ``spec.node.aggs`` order (counts for count aggs,
+    sum columns in declaration order) — the same layout
+    ``_assemble_fused_output`` writes, minus the relation materialization
+    the fleet merge no longer needs."""
+    gv = _cap_group_validity(counts, spec.node.num_groups)
+    cols = []
+    i = 0
+    for _out, fn_name, _val in spec.node.aggs:
+        if fn_name == "count":
+            cols.append(counts.astype(jnp.float32))
+        else:
+            cols.append(sums[:, i].astype(jnp.float32))
+            i += 1
+    vals = jnp.stack(cols, axis=1)
+    if g_pad > num_groups:
+        gv = jnp.pad(gv, (0, g_pad - num_groups))
+        vals = jnp.pad(vals, ((0, g_pad - num_groups), (0, 0)))
+    return gv, vals
+
+
+def fleet_clean_merge(jobs):
+    """The whole epoch's merge remainders in one ``fleet_merge`` dispatch.
+
+    For every job: batch the insert-side (and delete-side) fused delta
+    aggregations across views (``_fleet_fused_counts`` with no minimum —
+    a lone view still rides the batched kernel), then upsert all dense
+    delta panels into the stacked stale-sample panels with
+    ``kernels/fleet_merge`` — jobs sharing (Rp, aggregate count) merge in
+    ONE dispatch, and the fleet panel's common merge bucket makes that the
+    typical epoch shape.  Per-view work after the dispatch is slicing the
+    sorted rows back into each view's sample arena — no per-view merge
+    plan execution.
+
+    Returns ``(merged, precomputed)``: ``merged`` maps view name → its
+    cleaned sample relation (bit-equal to the per-view ``clean_sample``
+    path on valid rows); ``precomputed`` maps view name → {spec: relation}
+    for jobs whose key domain kept a side off the batched path — their
+    aggregated sides still splice into the per-view fallback.
+    """
+    from repro.kernels.fleet_merge import fleet_merge
+    from repro.relational.relation import from_columns
+
+    entries = []
+    for j in jobs:
+        entries.append(((j.name, "ins"), j.ins[0], j.ins[1]))
+        if j.dele is not None:
+            entries.append(((j.name, "del"), j.dele[0], j.dele[1]))
+    raw = _fleet_fused_counts(entries, min_group=1)
+
+    merged: Dict[str, Relation] = {}
+    precomputed: Dict[str, Dict[_FusedSpec, Relation]] = {}
+    ready = []
+    for j in jobs:
+        ri = raw.get((j.name, "ins"))
+        rd = raw.get((j.name, "del")) if j.dele is not None else None
+        if ri is None or (j.dele is not None and rd is None):
+            # a side fell off the dense path (unbounded key domain):
+            # the view falls back to per-view cleaning, but any side that
+            # DID aggregate still splices in as a precomputed delta view
+            pre = {}
+            if ri is not None:
+                pre[j.ins[1]] = _fleet_assemble_fn(j.ins[1], ri[2])(ri[0], ri[1])
+            if j.dele is not None and rd is not None:
+                pre[j.dele[1]] = _fleet_assemble_fn(j.dele[1], rd[2])(rd[0], rd[1])
+            if pre:
+                precomputed[j.name] = pre
+            continue
+        ready.append((j, ri, rd))
+
+    shape_groups: Dict[Tuple[int, int], list] = {}
+    for item in ready:
+        j = item[0]
+        shape_groups.setdefault(
+            (int(j.stale_keys.shape[0]), len(j.agg_cols)), []
+        ).append(item)
+
+    for (_rp, _n_agg), members in shape_groups.items():
+        g_pad = max(
+            max(ri[2], rd[2] if rd is not None else 0) for _j, ri, rd in members
+        )
+        sk = jnp.stack([j.stale_keys for j, _ri, _rd in members])
+        sv = jnp.stack([j.stale_valid for j, _ri, _rd in members])
+        sa = jnp.stack([j.stale_vals for j, _ri, _rd in members])
+        ins_v, ins_x, del_v, del_x = [], [], [], []
+        for j, ri, rd in members:
+            gv, gx = _dense_side(j.ins[1], ri[0], ri[1], ri[2], g_pad)
+            ins_v.append(gv)
+            ins_x.append(gx)
+            if rd is not None:
+                gv, gx = _dense_side(j.dele[1], rd[0], rd[1], rd[2], g_pad)
+            else:
+                gv = jnp.zeros((g_pad,), bool)
+                gx = jnp.zeros((g_pad, len(j.agg_cols)), jnp.float32)
+            del_v.append(gv)
+            del_x.append(gx)
+        keys, vals, valid = fleet_merge(
+            sk, sv, sa,
+            jnp.stack(ins_v), jnp.stack(ins_x),
+            jnp.stack(del_v), jnp.stack(del_x),
+        )
+        span = int(keys.shape[1])
+        for idx, (j, _ri, _rd) in enumerate(members):
+            n = min(j.out_capacity, span)
+            # sorted valid-first ascending ⇒ truncation keeps the lowest-
+            # keyed rows, exactly compact's overflow behavior
+            cols = {j.key: keys[idx, :n].astype(j.col_dtypes[j.key])}
+            for a_i, cname in enumerate(j.agg_cols):
+                cols[cname] = vals[idx, :n, a_i].astype(j.col_dtypes[cname])
+            merged[j.name] = from_columns(
+                cols, pk=(j.key,), valid=valid[idx, :n], capacity=j.out_capacity
+            )
+    return merged, precomputed
 
 
 def clean_sample(

@@ -1,0 +1,102 @@
+"""Pallas kernel: the fleet's stale-row upsert, views on the lane axis.
+
+The merge remainder splits into two halves.  The *upsert* half — every
+stale row picks up its matching insert/delete delta group and applies
+``(stale + ins) − del`` — is the O(R·G) stage and lives here: the stale
+key panel arrives TRANSPOSED as ``(Rp, Vp)`` with views on lanes (the
+fleet_moments layout), the dense delta panels as ``(Gp, Vp)``, and each
+grid step matches one ``(BLOCK_R, BLOCK_V)`` key tile against one
+``BLOCK_G`` slab of groups.  A per-lane dynamic gather does not map to
+the TPU's vector unit, so the gather is computed as dense one-hot
+matching: for each group row ``g`` the tile-wide mask ``keys == g``
+selects the (at most one) stale row per lane that upserts that group —
+the same trick kernels/fused_clean uses for its scatter.
+
+Float order is preserved exactly: the accumulator initializes to the
+stale values at the first group slab, and the single matching group adds
+its insert value THEN subtracts its delete value inside one loop
+iteration (non-matching iterations contribute exact ``0.0``), so the
+result is ``(stale + ins) − del`` bit-for-bit.
+
+The other half — delta-only rows (groups with no stale partner) and the
+final key sort — is cheap O(R + G) work and stays in XLA inside ops.py's
+single dispatch for BOTH paths.
+
+Padding contract: invalid stale rows carry key SENTINEL_KEY (never
+matches a group id) and zero values; padded group rows carry zero
+liveness.  Grid: (A, Vp/BLOCK_V, Rp/BLOCK_R, Gp/BLOCK_G) with the group
+axis innermost — each output block is revisited only across the
+sequential innermost dimension (safe accumulation).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK_R = 256  # stale rows per tile
+BLOCK_V = 128  # views (lanes) per tile
+BLOCK_G = 128  # delta groups per slab
+
+
+def _fleet_merge_kernel(skeys_ref, svals_ref, ivalid_ref, ivals_ref,
+                        dvalid_ref, dvals_ref, out_ref):
+    gk = pl.program_id(3)
+
+    @pl.when(gk == 0)
+    def _init():
+        out_ref[...] = svals_ref[...]
+
+    keys = skeys_ref[...]  # (BLOCK_R, BLOCK_V) int32
+    g0 = gk * BLOCK_G
+
+    def body(g, acc):
+        gabs = g0 + g
+        hit = (keys == gabs).astype(jnp.float32)      # (BLOCK_R, BLOCK_V)
+        iv = ivalid_ref[pl.ds(g, 1), :]               # (1, BLOCK_V)
+        dv = dvalid_ref[pl.ds(g, 1), :]
+        ival = ivals_ref[0, pl.ds(g, 1), :]
+        dval = dvals_ref[0, pl.ds(g, 1), :]
+        # exact executor float order: (stale + ins) − del — the one
+        # matching group applies both signs inside ONE iteration
+        acc = acc + hit * (iv * ival)
+        acc = acc - hit * (dv * dval)
+        return acc
+
+    out_ref[...] = jax.lax.fori_loop(0, BLOCK_G, body, out_ref[...])
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def fleet_merge_tiles(
+    skeys: jnp.ndarray,   # (Rp, Vp) int32, SENTINEL on invalid rows
+    svals: jnp.ndarray,   # (A, Rp, Vp) f32, zero on invalid rows
+    ivalid: jnp.ndarray,  # (Gp, Vp) f32 0/1
+    ivals: jnp.ndarray,   # (A, Gp, Vp) f32
+    dvalid: jnp.ndarray,  # (Gp, Vp) f32 0/1
+    dvals: jnp.ndarray,   # (A, Gp, Vp) f32
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """→ (A, Rp, Vp) f32 upserted stale aggregate panels."""
+    A, Rp, Vp = svals.shape
+    Gp = ivalid.shape[0]
+    grid = (A, Vp // BLOCK_V, Rp // BLOCK_R, Gp // BLOCK_G)
+    return pl.pallas_call(
+        _fleet_merge_kernel,
+        out_shape=jax.ShapeDtypeStruct((A, Rp, Vp), jnp.float32),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((BLOCK_R, BLOCK_V), lambda ai, vi, rj, gk: (rj, vi)),
+            pl.BlockSpec((1, BLOCK_R, BLOCK_V), lambda ai, vi, rj, gk: (ai, rj, vi)),
+            pl.BlockSpec((BLOCK_G, BLOCK_V), lambda ai, vi, rj, gk: (gk, vi)),
+            pl.BlockSpec((1, BLOCK_G, BLOCK_V), lambda ai, vi, rj, gk: (ai, gk, vi)),
+            pl.BlockSpec((BLOCK_G, BLOCK_V), lambda ai, vi, rj, gk: (gk, vi)),
+            pl.BlockSpec((1, BLOCK_G, BLOCK_V), lambda ai, vi, rj, gk: (ai, gk, vi)),
+        ],
+        out_specs=pl.BlockSpec(
+            (1, BLOCK_R, BLOCK_V), lambda ai, vi, rj, gk: (ai, rj, vi)
+        ),
+        interpret=interpret,
+    )(skeys, svals, ivalid, ivals, dvalid, dvals)

@@ -1,0 +1,120 @@
+"""Pure-jnp oracle for the fleet-wide merge remainder.
+
+After the fused delta aggregation (kernels/fused_clean), each scheduled
+view still owes its *merge remainder*: outer-join the delta view onto the
+stale sample on the group key and apply generalized projection — add the
+insert-side aggregates, subtract the delete-side ones (Example 1 /
+change-table IVM), keeping delta-only groups as new rows.  This op
+computes that remainder for EVERY view of a fleet panel at once over the
+padded ``(V, R)`` stale layout and dense ``(V, G)`` delta layouts.
+
+Row space of the output: ``R + G`` rows per view — the first ``R`` are
+the stale rows (keys preserved, aggregates upserted), the last ``G`` are
+delta-only groups (key ``g`` where a delta group has no stale partner).
+Float order is exactly the plan executor's generalized projection,
+``(stale + ins) − del`` per aggregate in f32, so valid rows are
+bit-equal to the per-view ``clean_sample`` path.
+
+Validity semantics (mirrors relational/ops.outer_join_unique):
+
+  * a stale row stays valid iff it was valid (its aggregates pick up the
+    matching delta groups; invalid rows emit clean SENTINEL/0 padding);
+  * a delta group emits its own row iff it is valid on either side and
+    NO valid stale row carries its key (delete-cancellation: a group
+    present only in the delete delta still emits ``0 − del``);
+  * everything else is padding: key SENTINEL_KEY, values 0, valid False.
+
+The oracle is the dumbest correct formulation (dense per-view gathers);
+kernel.py computes the same upsert tile-by-tile with views on the lane
+axis, and ops.py compiles this reference off-TPU.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.relational.relation import SENTINEL_KEY
+
+
+def delta_only_rows(
+    stale_keys: jnp.ndarray,   # (V, R) int32
+    stale_valid: jnp.ndarray,  # (V, R) bool
+    ins_valid: jnp.ndarray,    # (V, G) bool
+    ins_vals: jnp.ndarray,     # (V, G, A) f32
+    del_valid: jnp.ndarray,    # (V, G) bool
+    del_vals: jnp.ndarray,     # (V, G, A) f32
+):
+    """Rows for delta groups with no valid stale partner.
+
+    → (keys (V, G) i32, vals (V, G, A) f32, valid (V, G) bool).  Shared by
+    the oracle and the Pallas dispatch path (ops.py): the upsert half
+    differs per backend, this O(G) half does not.
+    """
+    stale_valid = stale_valid.astype(bool)
+    ins_valid = ins_valid.astype(bool)
+    del_valid = del_valid.astype(bool)
+    V, _ = stale_keys.shape
+    G = ins_valid.shape[1]
+
+    k = stale_keys.astype(jnp.int32)
+    in_range = stale_valid & (k >= 0) & (k < G)
+    kc = jnp.clip(k, 0, max(G - 1, 0))
+    present = jnp.zeros((V, G), jnp.float32)
+    present = present.at[jnp.arange(V)[:, None], kc].add(
+        in_range.astype(jnp.float32)
+    )
+    only = (ins_valid | del_valid) & ~(present > 0)
+    only_vals = (
+        jnp.where(ins_valid[..., None], ins_vals, 0.0)
+        - jnp.where(del_valid[..., None], del_vals, 0.0)
+    )
+    only_vals = jnp.where(only[..., None], only_vals, 0.0)
+    g_keys = jnp.broadcast_to(jnp.arange(G, dtype=jnp.int32)[None, :], (V, G))
+    only_keys = jnp.where(only, g_keys, SENTINEL_KEY)
+    return only_keys, only_vals, only
+
+
+def fleet_merge_ref(
+    stale_keys: jnp.ndarray,   # (V, R) int32 group keys (any value on invalid rows)
+    stale_valid: jnp.ndarray,  # (V, R) bool
+    stale_vals: jnp.ndarray,   # (V, R, A) f32 aggregate columns
+    ins_valid: jnp.ndarray,    # (V, G) bool: insert-side delta group liveness
+    ins_vals: jnp.ndarray,     # (V, G, A) f32 insert-side aggregates (dense key g)
+    del_valid: jnp.ndarray,    # (V, G) bool: delete-side delta group liveness
+    del_vals: jnp.ndarray,     # (V, G, A) f32 delete-side aggregates
+):
+    """→ (keys (V, R+G) i32, vals (V, R+G, A) f32, valid (V, R+G) bool)."""
+    stale_valid = stale_valid.astype(bool)
+    ins_valid = ins_valid.astype(bool)
+    del_valid = del_valid.astype(bool)
+    V, R = stale_keys.shape
+    G = ins_valid.shape[1]
+
+    k = stale_keys.astype(jnp.int32)
+    in_range = stale_valid & (k >= 0) & (k < G)
+    kc = jnp.clip(k, 0, max(G - 1, 0))
+
+    # -- stale rows: upsert matching delta groups -----------------------------
+    base = jnp.where(stale_valid[..., None], stale_vals, 0.0)
+    ins_hit = jnp.take_along_axis(ins_valid, kc, axis=1) & in_range
+    del_hit = jnp.take_along_axis(del_valid, kc, axis=1) & in_range
+    ins_add = jnp.where(
+        ins_hit[..., None], jnp.take_along_axis(ins_vals, kc[..., None], axis=1), 0.0
+    )
+    del_sub = jnp.where(
+        del_hit[..., None], jnp.take_along_axis(del_vals, kc[..., None], axis=1), 0.0
+    )
+    # the executor's exact float order: (stale + ins) − del
+    upd_vals = (base + ins_add) - del_sub
+    upd_keys = jnp.where(stale_valid, k, SENTINEL_KEY)
+
+    # -- delta-only rows: groups with no valid stale partner ------------------
+    only_keys, only_vals, only = delta_only_rows(
+        stale_keys, stale_valid, ins_valid, ins_vals, del_valid, del_vals
+    )
+
+    keys = jnp.concatenate([upd_keys, only_keys], axis=1)
+    vals = jnp.concatenate([upd_vals, only_vals], axis=1)
+    valid = jnp.concatenate([stale_valid, only], axis=1)
+    vals = jnp.where(valid[..., None], vals, 0.0)
+    return keys, vals, valid

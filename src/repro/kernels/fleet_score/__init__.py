@@ -2,7 +2,7 @@
 
 The budgeted maintenance control plane (repro.planner) stacks per-view
 moment/drift/traffic/cost features into one (V, N_FEATURES) panel and
-scores the whole fleet's {skip, clean, maintain} candidates in a single
+scores the whole fleet's {skip, clean, maintain, retune} candidates in a single
 jitted call — the §5.2.2 break-even analysis generalized from one query
 to a fleet-wide error-reduction-per-second objective.  Views live on the
 lane axis in the Pallas kernel; the XLA path compiles the same one-pass
@@ -13,11 +13,13 @@ from repro.kernels.fleet_score.ops import fleet_scores
 from repro.kernels.fleet_score.ref import (
     A_CLEAN,
     A_MAINTAIN,
+    A_RETUNE,
     A_SKIP,
     CORR_WINS,
     F_AGE,
     F_COST_CLEAN,
     F_COST_MAINTAIN,
+    F_COST_RETUNE,
     F_DRIFT_CLEAN,
     F_DRIFT_IVM,
     F_EX2,
@@ -41,11 +43,13 @@ from repro.kernels.fleet_score.ref import (
 __all__ = [
     "A_CLEAN",
     "A_MAINTAIN",
+    "A_RETUNE",
     "A_SKIP",
     "CORR_WINS",
     "F_AGE",
     "F_COST_CLEAN",
     "F_COST_MAINTAIN",
+    "F_COST_RETUNE",
     "F_DRIFT_CLEAN",
     "F_DRIFT_IVM",
     "F_EX2",

@@ -1,13 +1,15 @@
-"""Pallas kernel: score every view's {skip, clean, maintain} in one pass.
+"""Pallas kernel: score every view's {skip, clean, maintain, retune} in
+one pass.
 
 The feature matrix arrives TRANSPOSED — features on the sublane axis
 (padded to the f32 sublane multiple), views on the lane axis — so one
 (FEAT_ROWS, BLOCK_V) VMEM tile scores BLOCK_V views with pure VPU
 elementwise math: each feature is a 1-row static slice broadcast across
-the lane axis, and the five decision rows (skip/clean/maintain scores,
-the §5.2.2 CORR_WINS flip, and the REC_M sampling-ratio recommendation)
-stack into the (OUT_ROWS, BLOCK_V) output block.  Per-lane independence means no accumulation across grid steps —
-each lane tile writes its own output block exactly once.
+the lane axis, and the six decision rows (skip/clean/maintain/retune
+scores, the §5.2.2 CORR_WINS flip, and the REC_M sampling-ratio
+recommendation) stack into the (OUT_ROWS, BLOCK_V) output block.
+Per-lane independence means no accumulation across grid steps — each
+lane tile writes its own output block exactly once.
 
 Shapes: feats (FEAT_ROWS, Vp) f32 with Vp a multiple of BLOCK_V; out
 (OUT_ROWS, Vp) f32 with the row layout of ref.py's score columns (rows
@@ -26,6 +28,7 @@ from repro.kernels.fleet_score.ref import (
     COST_EPS,
     F_COST_CLEAN,
     F_COST_MAINTAIN,
+    F_COST_RETUNE,
     F_DRIFT_CLEAN,
     F_DRIFT_IVM,
     F_EX2,
@@ -58,6 +61,7 @@ def _fleet_score_kernel(f_ref, out_ref):
     d_clean, d_ivm = row(F_DRIFT_CLEAN), row(F_DRIFT_IVM)
     traffic = row(F_TRAFFIC)
     cost_c, cost_m = row(F_COST_CLEAN), row(F_COST_MAINTAIN)
+    cost_r = row(F_COST_RETUNE)
     m = row(F_M)
 
     e_now = jnp.minimum(ht_aqp, ht_corr)
@@ -79,9 +83,17 @@ def _fleet_score_kernel(f_ref, out_ref):
         jnp.where((rel_se < M_REL_LO) & (ht_aqp > 0.0), down, m),
     )
     rec_m = jnp.where(m > 0.0, rec_m, 0.0)
+    r_rec = (1.0 - rec_m) / jnp.maximum(rec_m, M_EPS)
+    ht_aqp_pred = r_rec * n * ex2
+    ht_corr_pred_rec = r_rec * ex2 * d_ivm
+    e_retune = jnp.minimum(ht_aqp_pred, ht_corr_pred_rec)
+    gain_retune = jnp.maximum(e_skip - e_retune, 0.0)
+    score_retune = traffic * gain_retune / jnp.maximum(cost_r, COST_EPS)
+    score_retune = jnp.where((rec_m != m) & (m > 0.0), score_retune, 0.0)
     zero = jnp.zeros_like(score_clean)
     out_ref[...] = jnp.concatenate(
-        [zero, score_clean, score_maintain, corr_wins, rec_m, zero, zero, zero],
+        [zero, score_clean, score_maintain, score_retune, corr_wins, rec_m,
+         zero, zero],
         axis=0,
     )
 

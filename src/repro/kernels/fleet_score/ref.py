@@ -43,15 +43,17 @@ F_COST_CLEAN = 8   # predicted svc_refresh seconds (EWMA)
 F_COST_MAINTAIN = 9  # predicted maintain seconds (EWMA)
 F_AGE = 10         # seconds since the last full maintenance
 F_M = 11           # sampling rate m
-N_FEATURES = 12
+F_COST_RETUNE = 12  # predicted retune-then-clean seconds (EWMA)
+N_FEATURES = 13
 
 # output columns of the (V, N_SCORES) result
 A_SKIP = 0
 A_CLEAN = 1
 A_MAINTAIN = 2
-CORR_WINS = 3
-REC_M = 4  # recommended sampling ratio (clamped step from the current m)
-N_SCORES = 5
+A_RETUNE = 3  # retune the sampling ratio to REC_M, then clean
+CORR_WINS = 4
+REC_M = 5  # recommended sampling ratio (clamped step from the current m)
+N_SCORES = 6
 
 COST_EPS = 1e-6  # floor for the cost divisors (degenerate EWMA seeds)
 M_EPS = 1e-6     # floor for the sampling-rate divisor
@@ -82,6 +84,7 @@ def fleet_score_ref(feats: jnp.ndarray) -> jnp.ndarray:
     traffic = feats[:, F_TRAFFIC]
     cost_c = feats[:, F_COST_CLEAN]
     cost_m = feats[:, F_COST_MAINTAIN]
+    cost_r = feats[:, F_COST_RETUNE]
     m = feats[:, F_M]
 
     e_now = jnp.minimum(ht_aqp, ht_corr)
@@ -117,8 +120,22 @@ def fleet_score_ref(feats: jnp.ndarray) -> jnp.ndarray:
         jnp.where((rel_se < M_REL_LO) & (ht_aqp > 0.0), down, m),
     )
     rec_m = jnp.where(m > 0.0, rec_m, 0.0)
+    # retune action: step the ratio to rec_m, re-derive the sample pair,
+    # and clean — priced at the retune cost EWMA.  The post-retune error
+    # scales both estimator variances to the recommended ratio's
+    # (1−m')/m' HT factor (§5.2.1): AQP's over the view's own second
+    # moment, CORR's over the remaining IVM drift.  Gated to zero when
+    # the recommendation IS the current ratio (rec_m is exactly m, m·STEP
+    # or m/STEP, so float equality is exact) — no spurious retunes.
+    r_rec = (1.0 - rec_m) / jnp.maximum(rec_m, M_EPS)
+    ht_aqp_pred = r_rec * n * ex2
+    ht_corr_pred_rec = r_rec * ex2 * d_ivm
+    e_retune = jnp.minimum(ht_aqp_pred, ht_corr_pred_rec)
+    gain_retune = jnp.maximum(e_skip - e_retune, 0.0)
+    score_retune = traffic * gain_retune / jnp.maximum(cost_r, COST_EPS)
+    score_retune = jnp.where((rec_m != m) & (m > 0.0), score_retune, 0.0)
     return jnp.stack(
-        [jnp.zeros_like(score_clean), score_clean, score_maintain, corr_wins,
-         rec_m],
+        [jnp.zeros_like(score_clean), score_clean, score_maintain,
+         score_retune, corr_wins, rec_m],
         axis=1,
     )

@@ -52,6 +52,7 @@ from repro.kernels.fleet_score import (
     F_AGE,
     F_COST_CLEAN,
     F_COST_MAINTAIN,
+    F_COST_RETUNE,
     F_DRIFT_CLEAN,
     F_DRIFT_IVM,
     F_EX2,
@@ -69,6 +70,10 @@ DEFAULT_REFRESH_S = 0.05
 DEFAULT_MAINTAIN_S = 0.25
 # a never-maintained view falls back to this clean-to-maintain cost ratio
 MAINTAIN_OVER_REFRESH_SEED = 4.0
+# a never-retuned view prices a retune-then-clean at this multiple of a
+# plain clean (the retune re-derives BOTH samples from the materialized
+# view before cleaning — strictly more work than the clean alone)
+RETUNE_OVER_REFRESH_SEED = 2.0
 
 
 # canonical_query moved to repro.views.panel (the fleet panel derives its
@@ -82,6 +87,7 @@ class ViewCostStats:
 
     refresh_s: float
     maintain_s: float
+    retune_s: float
     traffic: float
     last_maintain_t: float
     snapshot_version: int = -1
@@ -128,11 +134,13 @@ class CostModel:
             # cleans at the full-maintenance cost
             r_seed = float(mv.refresh_s) if mv.refresh_s > 0 else 0.0
             m_seed = float(mv.ivm_s) if mv.ivm_s > 0 else 0.0
+            refresh = r_seed or self.default_refresh_s
             st = ViewCostStats(
-                refresh_s=r_seed or self.default_refresh_s,
+                refresh_s=refresh,
                 maintain_s=(m_seed
                             or r_seed * MAINTAIN_OVER_REFRESH_SEED
                             or self.default_maintain_s),
+                retune_s=refresh * RETUNE_OVER_REFRESH_SEED,
                 traffic=1.0,
                 last_maintain_t=self._clock(),
             )
@@ -154,6 +162,14 @@ class CostModel:
             st.maintain_s = self._ewma(st.maintain_s, float(dt))
         st.last_maintain_t = self._clock()
 
+    def observe_retune(self, name: str, dt: float) -> None:
+        """A retune-then-clean's wall time prices FUTURE retunes, not plain
+        cleans — folding it into refresh_s would inflate every clean score
+        after each ratio step."""
+        st = self._stat(name)
+        if not self.frozen:
+            st.retune_s = self._ewma(st.retune_s, float(dt))
+
     def observe_traffic(self, name: str, n_queries: int) -> None:
         self._stat(name).traffic += float(n_queries)
 
@@ -165,15 +181,20 @@ class CostModel:
         for st in self.stats.values():
             st.traffic *= factor
 
-    def pin_costs(self, refresh_s: float, maintain_s: float) -> None:
+    def pin_costs(self, refresh_s: float, maintain_s: float,
+                  retune_s: Optional[float] = None) -> None:
         """Fix every view's action prices (deterministic tests, equal-price
-        policy A/Bs); observed wall times stop moving the EWMAs."""
+        policy A/Bs); observed wall times stop moving the EWMAs.
+        ``retune_s`` defaults to refresh × RETUNE_OVER_REFRESH_SEED."""
         self.default_refresh_s = float(refresh_s)
         self.default_maintain_s = float(maintain_s)
+        rt = (float(retune_s) if retune_s is not None
+              else float(refresh_s) * RETUNE_OVER_REFRESH_SEED)
         for name in self.vm.views:
             st = self._stat(name)
             st.refresh_s = float(refresh_s)
             st.maintain_s = float(maintain_s)
+            st.retune_s = rt
         self.frozen = True
 
     # -- moment snapshots ----------------------------------------------------
@@ -246,6 +267,7 @@ class CostModel:
             out[i, F_TRAFFIC] = st.traffic
             out[i, F_COST_CLEAN] = st.refresh_s
             out[i, F_COST_MAINTAIN] = st.maintain_s
+            out[i, F_COST_RETUNE] = st.retune_s
             out[i, F_AGE] = now - st.last_maintain_t
             out[i, F_M] = mv.m
         if not np.all(np.isfinite(out)):

@@ -3,10 +3,20 @@
 ``MaintenancePlanner.step()`` is the control-plane epoch: score the fleet
 (one compiled kernels/fleet_score call), pick the best-scoring actions
 whose predicted cost fits the per-epoch time budget, then execute them —
-``svc_refresh`` for *clean*, full ``maintain`` for *maintain* — feeding
-the observed wall times back into the cost EWMAs.  Views the budget cannot
-reach serve stale this epoch, exactly the per-view generalization of the
-paper's per-query clean-vs-maintain economics (§5.2.2 / Fig 6).
+``svc_refresh_many`` for *clean* and *retune* (step the sampling ratio to
+the scorer's REC_M, re-derive the sample pair, then clean), full
+``maintain`` for *maintain* — feeding the observed wall times back into
+the cost EWMAs.  Views the budget cannot reach serve stale this epoch,
+exactly the per-view generalization of the paper's per-query
+clean-vs-maintain economics (§5.2.2 / Fig 6).
+
+With ``adapt_m``, a view whose recommendation differs from its current
+ratio swaps its *clean* candidate for a *retune* candidate priced at the
+retune EWMA (a retune re-derives both samples — strictly more work than
+the clean it replaces, and PR 5 used to hide that cost inside the clean
+price).  Recommendations are armed onto views only when their retune
+action actually wins the knapsack, so a plain clean never silently pays
+for a ratio step.
 
 The **starvation guard** bounds how long "serve stale" can win: a view
 whose full-maintenance age exceeds ``age_cap_s`` while it still carries
@@ -22,7 +32,7 @@ import dataclasses
 import time
 from typing import Callable, Dict, List, Optional
 
-from repro.kernels.fleet_score import A_CLEAN, A_MAINTAIN
+from repro.kernels.fleet_score import A_CLEAN, A_MAINTAIN, A_RETUNE
 from repro.planner.costs import CostModel
 from repro.planner.score import FleetScores, score_fleet
 
@@ -32,7 +42,7 @@ COST_FIT_EPS = 1e-9  # float slack when charging predicted costs
 @dataclasses.dataclass
 class PlannedAction:
     view: str
-    action: str  # "clean" | "maintain"
+    action: str  # "clean" | "maintain" | "retune"
     score: float
     predicted_s: float
     forced: bool = False  # starvation guard, not knapsack
@@ -77,7 +87,7 @@ class PlanReport:
 
 
 class MaintenancePlanner:
-    """Cost-model-driven clean/maintain/serve-stale scheduler for a fleet."""
+    """Cost-model-driven clean/retune/maintain/serve-stale scheduler."""
 
     def __init__(
         self,
@@ -137,7 +147,17 @@ class MaintenancePlanner:
             if name in chosen:
                 continue
             st = self.cost_model._stat(name)
-            cands.append((float(fs.scores[i, A_CLEAN]), name, "clean", st.refresh_s))
+            rm = rec_m.get(name, 0.0)
+            if self.adapt_m and rm > 0.0 and rm != self.vm.views[name].m:
+                # the scorer wants a ratio step: the view's clean slot
+                # BECOMES a retune (ratio step + sample re-derivation +
+                # clean), priced at the retune EWMA — rec_m is an exact
+                # clamped step from m, so float inequality is a safe gate
+                cands.append((float(fs.scores[i, A_RETUNE]), name, "retune",
+                              st.retune_s))
+            else:
+                cands.append((float(fs.scores[i, A_CLEAN]), name, "clean",
+                              st.refresh_s))
             cands.append((float(fs.scores[i, A_MAINTAIN]), name, "maintain", st.maintain_s))
         cands.sort(key=lambda c: (-c[0], c[1], c[2]))
         for score, name, action, cost in cands:
@@ -175,11 +195,16 @@ class MaintenancePlanner:
         if not execute:
             return report
         if self.adapt_m:
-            # applying a recommendation is an executing effect: only a real
-            # epoch arms the views' ratios (plan() stays a pure preview)
-            for name, rm in report.recommended_m.items():
+            # arming a ratio is an executing effect (plan() stays a pure
+            # preview), and only a scheduled retune pays the retune price:
+            # recommendations ride onto a view iff its retune action won
+            # the knapsack, so a chosen clean stays a plain clean
+            for act in report.actions:
+                if act.action != "retune":
+                    continue
+                rm = report.recommended_m.get(act.view, 0.0)
                 if rm > 0.0:
-                    self.vm.views[name].recommended_m = rm
+                    self.vm.views[act.view].recommended_m = rm
         t0 = time.perf_counter()
         cleans = [a for a in report.actions if a.action != "maintain"]
         for act in report.actions:

@@ -17,6 +17,7 @@ import numpy as np
 from repro.kernels.fleet_score import (
     A_CLEAN,
     A_MAINTAIN,
+    A_RETUNE,
     A_SKIP,
     CORR_WINS,
     REC_M,
@@ -35,7 +36,8 @@ class FleetScores:
 
     def score(self, name: str, action: str) -> float:
         i = self.names.index(name)
-        col = {"skip": A_SKIP, "clean": A_CLEAN, "maintain": A_MAINTAIN}[action]
+        col = {"skip": A_SKIP, "clean": A_CLEAN, "maintain": A_MAINTAIN,
+               "retune": A_RETUNE}[action]
         return float(self.scores[i, col])
 
     def corr_wins(self) -> Dict[str, bool]:

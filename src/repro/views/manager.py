@@ -87,6 +87,10 @@ class ManagedView:
     # bumped whenever either sample moves (planner moment-snapshot and
     # fleet-panel slot staleness)
     sample_version: int = 0
+    # bumped only when the STALE sample is re-derived (maintain, sample-
+    # ratio retune, pin refresh) — cleans leave it alone, so the fleet
+    # panel's merge slots stay warm across clean-only epochs
+    stale_version: int = 0
     # planner-recommended sampling ratio (fleet scorer REC_M); applied by
     # svc_refresh only when ViewManager.adaptive_m is opted in
     recommended_m: Optional[float] = None
@@ -218,6 +222,7 @@ class ViewManager:
         )
         mv.clean_sample = mv.stale_sample
         mv.corr_cache = None
+        mv.stale_version += 1
         self._bump_sample_version(mv)
 
     # -- delta ingestion -----------------------------------------------------
@@ -333,7 +338,8 @@ class ViewManager:
 
     # -- SVC: clean the samples only (cheap, between maintenance periods) ----
     def svc_refresh(self, view_name: str, fused: Optional[bool] = None,
-                    _precomputed=None, _extra_s: float = 0.0) -> float:
+                    _precomputed=None, _extra_s: float = 0.0,
+                    _retuned: bool = False) -> float:
         """Clean the view's sample from the pending deltas (Problem 1).
 
         ``fused`` routes the delta aggregation through the single-pass
@@ -341,14 +347,18 @@ class ViewManager:
         plan executor when the plan shape does not qualify).  With the
         opt-in ``adaptive_m`` flag, a planner-recommended sampling ratio
         (``ManagedView.recommended_m``) is applied first.  ``_precomputed``/
-        ``_extra_s`` are the ``svc_refresh_many`` internals: already-batched
-        fused delta aggregations and this view's share of the batched
-        dispatch wall time."""
+        ``_extra_s``/``_retuned`` are the ``svc_refresh_many`` internals:
+        already-batched fused delta aggregations, this view's share of the
+        batched dispatch wall time, and whether the batched path already
+        retuned the ratio (so the cost model files the wall time under
+        retune, not refresh)."""
         mv = self.views[view_name]
+        retuned = bool(_retuned)
         t0 = time.perf_counter()  # a retune below is part of the clean's cost
         if (self.adaptive_m and mv.recommended_m is not None
                 and abs(mv.recommended_m - mv.m) > 1e-9):
             self._retune_sample_ratio(mv, mv.recommended_m)
+            retuned = True
         if mv.outlier_index is not None:
             self._flush_outlier_offers(mv)
             self._refresh_pin_keys_only(mv)
@@ -382,7 +392,10 @@ class ViewManager:
         for b in mv.delta_bases:  # the clean sample now reflects all deltas
             mv.cleaned_rows[b] = self.ingested_rows.get(b, 0)
         if self.cost_model is not None:
-            self.cost_model.observe_refresh(view_name, dt)
+            if retuned:
+                self.cost_model.observe_retune(view_name, dt)
+            else:
+                self.cost_model.observe_refresh(view_name, dt)
         return dt
 
     def _retune_sample_ratio(self, mv: ManagedView, new_m: float) -> None:
@@ -419,37 +432,47 @@ class ViewManager:
         mv.clean_sample = mv.stale_sample
         mv.corr_cache = None
         mv.recommended_m = None
+        mv.stale_version += 1
         self._bump_sample_version(mv)
 
     def svc_refresh_many(self, names: Sequence[str],
                          fused: Optional[bool] = None) -> Dict[str, float]:
-        """Refresh several views' samples as one epoch-level dispatch.
+        """Refresh several views' samples as ONE compiled epoch pass.
 
-        The expensive stage of each qualifying clean — the η-filtered
-        delta group-by — is batched across every view that shares the
-        canonical fused plan shape (same delta arena capacity and value-
-        column count) into ONE compiled kernels/fused_clean fleet pass
-        with per-view seeds/ratios, instead of V sequential dispatches;
-        each view then runs only its small merge remainder (one compiled
-        shape shared by the group).  Views that do not qualify (outlier
-        pins, non-canonical plans, unbounded key domains, ``fused=False``)
-        fall back to plain per-view ``svc_refresh``.  Returns per-view
-        wall seconds (each member carries its share of the batched
-        dispatch)."""
+        Every qualifying clean runs end-to-end through two fleet
+        dispatches: the η-filtered delta group-bys batch across views in
+        ONE kernels/fused_clean fleet pass (per-view seeds/ratios), and
+        the merge remainders — upserting those dense deltas into the
+        panel-backed stale samples with delete-cancellation — batch into
+        ONE kernels/fleet_merge dispatch via
+        ``core.maintenance.fleet_clean_merge``.  No per-view merge plan
+        executes; per-view work after the dispatch is slicing the sorted
+        rows into each view's sample arena.  A view qualifies when it is
+        pin-free with a single int group key and its cleaning plan reduces
+        to 1–2 canonical fused specs (insert side, plus the delete side
+        for ``with_deletes`` strategies).  Views that do not qualify
+        (outlier pins, composite keys, non-canonical plans, unbounded key
+        domains, ``fused=False``) fall back to per-view ``svc_refresh``,
+        reusing any side that did aggregate on the batched path.  Returns
+        per-view wall seconds (each member carries its share of the
+        batched dispatches)."""
         from repro.core.maintenance import (
             _FUSED_DEFAULT,
+            _MergeJob,
             cleaning_plan,
             collect_fused_specs,
             delta_env,
-            fleet_eval_fused_groupbys,
+            fleet_clean_merge,
         )
 
         names = list(names)
         out: Dict[str, float] = {}
         do_fused = _FUSED_DEFAULT if fused is None else bool(fused)
-        candidates = []
+        jobs: List[object] = []
         retune_s: Dict[str, float] = {}
+        retuned: set = set()
         if do_fused and len(names) > 1:
+            panel = self.fleet_panel()
             for name in names:
                 mv = self.views[name]
                 if mv.outlier_index is not None or mv.outlier_pin is not None:
@@ -459,29 +482,95 @@ class ViewManager:
                     tr = time.perf_counter()  # charge the retune to this view
                     self._retune_sample_ratio(mv, mv.recommended_m)
                     retune_s[name] = time.perf_counter() - tr
+                    retuned.add(name)
+                if len(mv.view.pk) != 1:
+                    continue
                 plan = cleaning_plan(
                     mv.sampled_strategy, mv.view.pk, mv.m, mv.seed
                 )
                 env = delta_env(mv.view.name, mv.stale_sample, self._deltas_for(mv))
                 env.update(self.base)
                 specs = collect_fused_specs(plan, env)
-                if len(specs) == 1 and specs[0].dim_name is None \
-                        and specs[0].pin_name is None:
-                    candidates.append((name, env, specs[0]))
+                # the merge remainder is bypassed wholesale, so EVERY delta
+                # layer of the strategy must have fused: insert-only plans
+                # yield exactly [ins]; with_deletes plans exactly [ins, del]
+                # (collect order is the OuterJoin nesting order)
+                has_del = any(
+                    leaf.name.endswith(DEL) for leaf in plan_leaves(mv.strategy)
+                )
+                want = 2 if has_del else 1
+                if len(specs) != want:
+                    continue
+                if any(s.dim_name is not None or s.pin_name is not None
+                       or s.key != mv.view.pk[0] for s in specs):
+                    continue
+                if not specs[0].fact_name.endswith(INS):
+                    continue
+                if has_del and not specs[1].fact_name.endswith(DEL):
+                    continue
+                agg_cols = tuple(o for o, _fn, _v in specs[0].node.aggs)
+                skeys, svalid, svals = panel.merge_slot(
+                    name, mv.view.pk[0], agg_cols
+                )
+                jobs.append(_MergeJob(
+                    name=name,
+                    key=mv.view.pk[0],
+                    agg_cols=agg_cols,
+                    col_dtypes={
+                        c: mv.stale_sample.col(c).dtype
+                        for c in mv.stale_sample.schema.columns
+                    },
+                    stale_keys=skeys,
+                    stale_valid=svalid,
+                    stale_vals=svals,
+                    ins=(env[specs[0].fact_name], specs[0]),
+                    dele=(env[specs[1].fact_name], specs[1]) if has_del else None,
+                    out_capacity=mv.sample_capacity,
+                ))
         t0 = time.perf_counter()
-        precomputed = fleet_eval_fused_groupbys(candidates) if candidates else {}
+        merged, precomputed = fleet_clean_merge(jobs) if jobs else ({}, {})
+        for rel in merged.values():
+            jnp.asarray(rel.valid).block_until_ready()
         share = (
-            (time.perf_counter() - t0) / max(len(precomputed), 1)
-            if precomputed else 0.0
+            (time.perf_counter() - t0) / max(len(merged), 1)
+            if merged else 0.0
         )
         for name in names:
-            extra = share if name in precomputed else 0.0
-            out[name] = self.svc_refresh(
-                name, fused=fused,
-                _precomputed=precomputed.get(name),
-                _extra_s=extra + retune_s.get(name, 0.0),
-            )
+            if name in merged:
+                out[name] = self._finish_batched_refresh(
+                    name, merged[name],
+                    share + retune_s.get(name, 0.0), name in retuned,
+                )
+            else:
+                out[name] = self.svc_refresh(
+                    name, fused=fused,
+                    _precomputed=precomputed.get(name),
+                    _extra_s=retune_s.get(name, 0.0),
+                    _retuned=name in retuned,
+                )
         return out
+
+    def _finish_batched_refresh(self, view_name: str, rel: Relation,
+                                dt: float, retuned: bool) -> float:
+        """Install one fleet-merged clean sample: the same bookkeeping tail
+        ``svc_refresh`` runs (flag, cache drop, version bump, watermarks,
+        cost-model observation), minus the plan execution the fleet
+        dispatch already did."""
+        mv = self.views[view_name]
+        mv.clean_sample = flag_outliers(rel, mv.outlier_pin)
+        mv.stale_sample = flag_outliers(mv.stale_sample, mv.outlier_pin)
+        mv.corr_cache = None  # samples moved: new correspondence window
+        mv.maintenance_s = dt
+        mv.refresh_s = dt
+        self._bump_sample_version(mv)
+        for b in mv.delta_bases:  # the clean sample now reflects all deltas
+            mv.cleaned_rows[b] = self.ingested_rows.get(b, 0)
+        if self.cost_model is not None:
+            if retuned:
+                self.cost_model.observe_retune(view_name, dt)
+            else:
+                self.cost_model.observe_refresh(view_name, dt)
+        return dt
 
     def _refresh_pin_keys_only(self, mv: ManagedView) -> None:
         idx = mv.outlier_index
@@ -538,6 +627,7 @@ class ViewManager:
         mv.stale_since_ivm = False
         mv.maintenance_s = dt
         mv.ivm_s = dt
+        mv.stale_version += 1
         self._bump_sample_version(mv)
         mv.applied_seg = hi
         for b in mv.delta_bases:
@@ -728,20 +818,47 @@ def _concat_many(rels: List[Relation]) -> Relation:
 
     Capacity is sized by the VALID row count (next pow2, ≥4096), so a
     steady ingest stream keeps one stable shape → the compiled cleaning
-    plan is reused across refreshes instead of retracing every step.  A
-    single segment passes through unchanged (the common fresh-window
-    case), and the merge is one concatenate + compact regardless of
-    segment count — not a pairwise fold."""
-    if len(rels) == 1:
-        return rels[0]
+    plan is reused across refreshes instead of retracing every step.
+    Single segments ride the SAME arena: passing them through at their
+    raw ingest shape used to hand the per-view jitted plans a second
+    shape family (raw segment vs merged arena), doubling the compile
+    churn the bucket exists to avoid.
+
+    The merge itself runs on HOST numpy: segment row counts vary batch
+    to batch, and eagerly concatenating/compacting them with jnp ops
+    compiled a fresh set of tiny executables for every new raw shape —
+    hundreds of milliseconds of XLA churn per epoch for a few hundred
+    rows of actual data.  Selecting valid rows, sorting by key
+    (``compact``'s stable valid-first lexsort, reproduced with
+    ``np.lexsort``), and padding to the arena are all O(rows) host work
+    with zero compile footprint; one ``jnp.asarray`` per column ships
+    the finished arena to the device."""
+    from repro.relational.relation import SENTINEL_KEY
+
     schema = rels[0].schema
-    cols = {c: jnp.concatenate([r.col(c) for r in rels]) for c in schema.columns}
-    valid = jnp.concatenate([r.valid for r in rels])
-    merged = Relation(cols, valid, schema)
-    n_valid = int(np.asarray(valid).sum())  # host sync per refresh window
+    masks = [np.asarray(r.valid) for r in rels]
+    n_valid = int(sum(m.sum() for m in masks))
     cap = _next_pow2(max(n_valid, 4096))
-    from repro.relational.relation import compact as _compact
-    return _compact(merged, cap)
+    if len(rels) == 1 and rels[0].valid.shape[0] == cap:
+        return rels[0]
+    bodies = {
+        c: np.concatenate([np.asarray(r.col(c))[m] for r, m in zip(rels, masks)])
+        for c in schema.columns
+    }
+    # stable sort by composite pk (primary key first) — the same order
+    # compact() yields, so batched and per-view consumers see identical
+    # row order (float accumulation order is part of the bit-equality
+    # contract between the fleet and sequential clean paths)
+    order = np.lexsort(tuple(reversed([bodies[k] for k in schema.pk])))
+    cols = {}
+    for c in schema.columns:
+        fill = SENTINEL_KEY if c in schema.pk else 0
+        arena = np.full((cap,), fill, dtype=bodies[c].dtype)
+        arena[:n_valid] = bodies[c][order]
+        cols[c] = jnp.asarray(arena)
+    valid = np.zeros((cap,), dtype=bool)
+    valid[:n_valid] = True
+    return Relation(cols, jnp.asarray(valid), schema)
 
 
 def _next_pow2(n: int) -> int:

@@ -38,7 +38,7 @@ import numpy as np
 from repro.core.estimators import OUTLIER_COL, Query
 from repro.query.engine import _gather_side, _rows_only
 from repro.relational import ops
-from repro.relational.relation import Relation, next_pow2
+from repro.relational.relation import Relation, SENTINEL_KEY, next_pow2
 
 N_CHANNELS = 8  # x/valid/w/ompi per side
 
@@ -106,6 +106,29 @@ def _slot_from_cache(xn, vn, wn, on, xo, vo, wo, oo,
     return jnp.pad(chan, ((0, 0), (0, pad_rows - chan.shape[1])))
 
 
+@functools.partial(jax.jit, static_argnames=("key", "cols", "pad_rows"))
+def _merge_slot(stale: Relation, key: str, cols: Tuple[str, ...], pad_rows: int):
+    """One view's stale sample as fleet_merge panel rows.
+
+    → (keys (pad_rows,) i32 SENTINEL on invalid, valid (pad_rows,) bool,
+    vals (pad_rows, len(cols)) f32 zeroed on invalid) — the per-view slice
+    of the kernels/fleet_merge stale panel.  Compiled once per capacity
+    bucket × column tuple, shared by every view with that shape.
+    """
+    v = stale.valid
+    k = jnp.where(v, stale.col(key).astype(jnp.int32), SENTINEL_KEY)
+    vals = (
+        jnp.stack([stale.col(c).astype(jnp.float32) for c in cols], axis=1)
+        if cols else jnp.zeros((stale.capacity, 0), jnp.float32)
+    )
+    vals = jnp.where(v[:, None], vals, 0.0)
+    pad = pad_rows - k.shape[0]
+    k = jnp.pad(k, (0, pad), constant_values=SENTINEL_KEY)
+    v = jnp.pad(v, (0, pad))
+    vals = jnp.pad(vals, ((0, pad), (0, 0)))
+    return k, v, vals
+
+
 class FleetPanel:
     """Stacked per-view channel slots + the compiled fleet moment pass."""
 
@@ -116,11 +139,21 @@ class FleetPanel:
         self._versions: Dict[str, int] = {}
         self._stacked: Optional[Tuple[jnp.ndarray, ...]] = None
         self._stacked_names: Optional[Tuple[str, ...]] = None
+        # merge slots: the stale-sample panels feeding kernels/fleet_merge.
+        # Cached separately from the moment slots because their lifetimes
+        # differ — see merge_slot's invalidation contract.
+        self.merge_pad_rows = 0
+        self._merge_slots: Dict[str, Tuple[tuple, tuple]] = {}
 
     # -- invalidation --------------------------------------------------------
     def invalidate(self, name: str) -> None:
-        """Drop one view's slot (ViewManager calls this from svc_refresh /
-        maintain; version tracking would catch it lazily anyway)."""
+        """Drop one view's moment slot (ViewManager calls this from
+        svc_refresh / maintain; version tracking would catch it lazily
+        anyway).  Merge slots are intentionally NOT dropped here: they
+        derive from the STALE sample only and self-invalidate via
+        ``ManagedView.stale_version``, so a clean — which bumps
+        ``sample_version`` but leaves the stale sample untouched — keeps
+        them warm across epochs."""
         self._slots.pop(name, None)
         self._versions.pop(name, None)
         self._stacked = None
@@ -162,6 +195,35 @@ class FleetPanel:
         return _slot_from_samples(
             mv.clean_sample, mv.stale_sample, q.col, mv.m, self.pad_rows
         )
+
+    # -- merge slots ---------------------------------------------------------
+    def merge_slot(self, name: str, key: str, cols: Sequence[str]):
+        """The view's stale sample as (keys, valid, vals) fleet_merge rows.
+
+        Invalidation contract: merge slots key on
+        ``ManagedView.stale_version`` — bumped wherever the stale sample is
+        re-derived (maintain, sample-ratio retune, pin refresh) and NOT by
+        cleans, which only replace the clean sample.  A fleet that cleans
+        every epoch but maintains rarely therefore pays the slot build once
+        and reuses it epoch after epoch.  ``pad_rows`` is one pow2 bucket
+        over the fleet's largest stale capacity, so all slots stack into a
+        single (V, Rp) panel and the merge kernel never retraces.
+        """
+        views = self.vm.views
+        target = next_pow2(
+            max((mv.stale_sample.capacity for mv in views.values()), default=1)
+        )
+        if target != self.merge_pad_rows:  # capacity bucket moved
+            self.merge_pad_rows = target
+            self._merge_slots.clear()
+        mv = views[name]
+        tag = (mv.stale_version, key, tuple(cols))
+        hit = self._merge_slots.get(name)
+        if hit is not None and hit[0] == tag:
+            return hit[1]
+        slot = _merge_slot(mv.stale_sample, key, tuple(cols), self.merge_pad_rows)
+        self._merge_slots[name] = (tag, slot)
+        return slot
 
     # -- accessors -----------------------------------------------------------
     def channels(self, names: Optional[Sequence[str]] = None) -> Tuple[jnp.ndarray, ...]:

@@ -324,3 +324,179 @@ def test_svc_refresh_many_mixed_shapes_and_outliers_fall_back():
                 a[col][order_a], b[col][order_b], rtol=1e-6, atol=1e-4,
                 err_msg=f"{name}:{col}",
             )
+
+
+# ---------------------------------------------------------------------------
+# Differential fleet harness: svc_refresh_many ≡ sequential svc_refresh
+# ---------------------------------------------------------------------------
+#
+# The batched epoch path (fleet_clean_merge → ONE kernels/fleet_merge
+# dispatch) must be indistinguishable from running svc_refresh view by
+# view: group keys and count aggregates agree exactly, float sums to the
+# fused-aggregation stage's documented tolerance (the batched delta
+# aggregation reduces in a different lane order than the per-view kernel).
+
+from tests._hypothesis_compat import given, settings, st
+
+EXACT_COLS = ("videoId", "visits", "g", "n")
+
+
+def _assert_fleet_equiv(vm_a, vm_b):
+    for name in vm_a.views:
+        key = vm_a.views[name].view.pk[0]
+        a = to_host(vm_a.views[name].clean_sample)
+        b = to_host(vm_b.views[name].clean_sample)
+        oa = np.argsort(a[key], kind="stable")
+        ob = np.argsort(b[key], kind="stable")
+        for col in a:
+            va, vb = a[col][oa], b[col][ob]
+            if col in EXACT_COLS or np.issubdtype(va.dtype, np.integer):
+                np.testing.assert_array_equal(va, vb, err_msg=f"{name}:{col}")
+            else:
+                np.testing.assert_allclose(va, vb, rtol=1e-6, atol=1e-4,
+                                           err_msg=f"{name}:{col}")
+        assert vm_a.drift_rows(name, since="clean") == 0
+        assert vm_b.drift_rows(name, since="clean") == 0
+
+
+def _diff_refresh(make_fleet):
+    """Build twin fleets, refresh one batched / one sequential, diff."""
+    vm_a, vm_b = make_fleet(), make_fleet()
+    dts = vm_a.svc_refresh_many(list(vm_a.views))
+    for name in vm_b.views:
+        vm_b.svc_refresh(name)
+    assert set(dts) == set(vm_a.views)
+    _assert_fleet_equiv(vm_a, vm_b)
+    return vm_a, vm_b
+
+
+def test_differential_empty_delta_windows():
+    """Views whose delta window is EMPTY ride the same epoch batch as
+    drifting siblings: the no-op merge must not perturb their samples."""
+    def make():
+        vm, _ = _uniform_fleet(4, seed=31)
+        d_rng = np.random.default_rng(41)
+        for i in (1, 3):  # v0 and v2 have nothing pending
+            vm.ingest(f"Log{i}", inserts=_delta_rel(5000, 90, 32, d_rng))
+        return vm
+
+    _diff_refresh(make)
+
+
+def test_differential_duplicate_group_keys():
+    """Micro-batches hammering a tiny key set (every delta row a duplicate
+    of a group already in the stale sample) upsert identically."""
+    def make():
+        rng = np.random.default_rng(51)
+        vm = ViewManager()
+        for i in range(3):
+            _register(vm, i, base_rows=300, groups=4, rng=rng)
+        d_rng = np.random.default_rng(52)
+        for i in range(3):
+            vm.ingest(f"Log{i}", inserts=_delta_rel(5000, 200, 4, d_rng))
+        return vm
+
+    _diff_refresh(make)
+
+
+def _deletes_fleet(n_views, seed, delete_only):
+    """with_deletes change-table views; micro-batches that are ALL deletes
+    when ``delete_only`` (delete-cancellation down the merge kernel)."""
+    from repro.relational.plan import GroupByNode, Scan
+
+    rng = np.random.default_rng(seed)
+    vm = ViewManager()
+    for i in range(n_views):
+        base = f"Log{i}"
+        vm.register_base(base, _base_rel(400, 16, rng))
+        plan = GroupByNode(
+            child=Scan(base, pk=("sessionId",)), keys=("videoId",),
+            aggs=(("totalBytes", "sum", "bytes"), ("visits", "count", None)),
+            num_groups=32,
+        )
+        vm.register_view(ViewDef(f"v{i}", plan), delta_bases=(base,), m=0.25,
+                         seed=i, delta_group_capacity=32, with_deletes=True)
+    d_rng = np.random.default_rng(seed + 1)
+    for i in range(n_views):
+        base_rows = to_host(vm.base[f"Log{i}"])
+        pick = d_rng.choice(base_rows["sessionId"].size, 60, replace=False)
+        dels = from_columns({k: v[pick] for k, v in base_rows.items()},
+                            pk=["sessionId"])
+        ins = (None if delete_only
+               else _delta_rel(5000, 80, 16, d_rng))
+        vm.ingest(f"Log{i}", inserts=ins, deletes=dels)
+    return vm
+
+
+@pytest.mark.parametrize("delete_only", [True, False])
+def test_differential_all_delete_microbatches(delete_only):
+    """with_deletes fleets: all-delete (and mixed ins+del) micro-batches
+    cancel identically through the batched two-layer merge."""
+    _diff_refresh(lambda: _deletes_fleet(3, seed=61, delete_only=delete_only))
+
+
+def test_differential_all_outlier_stratum_in_batch():
+    """A fleet member whose EVERY row is pinned by the outlier index falls
+    back to the per-view path inside the same epoch call; the rest of the
+    batch still merges — and everything matches sequential."""
+    def make():
+        rng = np.random.default_rng(71)
+        vm = ViewManager()
+        for i in range(3):
+            _register(vm, i, base_rows=120, groups=6, rng=rng)
+        vm.register_outlier_index("v0", "Log0", "bytes", k=120)
+        d_rng = np.random.default_rng(72)
+        for i in range(3):
+            vm.ingest(f"Log{i}", inserts=_delta_rel(5000, 50, 6, d_rng))
+        return vm
+
+    _diff_refresh(make)
+
+
+@given(n_views=st.integers(2, 5), seed=st.integers(0, 10),
+       quiet=st.integers(0, 1))
+@settings(max_examples=6, deadline=None)
+def test_differential_random_ragged_fleets(n_views, seed, quiet):
+    """Property sweep: ragged capacities, random delta sizes (some views
+    silent), batched epoch ≡ sequential refreshes."""
+    def make():
+        rng = np.random.default_rng(seed)
+        vm = ViewManager()
+        for i in range(n_views):
+            _register(vm, i, base_rows=50 + 120 * i, groups=4 * (i + 1),
+                      rng=rng, m=(0.25 if i % 2 == 0 else 0.5))
+        d_rng = np.random.default_rng(seed + 100)
+        for i in range(n_views):
+            if quiet and i == 0:
+                continue  # one empty delta window
+            vm.ingest(f"Log{i}",
+                      inserts=_delta_rel(5000, int(d_rng.integers(1, 120)),
+                                         4 * (i + 1), d_rng))
+        return vm
+
+    _diff_refresh(make)
+
+
+def test_epoch_runs_one_fleet_merge_dispatch(monkeypatch):
+    """Acceptance: a uniform drifting fleet's epoch executes ONE batched
+    fleet_merge dispatch — no per-view Python merge loop."""
+    import repro.kernels.fleet_merge as FM
+
+    vm, _ = _uniform_fleet(4, seed=81)
+    d_rng = np.random.default_rng(82)
+    for i in range(4):
+        vm.ingest(f"Log{i}", inserts=_delta_rel(5000, 100, 32, d_rng))
+    calls = []
+    orig = FM.fleet_merge
+
+    def spy(*args, **kwargs):
+        calls.append(1)
+        return orig(*args, **kwargs)
+
+    monkeypatch.setattr(FM, "fleet_merge", spy)
+    versions = {n: vm.views[n].sample_version for n in vm.views}
+    vm.svc_refresh_many(list(vm.views))
+    assert len(calls) == 1
+    for name in vm.views:
+        assert vm.views[name].sample_version == versions[name] + 1
+        assert vm.drift_rows(name, since="clean") == 0

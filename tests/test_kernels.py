@@ -543,8 +543,9 @@ def test_multi_agg_ht_d_excludes_pinned_rows():
 
 def _random_fleet_features(rng, V):
     from repro.kernels.fleet_score import (
-        F_AGE, F_COST_CLEAN, F_COST_MAINTAIN, F_DRIFT_CLEAN, F_DRIFT_IVM,
-        F_EX2, F_HT_AQP, F_HT_CORR, F_M, F_MEAN, F_N, F_TRAFFIC, N_FEATURES,
+        F_AGE, F_COST_CLEAN, F_COST_MAINTAIN, F_COST_RETUNE, F_DRIFT_CLEAN,
+        F_DRIFT_IVM, F_EX2, F_HT_AQP, F_HT_CORR, F_M, F_MEAN, F_N, F_TRAFFIC,
+        N_FEATURES,
     )
 
     f = np.zeros((V, N_FEATURES), np.float32)
@@ -558,6 +559,7 @@ def _random_fleet_features(rng, V):
     f[:, F_TRAFFIC] = rng.uniform(0, 100, V)
     f[:, F_COST_CLEAN] = rng.uniform(1e-3, 2.0, V)
     f[:, F_COST_MAINTAIN] = rng.uniform(1e-2, 10.0, V)
+    f[:, F_COST_RETUNE] = rng.uniform(2e-3, 4.0, V)
     f[:, F_AGE] = rng.uniform(0, 1e3, V)
     f[:, F_M] = rng.uniform(0.01, 1.0, V)
     return f
@@ -565,7 +567,7 @@ def _random_fleet_features(rng, V):
 
 @pytest.mark.parametrize("V", [1, 5, 37, 513])
 def test_fleet_score_kernel_matches_oracle(V):
-    """Pallas tile pass == pure-jnp oracle == XLA path (≤1e-6 relative)."""
+    """Pallas tile pass == pure-jnp oracle == XLA path (f32 ulp jitter)."""
     from repro.kernels.fleet_score import fleet_score_ref
     from repro.kernels.fleet_score.ops import fleet_scores
 
@@ -577,8 +579,8 @@ def test_fleet_score_kernel_matches_oracle(V):
     from repro.kernels.fleet_score import N_SCORES
 
     assert got_pl.shape == (V, N_SCORES)
-    np.testing.assert_allclose(got_xla, want, rtol=1e-6, atol=1e-6)
-    np.testing.assert_allclose(got_pl, want, rtol=1e-6, atol=1e-6)
+    np.testing.assert_allclose(got_xla, want, rtol=2e-6, atol=1e-6)
+    np.testing.assert_allclose(got_pl, want, rtol=2e-6, atol=1e-6)
 
 
 def test_fleet_score_degenerate_views_score_zero():
@@ -592,7 +594,7 @@ def test_fleet_score_degenerate_views_score_zero():
     for up in (False, True):
         got = np.asarray(fleet_scores(feats, use_pallas=up))
         assert np.all(np.isfinite(got))
-        np.testing.assert_array_equal(got[:, :3], 0.0)
+        np.testing.assert_array_equal(got[:, :4], 0.0)
         np.testing.assert_array_equal(got[:, REC_M], 0.0)
 
 
@@ -706,3 +708,158 @@ def test_fused_clean_groupby_fleet_matches_per_view():
                                    rtol=0, atol=0)
         np.testing.assert_allclose(np.asarray(sums)[v], np.asarray(s1),
                                    rtol=1e-6, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# kernels/fleet_merge: the epoch's one-pass batched clean merge
+# ---------------------------------------------------------------------------
+
+def _random_merge_fleet(rng, V, R, G, A, with_del=True, stale_rows=None):
+    """Padded merge panels: ragged stale rows with unique keys (some beyond
+    the delta group range, so they must pass through untouched) and dense
+    delta sides with random group liveness."""
+    from repro.relational.relation import SENTINEL_KEY
+
+    rows = (np.asarray(stale_rows) if stale_rows is not None
+            else rng.integers(0, R + 1, V))
+    sk = np.full((V, R), SENTINEL_KEY, np.int32)
+    sv = np.zeros((V, R), bool)
+    sx = np.zeros((V, R, A), np.float32)
+    hi = G + G // 2 + 1
+    for v in range(V):
+        n = int(min(rows[v], hi))
+        if n:
+            sk[v, :n] = rng.choice(hi, size=n, replace=False)
+            sv[v, :n] = True
+            sx[v, :n] = rng.normal(0, 5, (n, A)).astype(np.float32)
+    iv = rng.random((V, G)) < 0.5
+    ix = np.where(iv[..., None],
+                  rng.normal(0, 3, (V, G, A)), 0.0).astype(np.float32)
+    if not with_del:
+        return sk, sv, sx, iv, ix, None, None
+    dv = rng.random((V, G)) < 0.3
+    dx = np.where(dv[..., None],
+                  rng.normal(0, 2, (V, G, A)), 0.0).astype(np.float32)
+    return sk, sv, sx, iv, ix, dv, dx
+
+
+def _merge_oracle(sk, sv, sx, iv, ix, dv, dx):
+    """Per-view numpy dict merge in the op's f32 order: (stale + ins) − del
+    per aggregate, delta-only groups appended, rows sorted by key."""
+    V, R = sk.shape
+    G = iv.shape[1]
+    A = sx.shape[2]
+    if dv is None:
+        dv = np.zeros((V, G), bool)
+        dx = np.zeros((V, G, A), np.float32)
+    keys_out, vals_out = [], []
+    for v in range(V):
+        rows = {}
+        for r in range(R):
+            if not sv[v, r]:
+                continue
+            k = int(sk[v, r])
+            val = sx[v, r].astype(np.float32)
+            if 0 <= k < G:
+                if iv[v, k]:
+                    val = (val + ix[v, k]).astype(np.float32)
+                if dv[v, k]:
+                    val = (val - dx[v, k]).astype(np.float32)
+            rows[k] = val
+        for g in range(G):
+            if g in rows or not (iv[v, g] or dv[v, g]):
+                continue
+            val = ix[v, g].copy() if iv[v, g] else np.zeros(A, np.float32)
+            if dv[v, g]:
+                val = (val - dx[v, g]).astype(np.float32)
+            rows[g] = val
+        ks = sorted(rows)
+        keys_out.append(np.asarray(ks, np.int64))
+        vals_out.append(np.asarray([rows[k] for k in ks], np.float32)
+                        if ks else np.zeros((0, A), np.float32))
+    return keys_out, vals_out
+
+
+def _check_merge_against_oracle(panels):
+    from repro.kernels.fleet_merge import fleet_merge
+
+    want_k, want_x = _merge_oracle(*panels)
+    sk, sv, sx, iv, ix, dv, dx = panels
+    outs = {}
+    for up in (False, True):
+        keys, vals, valid = fleet_merge(sk, sv, sx, iv, ix, dv, dx,
+                                        use_pallas=up)
+        keys, vals, valid = map(np.asarray, (keys, vals, valid))
+        assert keys.shape == (sk.shape[0], sk.shape[1] + iv.shape[1])
+        for v in range(sk.shape[0]):
+            n = len(want_k[v])
+            assert valid[v, :n].all() and not valid[v, n:].any()
+            np.testing.assert_array_equal(keys[v, :n], want_k[v])
+            np.testing.assert_allclose(vals[v, :n], want_x[v],
+                                       rtol=1e-6, atol=1e-6)
+            np.testing.assert_array_equal(vals[v, n:], 0.0)
+        outs[up] = (keys, vals, valid)
+    # the two dispatch paths agree bit-for-bit (same f32 operation order)
+    np.testing.assert_array_equal(outs[False][0], outs[True][0])
+    np.testing.assert_array_equal(outs[False][1], outs[True][1])
+    np.testing.assert_array_equal(outs[False][2], outs[True][2])
+
+
+@pytest.mark.parametrize("V,R,G", [(1, 17, 32), (5, 300, 64),
+                                   (9, 513, 128), (3, 1, 8)])
+def test_fleet_merge_matches_oracle(V, R, G):
+    """Pallas == XLA == per-view dict oracle over ragged fleets with
+    deletes — including V=1 fleets and single-row (R=1) stale buckets."""
+    rng = np.random.default_rng(V * 1000 + R + G)
+    _check_merge_against_oracle(_random_merge_fleet(rng, V, R, G, A=2))
+
+
+def test_fleet_merge_insert_only_path():
+    """No delete side (views without with_deletes): del panels default to
+    all-dead and the merge reduces to a pure upsert."""
+    rng = np.random.default_rng(7)
+    _check_merge_against_oracle(
+        _random_merge_fleet(rng, 4, 96, 64, A=3, with_del=False))
+
+
+def test_fleet_merge_all_delete_deltas():
+    """A micro-batch that is ALL deletes cancels into the stale rows and
+    spawns negative delta-only groups — both paths, exactly."""
+    rng = np.random.default_rng(13)
+    sk, sv, sx, iv, ix, dv, dx = _random_merge_fleet(rng, 3, 40, 32, A=2)
+    iv[:] = False
+    ix[:] = 0.0
+    dv = rng.random(dv.shape) < 0.6
+    dx = np.where(dv[..., None],
+                  rng.normal(0, 2, dx.shape), 0.0).astype(np.float32)
+    _check_merge_against_oracle((sk, sv, sx, iv, ix, dv, dx))
+
+
+def test_fleet_merge_all_padding_slots():
+    """A fleet of all-padding slots (zero valid stale rows, dead deltas)
+    comes back entirely invalid: SENTINEL keys, zero values, both paths."""
+    from repro.kernels.fleet_merge import fleet_merge
+    from repro.relational.relation import SENTINEL_KEY
+
+    rng = np.random.default_rng(5)
+    sk, sv, sx, iv, ix, dv, dx = _random_merge_fleet(
+        rng, 4, 64, 32, A=2, stale_rows=np.zeros(4, int))
+    iv[:] = False
+    dv[:] = False
+    for up in (False, True):
+        keys, vals, valid = fleet_merge(sk, sv, sx, iv, ix, dv, dx,
+                                        use_pallas=up)
+        assert not np.asarray(valid).any()
+        np.testing.assert_array_equal(np.asarray(keys), SENTINEL_KEY)
+        np.testing.assert_array_equal(np.asarray(vals), 0.0)
+
+
+def test_fleet_merge_raises_on_ragged_shapes():
+    from repro.kernels.fleet_merge import fleet_merge
+
+    rng = np.random.default_rng(3)
+    sk, sv, sx, iv, ix, dv, dx = _random_merge_fleet(rng, 2, 16, 8, A=2)
+    with pytest.raises(ValueError):
+        fleet_merge(sk, sv[:, :-1], sx, iv, ix, dv, dx)
+    with pytest.raises(ValueError):
+        fleet_merge(sk, sv, sx, iv[:1], ix, dv, dx)

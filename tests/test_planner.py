@@ -500,3 +500,94 @@ def test_dashboard_surfaces_planner_panel():
     # the stat entries still answer under one shared staleness snapshot
     stats = {k: v for k, v in dash.items() if k != "planner"}
     assert len({id(v.staleness) for v in stats.values()}) == 1
+
+
+# ---------------------------------------------------------------------------
+# Retune as a fourth knapsack action
+# ---------------------------------------------------------------------------
+
+def test_retune_is_a_priced_knapsack_action():
+    """With adapt_m, a view whose REC_M differs from its ratio swaps its
+    clean candidate for a "retune" priced at the retune EWMA; executing it
+    steps the ratio exactly once and consumes the recommendation.  Epochs
+    that plan a plain clean never move the ratio."""
+    vm, rng = _fleet(1, m=0.0625)
+    planner = MaintenancePlanner(vm, budget_s=10.0, age_cap_s=1e9,
+                                 adapt_m=True)
+    planner.cost_model.pin_costs(refresh_s=1.0, maintain_s=30.0,
+                                 retune_s=2.5)
+    retuned = False
+    for epoch in range(3):
+        vm.ingest("Log0", inserts=_delta_rel(5000 + 1000 * epoch, 150, 32,
+                                             rng))
+        m_before = vm.views["v0"].m
+        report = planner.step()
+        acts = {a.view: a for a in report.actions}
+        if "v0" in acts and acts["v0"].action == "retune":
+            retuned = True
+            assert acts["v0"].predicted_s == 2.5  # priced at retune_s
+            assert vm.views["v0"].m != m_before   # the step executed
+            assert vm.views["v0"].recommended_m is None  # consumed
+        else:
+            assert vm.views["v0"].m == m_before   # cleans never retune
+    assert retuned
+
+
+def test_retune_requires_opt_in():
+    """Without adapt_m the planner never emits a retune action, even when
+    the scorer recommends a different ratio."""
+    vm, rng = _fleet(1, m=0.0625)
+    planner = MaintenancePlanner(vm, budget_s=10.0, age_cap_s=1e9)
+    planner.cost_model.pin_costs(refresh_s=1.0, maintain_s=30.0)
+    for epoch in range(3):
+        vm.ingest("Log0", inserts=_delta_rel(5000 + 1000 * epoch, 120, 32,
+                                             rng))
+        report = planner.step()
+        assert all(a.action in ("clean", "maintain") for a in report.actions)
+    assert vm.views["v0"].m == 0.0625
+
+
+def test_retune_never_starves_the_age_guard():
+    """The starvation guard claims overdue drifting views BEFORE the
+    knapsack sees any candidate: a pending ratio recommendation cannot
+    displace the forced maintain, and the recommendation stays un-applied
+    for that view this epoch."""
+    clock = FakeClock()
+    vm, rng = _fleet(2, m=0.0625)
+    planner = MaintenancePlanner(vm, budget_s=3.0, age_cap_s=50.0,
+                                 clock=clock, adapt_m=True)
+    planner.cost_model.pin_costs(refresh_s=1.0, maintain_s=2.0, retune_s=2.0)
+    for i in range(2):
+        vm.ingest(f"Log{i}", inserts=_delta_rel(5000, 150, 32, rng))
+    clock.t = 100.0  # every view overdue with pending deltas
+    m_before = {n: vm.views[n].m for n in vm.views}
+    report = planner.step()
+    acts = {a.view: a for a in report.actions}
+    for name in vm.views:
+        assert acts[name].action == "maintain" and acts[name].forced
+        assert vm.views[name].m == m_before[name]  # no ratio moved
+        assert vm.views[name].recommended_m is None
+
+
+def test_retune_then_repeated_maintain_stays_idempotent():
+    """A retune re-derives the sample pair from the materialized view; the
+    applied-segment cursors must survive the re-derivation — the follow-up
+    maintain folds each delta exactly once and a second maintain is a
+    no-op (the desync would double-apply)."""
+    vm, rng = _fleet(1, m=0.25)
+    vm.adaptive_m = True
+    vm.ingest("Log0", inserts=_delta_rel(5000, 200, 32, rng))
+    truth = float(vm.query_exact_fresh("v0", Q_SUM))
+    vm.views["v0"].recommended_m = 0.5
+    vm.svc_refresh("v0")  # inline retune + clean
+    assert vm.views["v0"].m == 0.5
+    vm.maintain("v0")
+    once = float(vm.query_stale("v0", Q_SUM))
+    vm.maintain("v0")
+    twice = float(vm.query_stale("v0", Q_SUM))
+    np.testing.assert_allclose(once, truth, rtol=1e-5)
+    np.testing.assert_allclose(twice, once, rtol=1e-6)
+    # and the next epoch's batched path sees a consistent cursor too
+    vm.ingest("Log0", inserts=_delta_rel(9000, 100, 32, rng))
+    vm.svc_refresh_many(["v0"])
+    assert vm.drift_rows("v0", since="clean") == 0
