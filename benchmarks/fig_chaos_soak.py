@@ -1,0 +1,388 @@
+"""Chaos soak: the epoch pipeline under scheduled faults, end to end.
+
+Not a paper figure — this is the robustness acceptance harness for the
+failure axis (repro.robustness).  A 12-view fleet with Zipf-skewed query
+traffic runs a multi-epoch soak while a deterministic ``FaultPlan``
+injects every supported fault kind at designed failure points: a clean
+that raises mid-epoch, a latency spike past the planner's deadline, a
+NaN-poisoned planner feature row, a corrupt and a duplicated delta
+micro-batch, a failure of the batched fleet-merge dispatch, and a
+negative clock skew.  The soak asserts the degradation contract:
+
+  * **availability** — every query in every epoch answers (degrade to
+    serve-stale, never raise).  Target: 100%.
+  * **bounded degradation** — the median relative error of *degraded*
+    answers (quarantined views serving stale with a widened CI) stays
+    within 3x the fault-free twin run's median error, because quarantine
+    windows are short (exponential backoff, retry next epoch) and cleans
+    recompute from the FULL pending delta set (§4.5) so recovery is
+    complete, not incremental.
+  * **recovery** — every quarantined view recovers (a successful clean
+    clears the quarantine); epochs-to-recover are reported.
+  * **differential safety** — a separate clean-all pair (same delta
+    stream; one run faulted, one clean) converges to BIT-IDENTICAL
+    samples and estimates once the fault clears: the requeue/quarantine
+    machinery leaves no residue.
+
+``distributed.ft.FleetMonitor`` rides the same simulated clock: each
+view heartbeats as a "host" while healthy, the monitor flags quarantined
+views via missed heartbeats and ``revive``s them on recovery — the
+training-fleet liveness policy and the view quarantine registry agree.
+
+Writes ``BENCH_chaos.json`` (override with ``BENCH_OUT``).  CI runs the
+quick mode and enforces the three guards.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from benchmarks.common import Row
+from benchmarks.fig_planner_fleet import (
+    _delta_rel,
+    _measure_prices,
+    _serve_traffic,
+    _traffic_weights,
+    build_fleet,
+    epoch_deltas,
+)
+from repro.core import Query
+from repro.distributed.ft import FleetMonitor
+from repro.planner import MaintenancePlanner
+from repro.robustness import FaultPlan, FaultSpec
+from repro.streaming import StreamConfig, StreamingViewService
+
+N_VIEWS = 12
+EPOCHS_QUICK = 8
+EPOCHS_FULL = 12
+RECOVERY_EPOCHS = 3  # extra fault-free epochs for quarantines to clear
+
+
+class _SimClock:
+    """Injectable epoch clock: one tick per epoch, skew faults applied as
+    raw shifts (negative allowed) — the clamps in the age/heartbeat math
+    are part of what the soak exercises."""
+
+    def __init__(self, t0: float = 1_000.0):
+        self.t = float(t0)
+
+    def __call__(self) -> float:
+        return self.t
+
+    def tick(self, dt: float = 1.0) -> None:
+        self.t += dt
+
+
+def _fault_specs(epochs: int) -> List[FaultSpec]:
+    """One scheduled fault per supported kind, spread over early epochs
+    (epoch cursor is 1-indexed: the harness advances before each epoch).
+    Action faults target the HOT views (the Zipf permutation parks the
+    top traffic ranks late in registration order), so the knapsack
+    schedules the faulted action every epoch and the fault actually
+    fires under the tight budget."""
+    specs = [
+        # action faults ride two consecutive epochs: traffic needs a few
+        # epochs to concentrate on the hot views, and firing twice also
+        # exercises consecutive-failure backoff (1 then 2 epochs)
+        FaultSpec(epoch=4, kind="refresh_error", target="v10"),
+        FaultSpec(epoch=5, kind="refresh_error", target="v10"),
+        FaultSpec(epoch=5, kind="latency", target="v11", magnitude=30.0),
+        FaultSpec(epoch=6, kind="latency", target="v11", magnitude=30.0),
+        FaultSpec(epoch=4, kind="nan_panel", target="v9"),
+        FaultSpec(epoch=5, kind="corrupt_batch", target="Log2"),
+        FaultSpec(epoch=5, kind="duplicate_batch", target="Log4"),
+        FaultSpec(epoch=6, kind="kernel_error"),
+        FaultSpec(epoch=7, kind="clock_skew", magnitude=-3.0),
+    ]
+    return [s for s in specs if s.epoch <= epochs]
+
+
+def _build_soak(n_views: int, n_rows: int, groups: int, d_rows: int,
+                prices: Dict[str, float], clock: _SimClock):
+    """Fleet + streaming service + generous-budget planner, warmed up so
+    the timed epochs measure steady-state behaviour (cold compiles would
+    otherwise trip the deadline check as spurious overruns)."""
+    vm = build_fleet(n_views, n_rows, groups, seed=1)
+    svc = StreamingViewService(
+        vm, StreamConfig(auto_refresh=False), clock=clock
+    )
+    vm.stream = svc
+    # off-the-clock warmup of every action path (per-view clean, full
+    # maintenance, batched fleet clean): cold XLA compiles during the soak
+    # would read as deadline overruns and quarantine healthy views
+    w_rng = np.random.default_rng(5)
+    for i in range(n_views):
+        vm.ingest(f"Log{i}",
+                  inserts=_delta_rel(5 * n_rows + d_rows * i, d_rows, groups,
+                                     w_rng))
+        vm.svc_refresh(f"v{i}")
+    for i in range(n_views):
+        vm.ingest(f"Log{i}",
+                  inserts=_delta_rel(7 * n_rows + d_rows * i, d_rows, groups,
+                                     w_rng))
+    for i in range(n_views):
+        vm.maintain(f"v{i}")
+    for i in range(n_views):
+        vm.ingest(f"Log{i}",
+                  inserts=_delta_rel(9 * n_rows + d_rows * i, d_rows, groups,
+                                     w_rng))
+    vm.svc_refresh_many([f"v{i}" for i in range(n_views)])
+    # tight budget (one maintenance + a few cleans, same shape as
+    # fig_planner_fleet): most views serve stale every epoch, so the
+    # fault-free twin's median error is the REAL serving error the
+    # degraded answers are compared against
+    budget = prices["maintain_s"] + 3.0 * prices["clean_s"]
+    # deadline floor well above any honest post-warmup action (wall-time
+    # noise on a loaded CI host must not quarantine healthy views); the
+    # injected latency fault (30s reported) still overruns it decisively
+    planner = MaintenancePlanner(vm, budget_s=budget, age_cap_s=1e9,
+                                 deadline_floor_s=3.0)
+    planner.cost_model.pin_costs(refresh_s=prices["clean_s"],
+                                 maintain_s=prices["maintain_s"])
+    svc.attach_planner(planner)
+    return vm, svc
+
+
+def _soak(n_views: int, n_rows: int, groups: int,
+          deltas: List[Dict[str, object]], weights: np.ndarray,
+          prices: Dict[str, float],
+          specs: Optional[List[FaultSpec]]) -> Dict:
+    """One soak run (chaos or fault-free twin): per-epoch Zipf traffic,
+    producer offers through the streaming service, one planner epoch, then
+    an availability/error probe over every view."""
+    clock = _SimClock()
+    vm, svc = _build_soak(n_views, n_rows, groups,
+                          int(np.asarray(
+                              next(iter(deltas[0].values())).valid).sum()),
+                          prices, clock)
+    plan = FaultPlan(specs).attach(vm) if specs else None
+    monitor = FleetMonitor(n_views, timeout_s=0.5, clock=clock)
+    view_names = [f"v{i}" for i in range(n_views)]
+    q = Query(agg="sum", col="totalBytes")
+    traffic_rng = np.random.default_rng(31)
+
+    attempted = answered = 0
+    normal_errs: List[float] = []
+    degraded_errs: List[float] = []
+    ci_covered = ci_total = 0
+    quarantine_start: Dict[str, int] = {}
+    recoveries: Dict[str, List[int]] = {}
+    flagged: List[int] = []
+    revived: List[int] = []
+    wall_s = 0.0
+
+    n_epochs = len(deltas) + (RECOVERY_EPOCHS if specs else 0)
+    for epoch in range(n_epochs):
+        if plan is not None:
+            plan.advance()
+            clock.tick(plan.clock_skew_s())
+        t0 = time.perf_counter()
+        _serve_traffic(vm, n_views, weights, traffic_rng)
+        if epoch < len(deltas):
+            for i, (base, rel) in enumerate(deltas[epoch].items()):
+                svc.offer(base, inserts=rel, seq=epoch * 100 + i)
+        svc.refresh()
+        wall_s += time.perf_counter() - t0
+
+        # liveness wiring: healthy views heartbeat, quarantined ones miss;
+        # the monitor's sweep is the training-fleet view of the quarantine
+        for host, name in enumerate(view_names):
+            if not vm.health.is_degraded(name):
+                if not monitor.hosts[host].alive:
+                    monitor.revive(host)
+                    revived.append(host)
+                monitor.heartbeat(host)
+        failed_hosts, _ = monitor.sweep()
+        flagged += failed_hosts
+
+        # quarantine lifecycle bookkeeping (recovery epochs)
+        for name in view_names:
+            deg = vm.health.is_degraded(name)
+            if deg and name not in quarantine_start:
+                quarantine_start[name] = vm.health.epoch
+            elif not deg and name in quarantine_start:
+                recoveries.setdefault(name, []).append(
+                    vm.health.epoch - quarantine_start.pop(name))
+
+        # availability + error probe: every view, every epoch, through the
+        # degrade-aware serving path (off the maintenance clock)
+        for name in view_names:
+            truth = float(vm.query_exact_fresh(name, q))
+            attempted += 1
+            try:
+                se = svc.query(name, q, record_traffic=False)
+            except Exception:  # noqa: BLE001 — an escape IS the regression
+                continue
+            answered += 1
+            if abs(truth) < 1e-9:
+                continue
+            rel_err = abs(float(se.value) - truth) / abs(truth)
+            st = se.staleness
+            if name in st.degraded_views or st.refresh_error is not None:
+                degraded_errs.append(rel_err)
+                ci_total += 1
+                ci_covered += int(
+                    se.estimate.ci_low <= truth <= se.estimate.ci_high)
+            else:
+                normal_errs.append(rel_err)
+        clock.tick(1.0)
+
+    stale = svc.staleness()
+    return {
+        "epochs": n_epochs,
+        "attempted": attempted,
+        "answered": answered,
+        "availability": answered / max(attempted, 1),
+        "median_rel_err": float(np.median(normal_errs)) if normal_errs else 0.0,
+        "degraded_median_rel_err": (
+            float(np.median(degraded_errs)) if degraded_errs else 0.0),
+        "degraded_answers": len(degraded_errs),
+        "ci_coverage_degraded": ci_covered / ci_total if ci_total else 1.0,
+        "recovery_epochs": {n: r for n, r in sorted(recoveries.items())},
+        "unrecovered": sorted(quarantine_start),
+        "faults_injected": len(plan.injected) if plan is not None else 0,
+        "fleet_merge_failures": vm.fleet_merge_failures,
+        "shed_rows": stale.shed_rows,
+        "corrupt_batches": stale.corrupt_batches,
+        "monitor": {"flagged": flagged, "revived": revived},
+        "wall_s": wall_s,
+    }
+
+
+# -- differential pair (clean-all path, bit-equality) ------------------------
+
+def _differential_run(n_views: int, n_rows: int, groups: int,
+                      deltas: List[Dict[str, object]],
+                      specs: Optional[List[FaultSpec]]):
+    """Clean-all soak (no planner: the paper's workflow, and wall-time
+    independent so paired runs stay comparable bit for bit)."""
+    vm = build_fleet(n_views, n_rows, groups, seed=2)
+    clock = _SimClock()
+    svc = StreamingViewService(vm, StreamConfig(auto_refresh=False),
+                               clock=clock)
+    vm.stream = svc
+    plan = FaultPlan(specs).attach(vm) if specs else None
+    for epoch, batch in enumerate(deltas):
+        if plan is not None:
+            plan.advance()
+        for i, (base, rel) in enumerate(batch.items()):
+            svc.offer(base, inserts=rel, seq=epoch * 100 + i)
+        svc.refresh()
+        clock.tick(1.0)
+    # fault-free recovery epochs: quarantined views re-enter once their
+    # backoff expires and re-clean from the FULL pending set (§4.5)
+    for _ in range(RECOVERY_EPOCHS):
+        if plan is not None:
+            plan.advance()
+        svc.refresh()
+        clock.tick(1.0)
+    return vm
+
+
+def _fleet_state_equal(vm_a, vm_b, n_views: int) -> bool:
+    """Bit-identical clean samples AND estimates across two fleets."""
+    q = Query(agg="sum", col="totalBytes")
+    for i in range(n_views):
+        name = f"v{i}"
+        a = vm_a.views[name].clean_sample
+        b = vm_b.views[name].clean_sample
+        if not np.array_equal(np.asarray(a.valid), np.asarray(b.valid)):
+            return False
+        for c in a.schema.columns:
+            ca, cb = np.asarray(a.col(c)), np.asarray(b.col(c))
+            eq = (np.array_equal(ca, cb, equal_nan=True)
+                  if np.issubdtype(ca.dtype, np.floating)
+                  else np.array_equal(ca, cb))
+            if not eq:
+                return False
+        ea = vm_a.query(name, q, record_traffic=False)
+        eb = vm_b.query(name, q, record_traffic=False)
+        if (ea.value, ea.ci_low, ea.ci_high) != (eb.value, eb.ci_low, eb.ci_high):
+            return False
+    return True
+
+
+def run(quick: bool = False) -> List[Row]:
+    epochs = EPOCHS_QUICK if quick else EPOCHS_FULL
+    n_rows, groups, d_rows = (1024, 24, 32) if quick else (2048, 32, 64)
+    weights = _traffic_weights(N_VIEWS)
+    deltas = epoch_deltas(N_VIEWS, n_rows, groups, d_rows, epochs)
+    prices = _measure_prices(n_rows, groups, d_rows)
+    specs = _fault_specs(epochs)
+
+    chaos = _soak(N_VIEWS, n_rows, groups, deltas, weights, prices, specs)
+    clean = _soak(N_VIEWS, n_rows, groups, deltas, weights, prices, None)
+
+    # denominator floored at 0.01% relative error: a near-exact fault-free
+    # median must not turn a harmless degraded answer into a huge ratio
+    ff_median = max(clean["median_rel_err"], 1e-4)
+    inflation = (chaos["degraded_median_rel_err"] / ff_median
+                 if chaos["degraded_answers"] else 1.0)
+
+    # differential pair: refresh faults only (offer-level faults are
+    # absorbed/rejected without trace; error faults must leave none)
+    diff_specs = [
+        FaultSpec(epoch=2, kind="refresh_error", target="v2"),
+        FaultSpec(epoch=3, kind="duplicate_batch", target="Log3"),
+        FaultSpec(epoch=3, kind="corrupt_batch", target="Log5"),
+    ]
+    diff_epochs = min(4, epochs)
+    vm_a = _differential_run(N_VIEWS, n_rows, groups, deltas[:diff_epochs],
+                             diff_specs)
+    vm_b = _differential_run(N_VIEWS, n_rows, groups, deltas[:diff_epochs],
+                             None)
+    differential_ok = _fleet_state_equal(vm_a, vm_b, N_VIEWS)
+
+    payload = {
+        "quick": bool(quick),
+        "n_views": N_VIEWS,
+        "epochs": epochs,
+        "rows_per_view": n_rows,
+        "delta_rows_per_epoch": d_rows,
+        "fault_schedule": [dataclasses_to_dict(s) for s in specs],
+        "chaos": chaos,
+        "fault_free": clean,
+        "availability": chaos["availability"],
+        "error_inflation": inflation,
+        "differential_ok": differential_ok,
+        "guards": {
+            "availability_ok": chaos["availability"] == 1.0,
+            "inflation_ok": inflation <= 3.0,
+            "differential_ok": differential_ok,
+            "recovered_ok": not chaos["unrecovered"],
+        },
+    }
+    out_path = os.environ.get("BENCH_OUT", "BENCH_chaos.json")
+    with open(out_path, "w") as f:
+        json.dump(payload, f, indent=2)
+
+    return [
+        Row(
+            "fig_chaos_soak",
+            chaos["wall_s"] * 1e6 / max(chaos["epochs"], 1),
+            f"availability={chaos['availability']:.3f} "
+            f"inflation={inflation:.2f} "
+            f"degraded={chaos['degraded_answers']} "
+            f"differential_ok={differential_ok}",
+        ),
+    ]
+
+
+def dataclasses_to_dict(spec: FaultSpec) -> Dict:
+    return {"epoch": spec.epoch, "kind": spec.kind, "target": spec.target,
+            "magnitude": spec.magnitude}
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    for row in run(quick=args.quick):
+        print(row.csv(), flush=True)

@@ -25,6 +25,7 @@ MODULES = (
     "fig14_minibatch",
     "fig_query_throughput",
     "fig_planner_fleet",
+    "fig_chaos_soak",
     "appendix_minmax",
     "kernels_bench",
     "svc_training",

@@ -25,7 +25,7 @@ from __future__ import annotations
 import dataclasses
 import time
 from collections import defaultdict, deque
-from typing import Dict, List, Optional, Tuple
+from typing import Callable, Dict, List, Optional, Tuple
 
 
 @dataclasses.dataclass
@@ -38,8 +38,12 @@ class HostState:
 
 class FleetMonitor:
     def __init__(self, n_hosts: int, timeout_s: float = 60.0,
-                 straggler_factor: float = 2.0, strikes: int = 3):
-        now = time.time()
+                 straggler_factor: float = 2.0, strikes: int = 3,
+                 clock: Callable[[], float] = time.time):
+        # injectable clock: deterministic liveness tests and chaos harnesses
+        # drive simulated time instead of sleeping through timeout windows
+        self.clock = clock
+        now = self.clock()
         self.hosts: Dict[int, HostState] = {
             h: HostState(last_beat=now, step_times=deque(maxlen=32)) for h in range(n_hosts)
         }
@@ -48,7 +52,7 @@ class FleetMonitor:
         self.strikes = strikes
 
     def heartbeat(self, host: int, t: Optional[float] = None) -> None:
-        self.hosts[host].last_beat = t if t is not None else time.time()
+        self.hosts[host].last_beat = t if t is not None else self.clock()
 
     def report_step(self, host: int, duration_s: float) -> None:
         self.hosts[host].step_times.append(duration_s)
@@ -61,13 +65,15 @@ class FleetMonitor:
 
     def sweep(self, now: Optional[float] = None) -> Tuple[List[int], List[int]]:
         """Returns (newly_failed, stragglers) and updates liveness."""
-        now = now if now is not None else time.time()
+        now = now if now is not None else self.clock()
         med = self._median_step()
         failed, stragglers = [], []
         for hid, st in self.hosts.items():
             if not st.alive:
                 continue
-            if now - st.last_beat > self.timeout_s:
+            # max(0, ·): a skewed clock (sweep time behind the host's last
+            # heartbeat) must read as "fresh", never as a spurious timeout
+            if max(0.0, now - st.last_beat) > self.timeout_s:
                 st.alive = False
                 failed.append(hid)
                 continue
@@ -82,6 +88,16 @@ class FleetMonitor:
 
     def alive_hosts(self) -> List[int]:
         return [h for h, st in self.hosts.items() if st.alive]
+
+    def revive(self, host: int) -> None:
+        """Re-admit a replaced/recovered host: fresh heartbeat, strikes and
+        step history cleared (its old straggler record must not poison the
+        rolling median it rejoins)."""
+        st = self.hosts[host]
+        st.alive = True
+        st.strikes = 0
+        st.step_times.clear()
+        st.last_beat = self.clock()
 
 
 @dataclasses.dataclass(frozen=True)

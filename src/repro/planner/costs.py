@@ -34,7 +34,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Callable, Dict, Optional, Sequence
+from typing import Callable, Dict, List, Optional, Sequence
 
 import jax.numpy as jnp
 import numpy as np
@@ -120,6 +120,9 @@ class CostModel:
         # batched fleet panel's parity reference)
         self.use_panel = bool(use_panel)
         self.stats: Dict[str, ViewCostStats] = {}
+        # views whose feature rows were non-finite on the LAST features()
+        # pass (sanitized + quarantined, see _sanitize)
+        self.last_poisoned: List[str] = []
 
     def attach(self) -> "CostModel":
         self.vm.cost_model = self
@@ -225,7 +228,10 @@ class CostModel:
 
     # -- the stacked feature panel ------------------------------------------
     def age_s(self, name: str) -> float:
-        return self._clock() - self._stat(name).last_maintain_t
+        # clamped: clock skew (a rewound monotonic source in tests, an
+        # injected skew fault) must not produce negative ages that flip
+        # the starvation guard or the scorer's age term
+        return max(0.0, self._clock() - self._stat(name).last_maintain_t)
 
     def features(self, names: Optional[Sequence[str]] = None,
                  use_pallas: Optional[bool] = None) -> np.ndarray:
@@ -268,8 +274,40 @@ class CostModel:
             out[i, F_COST_CLEAN] = st.refresh_s
             out[i, F_COST_MAINTAIN] = st.maintain_s
             out[i, F_COST_RETUNE] = st.retune_s
-            out[i, F_AGE] = now - st.last_maintain_t
+            out[i, F_AGE] = max(0.0, now - st.last_maintain_t)
             out[i, F_M] = mv.m
-        if not np.all(np.isfinite(out)):
-            raise ValueError("non-finite planner features")
+        fault_plan = getattr(self.vm, "fault_plan", None)
+        if fault_plan is not None:
+            out = fault_plan.poison_features(names, out)
+        self.last_poisoned = self._sanitize(names, out)
         return out
+
+    def _sanitize(self, names: Sequence[str], out: np.ndarray) -> List[str]:
+        """A non-finite feature row (NaN-poisoned panel slot, corrupted
+        moment) must not crash the whole scoring epoch OR feed garbage to
+        the knapsack: the row is replaced with a neutral serve-stale row
+        (zero drift/traffic/moments, EWMA costs kept) and the view is
+        quarantined so the planner skips it until its backoff expires.  The
+        cached moment snapshot is invalidated so the next un-poisoned epoch
+        recomputes real moments instead of reusing the garbage."""
+        bad = np.flatnonzero(~np.all(np.isfinite(out), axis=1))
+        poisoned: List[str] = []
+        for i in bad:
+            name = names[i]
+            st = self._stat(name)
+            row = np.zeros(N_FEATURES, np.float32)
+            row[F_COST_CLEAN] = st.refresh_s
+            row[F_COST_MAINTAIN] = st.maintain_s
+            row[F_COST_RETUNE] = st.retune_s
+            row[F_M] = self.vm.views[name].m
+            out[i] = row
+            st.snapshot_version = -1
+            for fld in ("n_rows", "ex2", "mean", "ht_aqp", "ht_corr"):
+                if not np.isfinite(getattr(st, fld)):
+                    setattr(st, fld, 0.0)
+            poisoned.append(name)
+            health = getattr(self.vm, "health", None)
+            if health is not None:
+                health.record_failure(
+                    name, ValueError("non-finite planner features"))
+        return poisoned

@@ -47,6 +47,9 @@ class PlannedAction:
     predicted_s: float
     forced: bool = False  # starvation guard, not knapsack
     actual_s: float = 0.0  # observed wall time once executed
+    deadline_s: float = 0.0  # per-action timeout derived from the EWMA cost
+    overrun: bool = False  # ran past its deadline → view degraded
+    failed: bool = False  # raised during execution → view quarantined
 
     def to_dict(self) -> Dict:
         return dataclasses.asdict(self)
@@ -62,6 +65,9 @@ class PlanReport:
     skipped: List[str]  # views left to serve stale this epoch
     corr_wins: Dict[str, bool]  # §5.2.2 estimator flip per view
     recommended_m: Dict[str, float] = dataclasses.field(default_factory=dict)
+    # views excluded from the knapsack by the quarantine registry (serving
+    # stale-with-wider-CI until their backoff expires or retries run out)
+    quarantined: List[str] = dataclasses.field(default_factory=list)
     predicted_spend_s: float = 0.0
     actual_spend_s: float = 0.0
     # where the epoch's wall time went: the fleet snapshot + scoring pass,
@@ -83,6 +89,7 @@ class PlanReport:
             "skipped": list(self.skipped),
             "corr_wins": dict(self.corr_wins),
             "recommended_m": dict(self.recommended_m),
+            "quarantined": list(self.quarantined),
         }
 
 
@@ -99,12 +106,25 @@ class MaintenancePlanner:
         traffic_decay: float = 0.5,
         use_pallas: Optional[bool] = None,
         adapt_m: bool = False,
+        deadline_factor: float = 10.0,
+        deadline_floor_s: float = 0.5,
+        max_retries: Optional[int] = None,
+        backoff_base: Optional[int] = None,
+        backoff_cap: Optional[int] = None,
     ):
         self.vm = vm
         self.budget_s = float(budget_s)
         self.age_cap_s = float(age_cap_s)
         self.traffic_decay = float(traffic_decay)
         self.use_pallas = use_pallas
+        # failure axis: an action running past deadline_factor × its EWMA
+        # prediction (never below the floor — cold EWMAs and compile spikes
+        # would otherwise quarantine healthy views) counts as a failure
+        self.deadline_factor = float(deadline_factor)
+        self.deadline_floor_s = float(deadline_floor_s)
+        vm.health.configure(max_retries=max_retries,
+                            backoff_base=backoff_base,
+                            backoff_cap=backoff_cap)
         self.cost_model = (cost_model or CostModel(vm, clock=clock)).attach()
         # opt-in m adaptation: plan() writes the scorer's REC_M onto each
         # ManagedView and svc_refresh applies it (ViewManager.adaptive_m)
@@ -127,9 +147,18 @@ class MaintenancePlanner:
         rec_m = fs.recommended_m()
         chosen: Dict[str, PlannedAction] = {}
         remaining = budget
+        # quarantined views sit the epoch out (serve stale with widened CI)
+        # until their exponential backoff expires; then they re-enter the
+        # candidate set like any other view.  Feature sanitization may have
+        # just quarantined NaN-poisoned views inside score_fleet, so this
+        # check runs AFTER the scoring pass.
+        health = self.vm.health
+        blocked = {n for n in fs.names if health.blocked(n)}
 
         # starvation guard: overdue drifting views maintain unconditionally
         for name in fs.names:
+            if name in blocked:
+                continue
             if (self.cost_model.age_s(name) > self.age_cap_s
                     and self.vm.drift_rows(name, since="ivm") > 0):
                 cost = self.cost_model._stat(name).maintain_s
@@ -144,7 +173,7 @@ class MaintenancePlanner:
         # deterministic tie-break by (view, action) keeps plans reproducible
         cands = []
         for i, name in enumerate(fs.names):
-            if name in chosen:
+            if name in chosen or name in blocked:
                 continue
             st = self.cost_model._stat(name)
             rm = rec_m.get(name, 0.0)
@@ -170,6 +199,9 @@ class MaintenancePlanner:
                 remaining -= cost
 
         actions = [chosen[n] for n in fs.names if n in chosen]
+        for act in actions:
+            act.deadline_s = max(self.deadline_floor_s,
+                                 self.deadline_factor * act.predicted_s)
         return PlanReport(
             epoch=self.epoch,
             budget_s=budget,
@@ -177,6 +209,7 @@ class MaintenancePlanner:
             skipped=[n for n in fs.names if n not in chosen],
             corr_wins=fs.corr_wins(),
             recommended_m=rec_m,
+            quarantined=sorted(blocked),
             predicted_spend_s=sum(a.predicted_s for a in actions),
             snapshot_s=snapshot_s,
             schedule_s=time.perf_counter() - t0,
@@ -190,7 +223,14 @@ class MaintenancePlanner:
         ``execute=False`` is a pure preview (same as ``plan()``: no state
         moves, no traffic decay, no epoch advance).  ``fused`` forwards to
         the clean actions' ``svc_refresh`` (StreamConfig.fused rides this
-        when the streaming service drives the planner)."""
+        when the streaming service drives the planner).
+
+        Execution is failure-isolated: an action that throws or overruns
+        its deadline quarantines ITS view (``vm.health``) and the rest of
+        the epoch commits — the fleet never loses availability to one bad
+        view."""
+        if execute:
+            self.vm.health.begin_epoch()
         report = self.plan(budget_s=budget_s)
         if not execute:
             return report
@@ -209,15 +249,38 @@ class MaintenancePlanner:
         cleans = [a for a in report.actions if a.action != "maintain"]
         for act in report.actions:
             if act.action == "maintain":
-                act.actual_s = self.vm.maintain(act.view)
+                try:
+                    act.actual_s = self.vm.maintain(act.view)
+                except Exception:
+                    # maintain() already restored the view and recorded the
+                    # failure in vm.health; the epoch goes on without it
+                    act.failed = True
+                    act.actual_s = 0.0
         if cleans:
             # the epoch's scheduled cleans go through the fleet refresh
             # path: delta aggregations sharing a plan shape run as ONE
             # batched fused dispatch instead of len(cleans) sequential ones
+            # (isolate=True: a failed view is rolled back + quarantined and
+            # the other cleans still commit)
             dts = self.vm.svc_refresh_many([a.view for a in cleans],
-                                           fused=fused)
+                                           fused=fused, isolate=True)
             for act in cleans:
                 act.actual_s = dts[act.view]
+                if self.vm.health.failed_this_epoch(act.view):
+                    act.failed = True
+        # deadline check: an action that ran past its deadline is treated
+        # as cancelled-equivalent — the view degrades to serve-stale and
+        # the blown-up wall time is already in the cost EWMA, so the next
+        # epoch both prices it honestly and backs off retrying it
+        for act in report.actions:
+            if (not act.failed and act.deadline_s > 0.0
+                    and act.actual_s > act.deadline_s):
+                act.overrun = True
+                self.vm.health.record_failure(
+                    act.view,
+                    TimeoutError(
+                        f"{act.action} ran {act.actual_s:.3f}s > deadline "
+                        f"{act.deadline_s:.3f}s"))
         report.act_s = time.perf_counter() - t0
         report.actual_spend_s = sum(a.actual_s for a in report.actions)
         self.cost_model.decay_traffic(self.traffic_decay)

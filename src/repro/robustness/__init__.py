@@ -1,0 +1,22 @@
+"""Failure-axis robustness: fault injection, quarantine, bounded degrade.
+
+The paper's degradation axis is staleness (serve a cleaned sample with
+explicit bounds instead of a fresh scan); this package adds the failure
+axis (serve the last good sample with a widened bound instead of raising).
+See docs/ARCHITECTURE.md "Degraded mode & failure semantics".
+"""
+
+from repro.robustness.degrade import pending_delta_bound, widen_estimate
+from repro.robustness.faults import FAULT_KINDS, FaultInjected, FaultPlan, FaultSpec
+from repro.robustness.health import FleetHealth, ViewHealth
+
+__all__ = [
+    "FAULT_KINDS",
+    "FaultInjected",
+    "FaultPlan",
+    "FaultSpec",
+    "FleetHealth",
+    "ViewHealth",
+    "pending_delta_bound",
+    "widen_estimate",
+]

@@ -1,0 +1,57 @@
+"""Bounded answers under failure: CI widening by the pending-delta bound.
+
+A quarantined view serves from its last good clean sample.  That answer is
+still a valid SVC estimate of the state it reflects — what it misses is
+every delta row the failed cleans never folded in.  Rather than silently
+returning the stale CI, the degrade path widens it by a deterministic
+worst-case bound on what the unapplied deltas could move the answer:
+
+    Δ ≤ |value| · pending_rows / max(N̂, 1)
+
+where ``N̂`` is the Horvitz–Thompson population estimate of the clean
+sample (valid rows / m) and ``pending_rows`` the per-view count of delta
+rows not yet reflected in the clean sample (``ViewManager.drift_rows``
+``since="clean"`` — an O(#bases) counter read, no scans).  Each pending row
+is assumed to shift the aggregate by at most the average per-row
+contribution — the same uniform-mass argument behind the paper's staleness
+bias analysis, made explicit in the interval instead of left implicit in
+the serve-stale answer.
+
+The widened estimate keeps the original value (it IS the best available
+estimate) and carries a ``+degraded`` method suffix so telemetry can tell
+bounded-degraded answers from fresh ones.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core.estimators import Estimate
+
+
+def pending_delta_bound(mv, pending_rows: int) -> float:
+    """Relative worst-case shift of the view's aggregates from
+    ``pending_rows`` unapplied delta rows (uniform per-row mass)."""
+    n_valid = float(np.asarray(mv.clean_sample.valid).sum())
+    n_hat = n_valid / max(float(mv.m), 1e-9)
+    return float(pending_rows) / max(n_hat, 1.0)
+
+
+def widen_estimate(est: Estimate, mv, pending_rows: int) -> Estimate:
+    """Widen ``est``'s interval by the pending-delta bound (degraded serve).
+
+    Zero pending rows widen nothing (the stale answer is exact w.r.t. the
+    drained stream); the value itself never moves.
+    """
+    rel = pending_delta_bound(mv, pending_rows)
+    extra = abs(float(np.asarray(est.value))) * rel
+    method = est.method if est.method.endswith("+degraded") else est.method + "+degraded"
+    return dataclasses.replace(
+        est,
+        stderr=est.stderr + extra,
+        ci_low=est.ci_low - extra,
+        ci_high=est.ci_high + extra,
+        method=method,
+    )

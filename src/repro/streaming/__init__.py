@@ -7,7 +7,13 @@ and answers queries with staleness metadata.  PartitionedDeltaLog is the
 aggregation in core/distributed_svc.
 """
 
-from repro.streaming.delta_log import Backpressure, DeltaLog, MicroBatch, PartitionedDeltaLog
+from repro.streaming.delta_log import (
+    Backpressure,
+    CorruptBatch,
+    DeltaLog,
+    MicroBatch,
+    PartitionedDeltaLog,
+)
 from repro.streaming.service import (
     BaseStaleness,
     StalenessInfo,
@@ -19,6 +25,7 @@ from repro.streaming.service import (
 __all__ = [
     "Backpressure",
     "BaseStaleness",
+    "CorruptBatch",
     "DeltaLog",
     "MicroBatch",
     "PartitionedDeltaLog",

@@ -28,6 +28,12 @@ class Backpressure(RuntimeError):
     """The ring is full; drain (refresh) before offering more batches."""
 
 
+class CorruptBatch(ValueError):
+    """A micro-batch carried non-finite float values (a bit-flipped or
+    truncated transmission).  Rejected at offer time — BEFORE it can win a
+    newest-wins coalesce against the clean copy of the same rows."""
+
+
 @dataclasses.dataclass
 class MicroBatch:
     seq: int
@@ -44,6 +50,21 @@ def _host_count(rel: Relation) -> int:
     import numpy as np
 
     return int(np.asarray(rel.valid).sum())
+
+
+def _finite_or_raise(rel: Relation, base: str) -> None:
+    """Reject non-finite float values on VALID rows (corrupt transmission)."""
+    import numpy as np
+
+    valid = np.asarray(rel.valid)
+    for c in rel.schema.columns:
+        col = np.asarray(rel.col(c))
+        if not np.issubdtype(col.dtype, np.floating):
+            continue
+        if not np.isfinite(col[valid]).all():
+            raise CorruptBatch(
+                f"DeltaLog[{base}] rejected micro-batch: non-finite {c!r}"
+            )
 
 
 class DeltaLog:
@@ -63,6 +84,16 @@ class DeltaLog:
         self.high_seq = -1  # highest sequence number ever offered
         self.drained_through_seq = -1  # highest seq included in a drain
         self.total_offered = 0  # rows, lifetime
+        # -- failure-axis accounting (surfaced in StalenessInfo) -------------
+        self.shed_rows = 0  # rows dropped by the drop-oldest shed policy
+        self.shed_batches = 0
+        self.corrupt_batches = 0  # offers rejected by finite-validation
+        self.corrupt_rows = 0
+        self.spills = 0  # in-place ring coalesces (spill-and-coalesce)
+        self.requeues = 0  # drained windows given back after a failed apply
+        # (prior drained_through_seq, oldest arrival, max seq) of the last
+        # drain — what requeue() needs to give the window back losslessly
+        self._last_drain: Optional[Tuple[int, float, int]] = None
 
     # -- producer side -------------------------------------------------------
     def offer(
@@ -75,6 +106,16 @@ class DeltaLog:
         restores sequence order).  Raises Backpressure when the ring is full."""
         if inserts is None and deletes is None:
             raise ValueError("empty micro-batch")
+        try:
+            for rel in (inserts, deletes):
+                if rel is not None:
+                    _finite_or_raise(rel, self.base)
+        except CorruptBatch:
+            self.corrupt_batches += 1
+            self.corrupt_rows += sum(
+                _host_count(r) for r in (inserts, deletes) if r is not None
+            )
+            raise
         if len(self._ring) >= self.max_batches:
             raise Backpressure(
                 f"DeltaLog[{self.base}] full ({self.max_batches} batches); drain first"
@@ -100,7 +141,9 @@ class DeltaLog:
         if not self._ring:
             return 0.0
         now = self._clock() if now is None else now
-        return now - min(mb.t_arrival for mb in self._ring)
+        # clamped: a backwards clock step (skew, NTP slew) must not produce
+        # a negative age that poisons watermark/deadline math downstream
+        return max(0.0, now - min(mb.t_arrival for mb in self._ring))
 
     # -- consumer side -------------------------------------------------------
     def drain(self) -> Tuple[Optional[Relation], Optional[Relation]]:
@@ -118,12 +161,78 @@ class DeltaLog:
             return None, None
         batches = sorted(self._ring, key=lambda mb: mb.seq)
         self._ring = []
+        self._last_drain = (
+            self.drained_through_seq,
+            min(mb.t_arrival for mb in batches),
+            batches[-1].seq,
+        )
         self.drained_through_seq = max(self.drained_through_seq, batches[-1].seq)
-        ins = [(mb.seq, mb.inserts) for mb in batches if mb.inserts is not None]
-        dels = [(mb.seq, mb.deletes) for mb in batches if mb.deletes is not None]
-        if not dels:
-            return _coalesce([r for _, r in ins]), None
-        return _coalesce_signed(ins, dels)
+        return _coalesce_batches(batches)
+
+    def requeue(self, inserts: Optional[Relation],
+                deletes: Optional[Relation]) -> None:
+        """Give the last drained window back: the apply step failed, so the
+        coalesced relations re-enter the ring as ONE micro-batch under the
+        window's max sequence number and original oldest arrival time, and
+        ``drained_through_seq`` rolls back — the next drain re-drains them
+        bit-equally (coalescing is idempotent on an already-coalesced
+        window).  The ring bound is bypassed: a failed drain only returns
+        rows the ring already held."""
+        if inserts is None and deletes is None:
+            return
+        if self._last_drain is None:
+            raise RuntimeError(f"DeltaLog[{self.base}]: no drain to requeue")
+        prev_seq, oldest_t, max_seq = self._last_drain
+        n = sum(_host_count(r) for r in (inserts, deletes) if r is not None)
+        self._ring.insert(0, MicroBatch(max_seq, inserts, deletes, oldest_t,
+                                        n_rows=n))
+        self.drained_through_seq = prev_seq
+        self._last_drain = None
+        self.requeues += 1
+
+    # -- overload shedding (non-blocking producers) --------------------------
+    def shed_oldest(self, n: int = 1) -> int:
+        """Drop the ``n`` oldest-arrival micro-batches with accounting;
+        returns rows shed.  Bounded loss: every shed row is counted in
+        ``shed_rows`` and surfaced through staleness metadata — dropped,
+        never silently."""
+        shed = 0
+        for _ in range(min(n, len(self._ring))):
+            oldest = min(self._ring, key=lambda mb: (mb.t_arrival, mb.seq))
+            self._ring.remove(oldest)
+            shed += oldest.rows()
+            self.shed_batches += 1
+        self.shed_rows += shed
+        return shed
+
+    def spill(self) -> int:
+        """Coalesce the ring IN PLACE into one micro-batch (lossless shed):
+        frees ``len(ring) - 1`` slots without dropping a row or blocking the
+        producer.  The spilled batch keeps the window's max seq and oldest
+        arrival, so seq ordering and the age watermark are preserved."""
+        if len(self._ring) <= 1:
+            return 0
+        batches = sorted(self._ring, key=lambda mb: mb.seq)
+        freed = len(batches) - 1
+        ins, dels = _coalesce_batches(batches)
+        n = sum(_host_count(r) for r in (ins, dels) if r is not None)
+        self._ring = [MicroBatch(
+            batches[-1].seq, ins, dels,
+            min(mb.t_arrival for mb in batches), n_rows=n,
+        )]
+        self.spills += 1
+        return freed
+
+
+def _coalesce_batches(
+    batches: List[MicroBatch],
+) -> Tuple[Optional[Relation], Optional[Relation]]:
+    """Seq-ordered batches → ONE (inserts, deletes) pair (drain/spill core)."""
+    ins = [(mb.seq, mb.inserts) for mb in batches if mb.inserts is not None]
+    dels = [(mb.seq, mb.deletes) for mb in batches if mb.deletes is not None]
+    if not dels:
+        return _coalesce([r for _, r in ins]), None
+    return _coalesce_signed(ins, dels)
 
 
 def _coalesce(rels: List[Relation]) -> Optional[Relation]:

@@ -12,6 +12,15 @@ Correctness under reordering is free: cleaning always recomputes Ŝ' from
 the stale sample plus the FULL pending delta set (§4.5), so a late
 micro-batch that misses one refresh window is simply folded into the next —
 no tombstones, no replay protocol.
+
+Failure axis (repro.robustness): the epoch drain is transactional per base
+(a window whose apply fails is requeued into its DeltaLog, never lost), a
+per-view clean failure quarantines only that view (the rest of the epoch
+commits; the quarantined view serves stale with a widened CI and
+``StalenessInfo`` marked degraded), and ring overflow is handled by a
+non-blocking shed policy instead of a forced inline refresh.  Corrupt
+micro-batches (non-finite floats) are rejected at offer time with
+accounting — see docs/ARCHITECTURE.md "Degraded mode & failure semantics".
 """
 
 from __future__ import annotations
@@ -21,7 +30,10 @@ import time
 from typing import Callable, Dict, Optional
 
 from repro.core.estimators import Estimate, Query
-from repro.streaming.delta_log import Backpressure, DeltaLog
+from repro.streaming.delta_log import Backpressure, CorruptBatch, DeltaLog
+
+# ring-overflow shed policies (StreamConfig.shed_policy)
+SHED_POLICIES = ("spill", "drop_oldest", "refresh")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -30,9 +42,17 @@ class StreamConfig:
 
     max_rows: int = 4096  # size watermark: refresh once this many rows pend
     max_age_s: float = 0.5  # age watermark: refresh once a batch is this old
-    max_batches: int = 64  # DeltaLog ring bound (Backpressure beyond it)
+    max_batches: int = 64  # DeltaLog ring bound (shed policy beyond it)
     auto_refresh: bool = True  # refresh inline when a watermark trips
     fused: Optional[bool] = None  # forwarded to svc_refresh (None = default)
+    # ring-overflow policy — producers stay NON-blocking by default:
+    #   "spill"       coalesce the ring in place (lossless; frees slots)
+    #   "drop_oldest" shed the oldest micro-batch with accounting
+    #   "refresh"     legacy: blocking inline refresh on Backpressure
+    shed_policy: str = "spill"
+    # a failed watermark refresh inside query()/query_batch() degrades the
+    # answer (widened CI + degraded staleness) instead of raising
+    degrade_on_error: bool = True
 
 
 @dataclasses.dataclass
@@ -42,6 +62,8 @@ class BaseStaleness:
     pending_rows: int
     pending_batches: int
     oldest_pending_s: float
+    shed_rows: int = 0  # rows dropped by the drop-oldest shed policy
+    corrupt_batches: int = 0  # offers rejected by finite-validation
 
 
 @dataclasses.dataclass
@@ -57,6 +79,13 @@ class StalenessInfo:
     # per-base breakdown of the global counters above, so planner decisions
     # (which base's traffic is backing up) are observable from telemetry
     per_base: Dict[str, BaseStaleness] = dataclasses.field(default_factory=dict)
+    # -- failure axis --------------------------------------------------------
+    degraded: bool = False  # any view quarantined, or the last refresh failed
+    degraded_views: Dict[str, str] = dataclasses.field(default_factory=dict)
+    refresh_error: Optional[str] = None  # last failed auto-refresh (cleared
+    # by the next successful refresh)
+    shed_rows: int = 0  # fleet-wide rows shed by overload policies
+    corrupt_batches: int = 0  # fleet-wide rejected offers
 
 
 @dataclasses.dataclass
@@ -81,11 +110,17 @@ class StreamingViewService:
                  clock: Callable[[], float] = time.monotonic):
         self.vm = vm
         self.config = config or StreamConfig()
+        if self.config.shed_policy not in SHED_POLICIES:
+            raise ValueError(
+                f"shed_policy must be one of {SHED_POLICIES}, "
+                f"got {self.config.shed_policy!r}"
+            )
         self._clock = clock
         self.logs: Dict[str, DeltaLog] = {}
         self._last_refresh: Optional[float] = None
         self.refresh_count = 0
         self.planner = None  # MaintenancePlanner once attach_planner ran
+        self._refresh_error: Optional[str] = None  # last degraded refresh
 
     def attach_planner(self, planner):
         """Route watermark refreshes through the budgeted control plane:
@@ -104,18 +139,72 @@ class StreamingViewService:
     # -- producer side -------------------------------------------------------
     def offer(self, base: str, inserts=None, deletes=None, seq: Optional[int] = None) -> bool:
         """Buffer a micro-batch; returns True if this offer triggered a
-        refresh (watermark trip or ring backpressure)."""
+        refresh (watermark trip, or ring backpressure under the legacy
+        ``shed_policy="refresh"``).
+
+        Producers stay non-blocking: a full ring is handled by the
+        configured shed policy (spill-and-coalesce or drop-oldest) instead
+        of an inline refresh; a micro-batch with non-finite float values is
+        rejected with accounting (``CorruptBatch`` counters on the log,
+        surfaced in staleness metadata) so one bit-flipped transmission
+        cannot poison the coalesced window.  A batch that cannot fit the
+        ring even after shedding (``max_batches`` too small for one batch)
+        is rejected with a clear ``ValueError`` instead of an uncaught
+        ``Backpressure``.
+        """
+        fault_plan = getattr(self.vm, "fault_plan", None)
+        offers = (
+            fault_plan.mutate_offer(base, inserts, deletes, seq)
+            if fault_plan is not None else [(inserts, deletes, seq)]
+        )
+        triggered = False
+        for ins, dels, s in offers:
+            triggered |= self._offer_one(base, ins, dels, s)
+        return triggered
+
+    def _offer_one(self, base: str, inserts, deletes, seq) -> bool:
         log = self._log(base)
         try:
+            refreshed = self._offer_bounded(log, inserts, deletes, seq)
+        except CorruptBatch:
+            # rejected with accounting (log.corrupt_batches/corrupt_rows);
+            # the producer's retry of the uncorrupted batch carries the data
+            return False
+        if not refreshed and self.config.auto_refresh and self.watermark_due():
+            self.refresh()
+            return True
+        return refreshed
+
+    def _offer_bounded(self, log: DeltaLog, inserts, deletes, seq) -> bool:
+        """Offer under the ring bound, applying the shed policy on overflow;
+        returns True iff the legacy policy ran an inline refresh."""
+        try:
             log.offer(inserts=inserts, deletes=deletes, seq=seq)
+            return False
         except Backpressure:
+            pass
+        refreshed = False
+        policy = self.config.shed_policy
+        if policy == "refresh":
             self.refresh()
+            refreshed = True
+        elif policy == "drop_oldest":
+            log.shed_oldest()
+        else:  # spill: lossless in-place coalesce; if the ring is already
+            # one coalesced batch at bound (max_batches == 1), fall back to
+            # a draining refresh rather than dropping rows
+            if log.spill() == 0:
+                self.refresh()
+                refreshed = True
+        try:
             log.offer(inserts=inserts, deletes=deletes, seq=seq)
-            return True
-        if self.config.auto_refresh and self.watermark_due():
-            self.refresh()
-            return True
-        return False
+        except Backpressure as e:
+            raise ValueError(
+                f"micro-batch cannot fit DeltaLog[{log.base}] "
+                f"(max_batches={log.max_batches}): a single batch must fit "
+                f"an empty ring — raise StreamConfig.max_batches"
+            ) from e
+        return refreshed
 
     # -- watermarks ----------------------------------------------------------
     def watermark_due(self) -> bool:
@@ -140,18 +229,33 @@ class StreamingViewService:
         planner picks clean/maintain/serve-stale per view under its budget
         (repro.planner.MaintenancePlanner).
 
+        Failure semantics: the drain is transactional per base — a window
+        whose ``_ingest_pending`` fails is requeued into its DeltaLog
+        (bit-equal re-drain later) before the error propagates.  Per-view
+        clean failures never abort the epoch: ``svc_refresh_many`` isolates
+        them (the failed view quarantines into ``vm.health`` and serves
+        stale; the rest commit).  Quarantined views sit out their
+        exponential backoff and re-enter the drain when a retry is due.
+
         Outlier-index maintenance (§6.1) rides the same drain: the window's
         offers are buffered by ``_ingest_pending`` and flushed as ONE
         threshold-gated ``update_outlier_index`` merge per refresh window —
         a sub-threshold window costs O(|∂D|) and never touches the index —
         before ``svc_refresh`` re-derives the pin set for cleaning."""
         planner = plan if plan is not None else self.planner
+        health = self.vm.health
         touched = set()
         for base, log in self.logs.items():
             ins, dels = log.drain()
             if ins is None and dels is None:
                 continue
-            self.vm._ingest_pending(base, inserts=ins, deletes=dels)
+            try:
+                self.vm._ingest_pending(base, inserts=ins, deletes=dels)
+            except Exception:
+                # drained-but-unapplied deltas are NEVER stranded: the
+                # window goes back into the ring for an idempotent re-drain
+                log.requeue(ins, dels)
+                raise
             touched.add(base)
         total = 0.0
         if planner is not None:
@@ -159,16 +263,39 @@ class StreamingViewService:
         else:
             # clean-all epoch: every affected sample refreshes through the
             # fleet path, so delta aggregations sharing a plan shape run as
-            # ONE batched fused dispatch instead of V sequential calls
-            affected = [name for name, mv in self.vm.views.items()
-                        if touched & set(mv.delta_bases)]
+            # ONE batched fused dispatch instead of V sequential calls.
+            # Quarantined views inside their backoff window sit out; ones
+            # whose retry is due re-enter even if this window left their
+            # bases untouched (their drift is from earlier windows).
+            health.begin_epoch()
+            affected = [
+                name for name, mv in self.vm.views.items()
+                if not health.blocked(name)
+                and (touched & set(mv.delta_bases)
+                     or (health.retry_due(name)
+                         and self.vm.drift_rows(name, since="clean") > 0))
+            ]
             if affected:
                 total = sum(self.vm.svc_refresh_many(
                     affected, fused=self.config.fused
                 ).values())
         self._last_refresh = self._clock()
         self.refresh_count += 1
+        self._refresh_error = None
         return total
+
+    def _maybe_refresh(self) -> None:
+        """Honor a due watermark before answering; with ``degrade_on_error``
+        a failing refresh degrades the answer instead of raising out of
+        ``query``/``query_batch``."""
+        if not (self.config.auto_refresh and self.watermark_due()):
+            return
+        try:
+            self.refresh()
+        except Exception as e:  # noqa: BLE001 — the degrade path IS the API
+            if not self.config.degrade_on_error:
+                raise
+            self._refresh_error = f"{type(e).__name__}: {e}"
 
     # -- consumer side -------------------------------------------------------
     def staleness(self) -> StalenessInfo:
@@ -178,9 +305,12 @@ class StreamingViewService:
                 pending_rows=l.pending_rows(),
                 pending_batches=l.pending_batches(),
                 oldest_pending_s=l.oldest_age_s(now),
+                shed_rows=l.shed_rows,
+                corrupt_batches=l.corrupt_batches,
             )
             for b, l in self.logs.items()
         }
+        degraded_views = self.vm.health.degraded_views()
         return StalenessInfo(
             per_base=per_base,
             pending_rows=sum(l.pending_rows() for l in self.logs.values()),
@@ -189,33 +319,69 @@ class StreamingViewService:
                 (l.oldest_age_s(now) for l in self.logs.values()), default=0.0
             ),
             refresh_age_s=(
-                -1.0 if self._last_refresh is None else now - self._last_refresh
+                -1.0 if self._last_refresh is None
+                else max(0.0, now - self._last_refresh)
             ),
             refreshed_through_seq={
                 b: l.drained_through_seq for b, l in self.logs.items()
             },
             watermark_due=self.watermark_due(),
+            degraded=bool(degraded_views) or self._refresh_error is not None,
+            degraded_views=degraded_views,
+            refresh_error=self._refresh_error,
+            shed_rows=sum(l.shed_rows for l in self.logs.values()),
+            corrupt_batches=sum(l.corrupt_batches for l in self.logs.values()),
         )
+
+    def _degrade_estimate(self, view_name: str, est: Estimate,
+                          st: StalenessInfo) -> Estimate:
+        """Widen a degraded view's answer by the pending-delta bound.
+
+        Applies when the view itself is quarantined, or when the whole
+        refresh failed (no per-view attribution): the answer's value is the
+        best available estimate; its interval additionally covers every
+        delta row the failed cleans never folded in."""
+        if not self.config.degrade_on_error:
+            return est
+        if view_name not in st.degraded_views and st.refresh_error is None:
+            return est
+        from repro.robustness.degrade import widen_estimate
+
+        # The bound must cover BOTH staleness stores: delta rows already
+        # ingested but never cleaned into this view's sample, and rows still
+        # buffered (or requeued after a failed ingest) in the delta log.
+        pending = self.vm.drift_rows(view_name, since="clean")
+        for b in self.vm.views[view_name].delta_bases:
+            bs = st.per_base.get(b)
+            if bs is not None:
+                pending += bs.pending_rows
+        return widen_estimate(est, self.vm.views[view_name], pending)
 
     def query(self, view_name: str, q: Query, **kw) -> StreamedEstimate:
         """Answer from the freshest refreshed sample, with staleness attached.
 
         With ``auto_refresh``, a due watermark is honored before answering so
-        the response never straddles a missed deadline.
-        """
-        if self.config.auto_refresh and self.watermark_due():
-            self.refresh()
+        the response never straddles a missed deadline.  A failed refresh or
+        a quarantined view degrades the answer (widened CI, ``degraded``
+        staleness) rather than raising — queries stay available under
+        failure."""
+        self._maybe_refresh()
         est = self.vm.query(view_name, q, **kw)
-        return StreamedEstimate(estimate=est, staleness=self.staleness())
+        st = self.staleness()
+        return StreamedEstimate(estimate=self._degrade_estimate(view_name, est, st),
+                                staleness=st)
 
     def query_batch(self, view_name: str, queries, **kw) -> list:
         """Answer N dashboard queries in one fused engine pass
         (``ViewManager.query_batch``) under ONE staleness snapshot: the
         watermark is honored once up front and every estimate in the batch
         carries the same ``StalenessInfo`` — the whole dashboard refers to
-        a single consistent refresh window."""
-        if self.config.auto_refresh and self.watermark_due():
-            self.refresh()
+        a single consistent refresh window (degraded or not)."""
+        self._maybe_refresh()
         ests = self.vm.query_batch(view_name, queries, **kw)
         st = self.staleness()
-        return [StreamedEstimate(estimate=e, staleness=st) for e in ests]
+        return [
+            StreamedEstimate(estimate=self._degrade_estimate(view_name, e, st),
+                             staleness=st)
+            for e in ests
+        ]

@@ -48,6 +48,7 @@ from repro.relational.plan import plan_leaves
 from repro.relational.execute import execute
 from repro.relational.relation import Relation, compact, from_columns
 from repro.relational.relation import empty as empty_relation
+from repro.robustness.health import FleetHealth
 import numpy as np
 
 
@@ -115,6 +116,25 @@ class ViewManager:
         # opt-in: svc_refresh honors planner-recommended sampling ratios
         # (MaintenancePlanner(adapt_m=True) turns this on)
         self.adaptive_m = False
+        # -- failure axis (repro.robustness) ---------------------------------
+        # per-view quarantine/backoff registry: every clean/maintain outcome
+        # is recorded here; the serving and planner layers read it to decide
+        # serve-stale-with-wider-CI vs retry
+        self.health = FleetHealth()
+        # chaos-test injection point (robustness.faults.FaultPlan.attach);
+        # None in production — the hooks below are single attribute checks
+        self.fault_plan = None
+        # batched fleet-merge dispatches that fell back to per-view cleans
+        # because the dispatch itself raised (telemetry: a persistent count
+        # here means the fleet path is silently degraded to the slow path)
+        self.fleet_merge_failures = 0
+
+    def _inject_fault(self, point: str, name: Optional[str]) -> float:
+        """Fire the chaos hook at a designed failure point; returns injected
+        latency seconds (0.0 in production — one None check)."""
+        if self.fault_plan is None:
+            return 0.0
+        return self.fault_plan.fire(point, name)
 
     @property
     def pending(self) -> DeltaSet:
@@ -351,9 +371,34 @@ class ViewManager:
         already-batched fused delta aggregations, this view's share of the
         batched dispatch wall time, and whether the batched path already
         retuned the ratio (so the cost model files the wall time under
-        retune, not refresh)."""
+        retune, not refresh).
+
+        The clean is TRANSACTIONAL per view: any failure (including an
+        injected chaos fault) restores the view's pre-clean state —
+        samples, caches, counters — records the failure in ``health``
+        (quarantine + backoff), and re-raises.  A later successful clean
+        folds everything the failed one missed (§4.5 recompute-from-full-
+        pending), bit-equal to a run that never failed."""
         mv = self.views[view_name]
+        snap = _view_snapshot(mv)
+        try:
+            dt = self._svc_refresh_inner(
+                mv, view_name, fused, _precomputed, _extra_s, _retuned
+            )
+        except Exception as e:
+            _restore_view(mv, snap)
+            if self._panel is not None:
+                self._panel.invalidate(view_name)
+            self.health.record_failure(view_name, e)
+            raise
+        self.health.record_success(view_name)
+        return dt
+
+    def _svc_refresh_inner(self, mv: ManagedView, view_name: str,
+                           fused: Optional[bool], _precomputed,
+                           _extra_s: float, _retuned: bool) -> float:
         retuned = bool(_retuned)
+        lat_s = self._inject_fault("refresh", view_name)
         t0 = time.perf_counter()  # a retune below is part of the clean's cost
         if (self.adaptive_m and mv.recommended_m is not None
                 and abs(mv.recommended_m - mv.m) > 1e-9):
@@ -385,7 +430,7 @@ class ViewManager:
         mv.stale_sample = flag_outliers(mv.stale_sample, mv.outlier_pin)
         mv.corr_cache = None  # samples moved: new correspondence window
         jnp.asarray(mv.clean_sample.valid).block_until_ready()
-        dt = time.perf_counter() - t0 + float(_extra_s)
+        dt = time.perf_counter() - t0 + float(_extra_s) + lat_s
         mv.maintenance_s = dt
         mv.refresh_s = dt
         self._bump_sample_version(mv)
@@ -436,7 +481,8 @@ class ViewManager:
         self._bump_sample_version(mv)
 
     def svc_refresh_many(self, names: Sequence[str],
-                         fused: Optional[bool] = None) -> Dict[str, float]:
+                         fused: Optional[bool] = None,
+                         isolate: bool = True) -> Dict[str, float]:
         """Refresh several views' samples as ONE compiled epoch pass.
 
         Every qualifying clean runs end-to-end through two fleet
@@ -455,7 +501,16 @@ class ViewManager:
         domains, ``fused=False``) fall back to per-view ``svc_refresh``,
         reusing any side that did aggregate on the batched path.  Returns
         per-view wall seconds (each member carries its share of the
-        batched dispatches)."""
+        batched dispatches).
+
+        Failure isolation (``isolate=True``, the default): a failed
+        per-view clean is quarantined into ``health`` and reported as 0.0
+        wall seconds while every other view's clean commits — one bad view
+        cannot abort the epoch.  A failure of the batched fleet dispatch
+        itself falls the WHOLE epoch back to per-view cleans (counted in
+        ``fleet_merge_failures``), so a kernel-level fault degrades to the
+        slow path, never to an error.  ``isolate=False`` restores
+        fail-fast propagation for debugging."""
         from repro.core.maintenance import (
             _FUSED_DEFAULT,
             _MergeJob,
@@ -528,26 +583,45 @@ class ViewManager:
                     out_capacity=mv.sample_capacity,
                 ))
         t0 = time.perf_counter()
-        merged, precomputed = fleet_clean_merge(jobs) if jobs else ({}, {})
-        for rel in merged.values():
-            jnp.asarray(rel.valid).block_until_ready()
+        merged, precomputed = {}, {}
+        if jobs:
+            try:
+                self._inject_fault("kernel", None)
+                merged, precomputed = fleet_clean_merge(jobs)
+                for rel in merged.values():
+                    jnp.asarray(rel.valid).block_until_ready()
+            except Exception:
+                if not isolate:
+                    raise
+                # the batched dispatch failed as a unit: degrade the whole
+                # epoch to per-view cleans (slow but correct) — panel slots
+                # were only read, never written, so no restore is needed
+                self.fleet_merge_failures += 1
+                merged, precomputed = {}, {}
         share = (
             (time.perf_counter() - t0) / max(len(merged), 1)
             if merged else 0.0
         )
         for name in names:
-            if name in merged:
-                out[name] = self._finish_batched_refresh(
-                    name, merged[name],
-                    share + retune_s.get(name, 0.0), name in retuned,
-                )
-            else:
-                out[name] = self.svc_refresh(
-                    name, fused=fused,
-                    _precomputed=precomputed.get(name),
-                    _extra_s=retune_s.get(name, 0.0),
-                    _retuned=name in retuned,
-                )
+            try:
+                if name in merged:
+                    out[name] = self._finish_batched_refresh(
+                        name, merged[name],
+                        share + retune_s.get(name, 0.0), name in retuned,
+                    )
+                else:
+                    out[name] = self.svc_refresh(
+                        name, fused=fused,
+                        _precomputed=precomputed.get(name),
+                        _extra_s=retune_s.get(name, 0.0),
+                        _retuned=name in retuned,
+                    )
+            except Exception:
+                if not isolate:
+                    raise
+                # quarantined (health recorded by the per-view guard); the
+                # view keeps serving its last good sample, the epoch commits
+                out[name] = 0.0
         return out
 
     def _finish_batched_refresh(self, view_name: str, rel: Relation,
@@ -555,8 +629,24 @@ class ViewManager:
         """Install one fleet-merged clean sample: the same bookkeeping tail
         ``svc_refresh`` runs (flag, cache drop, version bump, watermarks,
         cost-model observation), minus the plan execution the fleet
-        dispatch already did."""
+        dispatch already did.  Guarded like ``svc_refresh``: a failure
+        restores the view and quarantines it."""
         mv = self.views[view_name]
+        snap = _view_snapshot(mv)
+        try:
+            dt = self._finish_batched_inner(mv, view_name, rel, dt, retuned)
+        except Exception as e:
+            _restore_view(mv, snap)
+            if self._panel is not None:
+                self._panel.invalidate(view_name)
+            self.health.record_failure(view_name, e)
+            raise
+        self.health.record_success(view_name)
+        return dt
+
+    def _finish_batched_inner(self, mv: ManagedView, view_name: str,
+                              rel: Relation, dt: float, retuned: bool) -> float:
+        dt = dt + self._inject_fault("refresh", view_name)
         mv.clean_sample = flag_outliers(rel, mv.outlier_pin)
         mv.stale_sample = flag_outliers(mv.stale_sample, mv.outlier_pin)
         mv.corr_cache = None  # samples moved: new correspondence window
@@ -605,6 +695,20 @@ class ViewManager:
             )
             jnp.asarray(scratch.valid).block_until_ready()
             return time.perf_counter() - t0
+        snap = _view_snapshot(mv)
+        try:
+            dt = self._maintain_inner(mv, view_name)
+        except Exception as e:
+            _restore_view(mv, snap)
+            if self._panel is not None:
+                self._panel.invalidate(view_name)
+            self.health.record_failure(view_name, e)
+            raise
+        self.health.record_success(view_name)
+        return dt
+
+    def _maintain_inner(self, mv: ManagedView, view_name: str) -> float:
+        lat_s = self._inject_fault("maintain", view_name)
         self._flush_outlier_offers(mv)
         t0 = time.perf_counter()
         hi = len(self.pending_segments)
@@ -617,7 +721,7 @@ class ViewManager:
             out_capacity=mv.materialized.capacity,
         )
         jnp.asarray(mv.materialized.valid).block_until_ready()
-        dt = time.perf_counter() - t0
+        dt = time.perf_counter() - t0 + lat_s
         mv.stale_sample = compact(
             hashing.apply_hash(mv.materialized, mv.view.pk, mv.m, mv.seed, pin=mv.outlier_pin),
             mv.sample_capacity,
@@ -811,6 +915,29 @@ class ViewManager:
             extra_env=self.base, out_capacity=mv.materialized.capacity,
         )
         return exact(fresh, q)
+
+
+def _view_snapshot(mv: ManagedView) -> dict:
+    """Shallow snapshot of every ManagedView field so a failed refresh /
+    maintenance can roll the view back to its pre-attempt state.  Relation
+    arenas are immutable (every mutation rebinds the field), so a
+    field-level copy is a full transactional checkpoint; the only mutable
+    containers are the per-base row-watermark dicts and the outlier offer
+    queue, which get container copies."""
+    snap = {}
+    for f in dataclasses.fields(mv):
+        v = getattr(mv, f.name)
+        if f.name in ("applied_rows", "cleaned_rows"):
+            v = dict(v)
+        elif f.name == "outlier_offers":
+            v = list(v)
+        snap[f.name] = v
+    return snap
+
+
+def _restore_view(mv: ManagedView, snap: dict) -> None:
+    for k, v in snap.items():
+        setattr(mv, k, v)
 
 
 def _concat_many(rels: List[Relation]) -> Relation:

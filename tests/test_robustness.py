@@ -1,0 +1,647 @@
+"""Failure-axis robustness: fault injection, quarantine, bounded degrade.
+
+The degradation contract under injected faults: a failing clean rolls its
+view back and quarantines it (the epoch commits without it), drained
+windows are requeued bit-equal, overload sheds instead of blocking,
+corrupt batches are rejected with accounting, degraded answers widen
+their CI by the pending-delta bound, and a recovered fleet is
+BIT-IDENTICAL to one that never failed.
+"""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import Query, ViewDef
+from repro.distributed.ft import FleetMonitor
+from repro.planner import CostModel, MaintenancePlanner
+from repro.relational.plan import GroupByNode, Scan
+from repro.relational.relation import from_columns, to_host
+from repro.robustness import (
+    FaultInjected,
+    FaultPlan,
+    FaultSpec,
+    FleetHealth,
+    widen_estimate,
+)
+from repro.streaming import (
+    Backpressure,
+    CorruptBatch,
+    DeltaLog,
+    StreamConfig,
+    StreamingViewService,
+)
+from repro.views import ViewManager
+
+Q_SUM = Query(agg="sum", col="total")
+
+
+class FakeClock:
+    def __init__(self, t=0.0):
+        self.t = float(t)
+
+    def __call__(self):
+        return self.t
+
+
+def _rel(pks, vals):
+    return from_columns(
+        {"k": np.asarray(pks, np.int32), "v": np.asarray(vals, np.float32)},
+        pk=["k"],
+    )
+
+
+def _delta(start, n, groups, rng):
+    return from_columns(
+        {
+            "k": np.arange(start, start + n, dtype=np.int32),
+            "g": rng.integers(0, groups, n).astype(np.int32),
+            "v": rng.exponential(5.0, n).astype(np.float32),
+        },
+        pk=["k"],
+    )
+
+
+def _fleet(n_views=2, n=400, groups=8, m=0.3, seed=3):
+    rng = np.random.default_rng(seed)
+    vm = ViewManager()
+    for i in range(n_views):
+        base = f"Log{i}"
+        vm.register_base(base, from_columns(
+            {
+                "k": np.arange(n, dtype=np.int32),
+                "g": rng.integers(0, groups, n).astype(np.int32),
+                "v": rng.exponential(5.0, n).astype(np.float32),
+            },
+            pk=["k"], capacity=2048,
+        ))
+        plan = GroupByNode(
+            child=Scan(base, pk=("k",)), keys=("g",),
+            aggs=(("total", "sum", "v"), ("cnt", "count", None)),
+            num_groups=2 * groups,
+        )
+        vm.register_view(ViewDef(f"v{i}", plan), delta_bases=(base,), m=m,
+                         seed=i, delta_group_capacity=2 * groups)
+    return vm, rng
+
+
+def _sample_state(mv):
+    rel = mv.clean_sample
+    return (
+        {c: np.asarray(rel.col(c)).copy() for c in rel.schema.columns},
+        np.asarray(rel.valid).copy(),
+        mv.sample_version,
+        dict(mv.cleaned_rows),
+    )
+
+
+def _assert_sample_equal(a, b, check_version=True):
+    cols_a, valid_a, ver_a, rows_a = a
+    cols_b, valid_b, ver_b, rows_b = b
+    assert np.array_equal(valid_a, valid_b)
+    for c in cols_a:
+        ca, cb = cols_a[c], cols_b[c]
+        if np.issubdtype(ca.dtype, np.floating):
+            assert np.array_equal(ca, cb, equal_nan=True)
+        else:
+            assert np.array_equal(ca, cb)
+    if check_version:
+        # rollback tests: a failed attempt must not even bump the counter
+        assert ver_a == ver_b
+    assert rows_a == rows_b
+
+
+# ---------------------------------------------------------------------------
+# FaultPlan
+# ---------------------------------------------------------------------------
+
+def test_fault_plan_random_is_deterministic():
+    kw = dict(views=["v0", "v1", "v2"], epochs=range(1, 9), rate=0.5, seed=11)
+    a, b = FaultPlan.random(**kw), FaultPlan.random(**kw)
+    assert a.specs == b.specs and a.specs  # same seed -> same schedule
+    c = FaultPlan.random(**{**kw, "seed": 12})
+    assert c.specs != a.specs
+
+
+def test_fault_spec_rejects_unknown_kind():
+    with pytest.raises(ValueError):
+        FaultSpec(epoch=1, kind="meteor_strike")
+
+
+def test_fault_plan_fires_only_at_active_epoch_and_target():
+    plan = FaultPlan([FaultSpec(epoch=2, kind="refresh_error", target="v0")])
+    plan.advance()  # epoch 1: inactive
+    assert plan.fire("refresh", "v0") == 0.0
+    plan.advance()  # epoch 2: active for v0 only
+    assert plan.fire("refresh", "v1") == 0.0
+    with pytest.raises(FaultInjected):
+        plan.fire("refresh", "v0")
+
+
+# ---------------------------------------------------------------------------
+# Transactional per-view cleans + isolation
+# ---------------------------------------------------------------------------
+
+def test_failed_refresh_rolls_view_back_and_quarantines():
+    vm, rng = _fleet()
+    vm.ingest("Log0", inserts=_delta(1000, 40, 8, rng))
+    before = _sample_state(vm.views["v0"])
+    FaultPlan([FaultSpec(epoch=1, kind="refresh_error", target="v0")]).attach(
+        vm).advance()
+    with pytest.raises(FaultInjected):
+        vm.svc_refresh("v0")
+    _assert_sample_equal(before, _sample_state(vm.views["v0"]))
+    assert vm.health.is_degraded("v0")
+    assert "FaultInjected" in vm.health.views["v0"].last_error
+
+
+def test_svc_refresh_many_isolates_failed_view():
+    vm, rng = _fleet()
+    for i in range(2):
+        vm.ingest(f"Log{i}", inserts=_delta(1000, 40, 8, rng))
+    before_v0 = _sample_state(vm.views["v0"])
+    v1_version = vm.views["v1"].sample_version
+    FaultPlan([FaultSpec(epoch=1, kind="refresh_error", target="v0")]).attach(
+        vm).advance()
+    out = vm.svc_refresh_many(["v0", "v1"])
+    assert out["v0"] == 0.0  # quarantined, rolled back
+    _assert_sample_equal(before_v0, _sample_state(vm.views["v0"]))
+    assert vm.health.is_degraded("v0") and not vm.health.is_degraded("v1")
+    assert vm.views["v1"].sample_version > v1_version  # the epoch committed
+
+
+def test_svc_refresh_many_isolate_false_propagates():
+    vm, rng = _fleet()
+    vm.ingest("Log0", inserts=_delta(1000, 40, 8, rng))
+    FaultPlan([FaultSpec(epoch=1, kind="refresh_error", target="v0")]).attach(
+        vm).advance()
+    with pytest.raises(FaultInjected):
+        vm.svc_refresh_many(["v0", "v1"], isolate=False)
+
+
+def test_kernel_fault_degrades_to_per_view_cleans():
+    vm, rng = _fleet()
+    for i in range(2):
+        vm.ingest(f"Log{i}", inserts=_delta(1000, 40, 8, rng))
+    FaultPlan([FaultSpec(epoch=1, kind="kernel_error")]).attach(vm).advance()
+    out = vm.svc_refresh_many(["v0", "v1"])
+    assert vm.fleet_merge_failures == 1
+    assert not vm.health.is_degraded("v0") and not vm.health.is_degraded("v1")
+    # both cleans still committed through the per-view fallback
+    truth = float(vm.query_exact_fresh("v0", Q_SUM))
+    est = float(vm.query("v0", Q_SUM, record_traffic=False).value)
+    assert est == pytest.approx(truth, rel=0.5)
+
+
+def test_failed_maintain_rolls_back_and_quarantines():
+    vm, rng = _fleet()
+    vm.ingest("Log0", inserts=_delta(1000, 40, 8, rng))
+    mv = vm.views["v0"]
+    before = (_sample_state(mv), np.asarray(mv.materialized.valid).copy(),
+              mv.applied_seg)
+    FaultPlan([FaultSpec(epoch=1, kind="maintain_error", target="v0")]).attach(
+        vm).advance()
+    with pytest.raises(FaultInjected):
+        vm.maintain("v0")
+    _assert_sample_equal(before[0], _sample_state(mv))
+    assert np.array_equal(before[1], np.asarray(mv.materialized.valid))
+    assert mv.applied_seg == before[2]
+    assert vm.health.is_degraded("v0")
+
+
+# ---------------------------------------------------------------------------
+# DeltaLog: requeue, shed, spill, corrupt
+# ---------------------------------------------------------------------------
+
+def test_requeue_redrains_bit_equal():
+    log = DeltaLog("t")
+    log.offer(inserts=_rel([1, 2], [1.0, 2.0]), seq=0)
+    log.offer(inserts=_rel([2, 3], [5.0, 3.0]), seq=1)
+    ins1, dels1 = log.drain()
+    seq_after = log.drained_through_seq
+    log.requeue(ins1, dels1)
+    assert log.pending_batches() == 1  # the window is back in the ring
+    ins2, dels2 = log.drain()
+    assert log.drained_through_seq == seq_after
+    assert dels2 is None
+    a, b = to_host(ins1), to_host(ins2)
+    assert a["k"].tolist() == b["k"].tolist()
+    assert a["v"].tolist() == b["v"].tolist()
+
+
+def test_requeue_without_pending_drain_raises():
+    log = DeltaLog("t")
+    with pytest.raises(RuntimeError):
+        log.requeue(_rel([1], [1.0]), None)
+
+
+def test_shed_oldest_accounts_dropped_rows():
+    vm, rng = _fleet()
+    svc = StreamingViewService(
+        vm, StreamConfig(auto_refresh=False, max_batches=2,
+                         shed_policy="drop_oldest"))
+    vm.stream = svc
+    svc.offer("Log0", inserts=_delta(1000, 3, 8, rng), seq=0)
+    svc.offer("Log0", inserts=_delta(1003, 4, 8, rng), seq=1)
+    svc.offer("Log0", inserts=_delta(1007, 5, 8, rng), seq=2)  # sheds seq 0
+    log = svc.logs["Log0"]
+    assert log.shed_batches == 1 and log.shed_rows == 3
+    st = svc.staleness()
+    assert st.shed_rows == 3 and st.per_base["Log0"].shed_rows == 3
+    ins, _ = log.drain()
+    got = set(to_host(ins)["k"].tolist())
+    assert got == set(range(1003, 1012))  # seq 0's rows are gone, accounted
+
+
+def test_spill_policy_is_lossless():
+    vm, rng = _fleet()
+    svc = StreamingViewService(
+        vm, StreamConfig(auto_refresh=False, max_batches=2,
+                         shed_policy="spill"))
+    vm.stream = svc
+    svc.offer("Log0", inserts=_delta(1000, 3, 8, rng), seq=0)
+    svc.offer("Log0", inserts=_delta(1003, 4, 8, rng), seq=1)
+    svc.offer("Log0", inserts=_delta(1007, 5, 8, rng), seq=2)  # spill+fit
+    log = svc.logs["Log0"]
+    assert log.spills == 1 and log.shed_rows == 0
+    ins, _ = log.drain()
+    assert set(to_host(ins)["k"].tolist()) == set(range(1000, 1012))
+
+
+def test_oversized_batch_raises_clear_error():
+    vm, rng = _fleet()
+    svc = StreamingViewService(
+        vm, StreamConfig(auto_refresh=False, max_batches=0))
+    vm.stream = svc
+    with pytest.raises(ValueError, match="max_batches"):
+        svc.offer("Log0", inserts=_delta(1000, 3, 8, rng))
+
+
+def test_corrupt_batch_rejected_with_accounting():
+    log = DeltaLog("t")
+    with pytest.raises(CorruptBatch):
+        log.offer(inserts=_rel([1, 2], [1.0, np.nan]))
+    assert log.corrupt_batches == 1 and log.corrupt_rows == 2
+    assert log.pending_batches() == 0
+
+    vm, rng = _fleet()
+    svc = StreamingViewService(vm, StreamConfig(auto_refresh=False))
+    vm.stream = svc
+    bad = from_columns(
+        {
+            "k": np.arange(1000, 1003, dtype=np.int32),
+            "g": np.zeros(3, np.int32),
+            "v": np.asarray([1.0, np.inf, 2.0], np.float32),
+        },
+        pk=["k"],
+    )
+    assert svc.offer("Log0", inserts=bad) is False
+    assert svc.staleness().corrupt_batches == 1
+    assert svc.logs["Log0"].pending_rows() == 0
+
+
+def test_corrupt_duplicate_cannot_displace_clean_copy():
+    """A NaN-corrupt retransmission under the SAME seq is rejected at offer
+    time — it never reaches the coalescer where newest-wins could prefer
+    it over the clean copy."""
+    vm, rng = _fleet()
+    svc = StreamingViewService(vm, StreamConfig(auto_refresh=False))
+    vm.stream = svc
+    plan = FaultPlan([
+        FaultSpec(epoch=1, kind="corrupt_batch", target="Log0"),
+        FaultSpec(epoch=1, kind="duplicate_batch", target="Log0"),
+    ]).attach(vm)
+    plan.advance()
+    good = _delta(1000, 4, 8, rng)
+    svc.offer("Log0", inserts=good, seq=7)
+    log = svc.logs["Log0"]
+    assert log.corrupt_batches == 1
+    ins, _ = log.drain()
+    rows = to_host(ins)
+    assert np.isfinite(rows["v"]).all()
+    assert rows["k"].tolist() == to_host(good)["k"].tolist()
+
+
+def test_negative_clock_skew_clamps_ages():
+    clock = FakeClock(10.0)
+    log = DeltaLog("t", clock=clock)
+    log.offer(inserts=_rel([1], [1.0]))
+    clock.t = 2.0  # skew backwards past the arrival time
+    assert log.oldest_age_s() == 0.0
+
+    vm, _ = _fleet()
+    svc = StreamingViewService(vm, StreamConfig(auto_refresh=False),
+                               clock=clock)
+    vm.stream = svc
+    svc.refresh()
+    clock.t = -50.0
+    assert svc.staleness().refresh_age_s == 0.0
+
+
+# ---------------------------------------------------------------------------
+# Epoch transactionality through the streaming service
+# ---------------------------------------------------------------------------
+
+def test_failed_ingest_requeues_window_then_recovers_bit_equal():
+    vm, rng = _fleet()
+    svc = StreamingViewService(vm, StreamConfig(auto_refresh=False))
+    vm.stream = svc
+    twin, _ = _fleet()
+    tsvc = StreamingViewService(twin, StreamConfig(auto_refresh=False))
+    twin.stream = tsvc
+
+    d = _delta(1000, 30, 8, rng)
+    svc.offer("Log0", inserts=d, seq=0)
+    tsvc.offer("Log0", inserts=d, seq=0)
+
+    original = vm._ingest_pending
+
+    def boom(*a, **k):
+        raise RuntimeError("disk full")
+
+    vm._ingest_pending = boom
+    with pytest.raises(RuntimeError):
+        svc.refresh()
+    vm._ingest_pending = original
+    # the drained window went back into the ring, nothing was lost
+    assert svc.logs["Log0"].pending_rows() == 30
+    svc.refresh()
+    tsvc.refresh()
+    for name in ("v0", "v1"):
+        ea = vm.query(name, Q_SUM, record_traffic=False)
+        eb = twin.query(name, Q_SUM, record_traffic=False)
+        assert (ea.value, ea.ci_low, ea.ci_high) == (eb.value, eb.ci_low,
+                                                     eb.ci_high)
+
+
+def test_query_degrades_instead_of_raising_on_refresh_failure():
+    """Satellite: an exception inside a watermark-triggered refresh must
+    not escape query()/query_batch() — the answer degrades (widened CI,
+    degraded staleness) and stays available."""
+    vm, rng = _fleet()
+    clock = FakeClock()
+    svc = StreamingViewService(
+        vm, StreamConfig(auto_refresh=True, max_rows=10_000, max_age_s=5.0),
+        clock=clock)
+    vm.stream = svc
+    svc.offer("Log0", inserts=_delta(1000, 30, 8, rng), seq=0)
+
+    def boom(*a, **k):
+        raise RuntimeError("disk full")
+
+    vm._ingest_pending = boom
+    clock.t = 100.0  # age watermark now due: query must attempt the refresh
+    plain = vm.query("v0", Q_SUM, record_traffic=False)
+    se = svc.query("v0", Q_SUM, record_traffic=False)
+    assert se.staleness.degraded
+    assert "disk full" in se.staleness.refresh_error
+    assert se.estimate.method.endswith("+degraded")
+    assert se.estimate.ci_low < plain.ci_low
+    assert se.estimate.ci_high > plain.ci_high
+    assert se.estimate.value == plain.value
+
+    batch = svc.query_batch("v0", [Q_SUM, Query(agg="count")],
+                            record_traffic=False)
+    assert all(b.staleness.degraded for b in batch)
+
+
+def test_quarantined_view_serves_widened_ci_and_recovers():
+    vm, rng = _fleet()
+    svc = StreamingViewService(vm, StreamConfig(auto_refresh=False))
+    vm.stream = svc
+    plan = FaultPlan([
+        FaultSpec(epoch=1, kind="refresh_error", target="v0"),
+    ]).attach(vm)
+    plan.advance()
+    svc.offer("Log0", inserts=_delta(1000, 30, 8, rng), seq=0)
+    svc.offer("Log1", inserts=_delta(1000, 30, 8, rng), seq=0)
+    svc.refresh()  # v0's clean fails inside the epoch; v1 commits
+    assert vm.health.is_degraded("v0")
+    se = svc.query("v0", Q_SUM, record_traffic=False)
+    assert "v0" in se.staleness.degraded_views
+    assert se.estimate.method.endswith("+degraded")
+    ok = svc.query("v1", Q_SUM, record_traffic=False)
+    assert not ok.estimate.method.endswith("+degraded")
+
+    plan.advance()  # fault cleared; backoff (1 epoch) expires
+    svc.refresh()  # retry is due: v0 re-cleans from the FULL pending set
+    assert not vm.health.is_degraded("v0")
+    se2 = svc.query("v0", Q_SUM, record_traffic=False)
+    assert not se2.estimate.method.endswith("+degraded")
+
+
+def test_differential_recovered_fleet_is_bit_identical():
+    """The acceptance bar: a chaos run (failed clean + corrupt + duplicate
+    offers) converges to BIT-IDENTICAL samples and estimates once the
+    faults clear, because cleans recompute from the full pending set."""
+    def _run(specs):
+        vm, rng = _fleet()
+        svc = StreamingViewService(vm, StreamConfig(auto_refresh=False))
+        vm.stream = svc
+        plan = FaultPlan(specs).attach(vm) if specs else None
+        d_rng = np.random.default_rng(17)
+        for epoch in range(3):
+            if plan is not None:
+                plan.advance()
+            for i in range(2):
+                svc.offer(f"Log{i}", inserts=_delta(1000 + 100 * epoch, 25, 8,
+                                                    d_rng), seq=epoch * 10 + i)
+            svc.refresh()
+        for _ in range(2):  # fault-free recovery epochs
+            if plan is not None:
+                plan.advance()
+            svc.refresh()
+        return vm
+
+    vm_a = _run([
+        FaultSpec(epoch=1, kind="refresh_error", target="v0"),
+        FaultSpec(epoch=2, kind="duplicate_batch", target="Log1"),
+        FaultSpec(epoch=2, kind="corrupt_batch", target="Log0"),
+    ])
+    vm_b = _run(None)
+    assert not vm_a.health.quarantined()
+    for name in ("v0", "v1"):
+        a, b = vm_a.views[name], vm_b.views[name]
+        # version counters may differ (the chaos run skipped a clean while
+        # quarantined); the DATA must be bit-identical
+        _assert_sample_equal(_sample_state(a), _sample_state(b),
+                             check_version=False)
+        ea = vm_a.query(name, Q_SUM, record_traffic=False)
+        eb = vm_b.query(name, Q_SUM, record_traffic=False)
+        assert (ea.value, ea.ci_low, ea.ci_high) == (eb.value, eb.ci_low,
+                                                     eb.ci_high)
+
+
+# ---------------------------------------------------------------------------
+# FleetHealth: backoff + retry budget
+# ---------------------------------------------------------------------------
+
+def test_backoff_doubles_and_retry_budget_exhausts():
+    h = FleetHealth(max_retries=3, backoff_base=1, backoff_cap=4)
+    h.begin_epoch()  # epoch 1
+    h.record_failure("v", RuntimeError("x"))
+    assert h.blocked("v")  # backoff_until = 2
+    assert h.views["v"].backoff_until_epoch == 2
+    h.begin_epoch()  # epoch 2
+    assert not h.blocked("v") and h.retry_due("v")
+    h.record_failure("v", RuntimeError("x"))  # consecutive=2 -> delay 2
+    assert h.views["v"].backoff_until_epoch == 4
+    h.begin_epoch()  # epoch 3: still inside backoff
+    assert h.blocked("v")
+    h.begin_epoch()  # epoch 4
+    h.record_failure("v", RuntimeError("x"))  # delay capped at 4; budget out
+    assert h.views["v"].retries_left == 0
+    for _ in range(10):
+        h.begin_epoch()
+    assert h.blocked("v")  # permanent serve-stale until operator reset
+    h.reset("v")
+    assert not h.blocked("v") and not h.is_degraded("v")
+
+
+def test_success_clears_quarantine_and_restores_budget():
+    h = FleetHealth(max_retries=2)
+    h.begin_epoch()
+    h.record_failure("v", RuntimeError("x"))
+    h.begin_epoch()
+    h.record_success("v")
+    hv = h.views["v"]
+    assert not hv.degraded and hv.retries_left == 2
+    assert hv.recovered_epoch == 2 and hv.consecutive == 0
+
+
+# ---------------------------------------------------------------------------
+# Planner: poisoned features, deadlines, quarantine re-entry
+# ---------------------------------------------------------------------------
+
+def test_nan_panel_sanitized_and_quarantined_not_raised():
+    vm, rng = _fleet()
+    vm.ingest("Log0", inserts=_delta(1000, 20, 8, rng))
+    cm = CostModel(vm).attach()
+    FaultPlan([FaultSpec(epoch=1, kind="nan_panel", target="v0")]).attach(
+        vm).advance()
+    out = cm.features()
+    assert np.all(np.isfinite(out))
+    assert cm.last_poisoned == ["v0"]
+    assert vm.health.is_degraded("v0") and not vm.health.is_degraded("v1")
+
+
+def test_planner_skips_quarantined_view_and_retries_after_backoff():
+    vm, rng = _fleet()
+    planner = MaintenancePlanner(vm, budget_s=100.0, age_cap_s=1e9)
+    planner.cost_model.pin_costs(refresh_s=0.01, maintain_s=0.05)
+    plan = FaultPlan([
+        FaultSpec(epoch=1, kind="refresh_error", target="v0"),
+    ]).attach(vm)
+    for i in range(2):
+        vm.ingest(f"Log{i}", inserts=_delta(1000, 20, 8, rng))
+    plan.advance()
+    rep1 = planner.step()
+    failed = {a.view: a.failed for a in rep1.actions}
+    assert failed.get("v0") is True
+    assert vm.health.is_degraded("v0")
+    plan.advance()  # fault cleared; backoff expired next epoch
+    rep2 = planner.step()
+    acted = {a.view for a in rep2.actions if not a.failed}
+    assert "v0" in acted
+    assert not vm.health.is_degraded("v0")
+
+
+def test_latency_fault_trips_deadline_and_degrades():
+    vm, rng = _fleet()
+    planner = MaintenancePlanner(vm, budget_s=100.0, age_cap_s=1e9,
+                                 deadline_floor_s=0.5)
+    planner.cost_model.pin_costs(refresh_s=0.01, maintain_s=0.05)
+    plan = FaultPlan([
+        FaultSpec(epoch=1, kind="latency", target="v0", magnitude=5.0),
+    ]).attach(vm)
+    for i in range(2):
+        vm.ingest(f"Log{i}", inserts=_delta(1000, 20, 8, rng))
+    plan.advance()
+    rep = planner.step()
+    acts = {a.view: a for a in rep.actions}
+    assert acts["v0"].overrun and acts["v0"].actual_s > acts["v0"].deadline_s
+    assert vm.health.is_degraded("v0")
+    assert "TimeoutError" in vm.health.views["v0"].last_error
+    # the blowup went into the EWMA: the next prediction prices it honestly
+    assert not acts.get("v1", acts["v0"]).overrun or "v1" not in acts
+
+
+def test_plan_reports_quarantined_views():
+    vm, rng = _fleet()
+    planner = MaintenancePlanner(vm, budget_s=100.0, age_cap_s=1e9,
+                                 backoff_base=4)
+    planner.cost_model.pin_costs(refresh_s=0.01, maintain_s=0.05)
+    plan = FaultPlan([
+        FaultSpec(epoch=1, kind="refresh_error", target="v0"),
+    ]).attach(vm)
+    for i in range(2):
+        vm.ingest(f"Log{i}", inserts=_delta(1000, 20, 8, rng))
+    plan.advance()
+    planner.step()  # v0 fails; backoff_base=4 keeps it blocked for a while
+    plan.advance()
+    rep = planner.step()
+    assert rep.quarantined == ["v0"]
+    assert all(a.view != "v0" for a in rep.actions)
+    assert "v0" in rep.skipped
+
+
+# ---------------------------------------------------------------------------
+# FleetMonitor: injectable clock, skew guard, revive
+# ---------------------------------------------------------------------------
+
+def test_fleet_monitor_injectable_clock_detects_timeout():
+    clock = FakeClock()
+    mon = FleetMonitor(3, timeout_s=5.0, clock=clock)
+    clock.t = 4.0
+    mon.heartbeat(0)
+    mon.heartbeat(1)
+    clock.t = 8.0  # host 2 never beat (age 8 > 5); hosts 0,1 are fresh
+    failed, stragglers = mon.sweep()
+    assert failed == [2] and stragglers == []
+    assert mon.alive_hosts() == [0, 1]
+
+
+def test_fleet_monitor_clock_skew_is_not_a_timeout():
+    clock = FakeClock(100.0)
+    mon = FleetMonitor(1, timeout_s=5.0, clock=clock)
+    mon.heartbeat(0)
+    clock.t = 0.0  # sweep clock skewed BEHIND the last heartbeat
+    failed, _ = mon.sweep()
+    assert failed == []
+
+
+def test_fleet_monitor_revive_clears_history():
+    clock = FakeClock()
+    mon = FleetMonitor(2, timeout_s=1.0, clock=clock)
+    mon.report_step(0, 10.0)
+    clock.t = 5.0
+    mon.heartbeat(1)
+    failed, _ = mon.sweep()
+    assert failed == [0]
+    mon.revive(0)
+    assert 0 in mon.alive_hosts()
+    assert mon.hosts[0].strikes == 0 and len(mon.hosts[0].step_times) == 0
+    assert mon.hosts[0].last_beat == 5.0
+
+
+# ---------------------------------------------------------------------------
+# Degrade math
+# ---------------------------------------------------------------------------
+
+def test_widen_estimate_adds_pending_bound_and_marks_method():
+    vm, rng = _fleet()
+    est = vm.query("v0", Q_SUM, record_traffic=False)
+    mv = vm.views["v0"]
+    n_hat = float(np.asarray(mv.clean_sample.valid).sum()) / mv.m
+    widened = widen_estimate(est, mv, pending_rows=50)
+    extra = abs(est.value) * 50.0 / n_hat
+    assert widened.value == est.value
+    assert widened.ci_low == pytest.approx(est.ci_low - extra)
+    assert widened.ci_high == pytest.approx(est.ci_high + extra)
+    assert widened.stderr == pytest.approx(est.stderr + extra)
+    assert widened.method == est.method + "+degraded"
+    # idempotent marking and zero-pending no-op width
+    again = widen_estimate(widened, mv, pending_rows=0)
+    assert again.method == widened.method
+    assert again.ci_low == widened.ci_low
