@@ -26,6 +26,7 @@ MODULES = (
     "fig_query_throughput",
     "fig_planner_fleet",
     "fig_chaos_soak",
+    "fig_serving_soak",
     "appendix_minmax",
     "kernels_bench",
     "svc_training",

@@ -39,15 +39,20 @@ def pending_delta_bound(mv, pending_rows: int) -> float:
     return float(pending_rows) / max(n_hat, 1.0)
 
 
-def widen_estimate(est: Estimate, mv, pending_rows: int) -> Estimate:
+def widen_estimate(est: Estimate, mv, pending_rows: int,
+                   suffix: str = "+degraded") -> Estimate:
     """Widen ``est``'s interval by the pending-delta bound (degraded serve).
 
     Zero pending rows widen nothing (the stale answer is exact w.r.t. the
-    drained stream); the value itself never moves.
+    drained stream); the value itself never moves.  ``suffix`` names WHY
+    the answer degraded — ``"+degraded"`` for the failure axis,
+    ``"+throttled"`` / ``"+shed"`` for the admission layer — so telemetry
+    can attribute quality loss to its cause; an already-suffixed method is
+    left alone (idempotent under repeated widening).
     """
     rel = pending_delta_bound(mv, pending_rows)
     extra = abs(float(np.asarray(est.value))) * rel
-    method = est.method if est.method.endswith("+degraded") else est.method + "+degraded"
+    method = est.method if est.method.endswith(suffix) else est.method + suffix
     return dataclasses.replace(
         est,
         stderr=est.stderr + extra,

@@ -23,7 +23,17 @@ behaviour is a tested surface:
   * ``duplicate_batch`` — re-offer an identical copy under the same seq
     (the coalescer's newest-wins dedup must absorb it bit-equally);
   * ``clock_skew`` — shift the harness clock by ``magnitude`` seconds
-    (negative allowed; age/heartbeat math must clamp, not explode).
+    (negative allowed; age/heartbeat math must clamp, not explode);
+  * ``traffic_spike`` — multiply the epoch's offered query load by
+    ``magnitude`` (the soak harness consults ``traffic_multiplier()``;
+    the admission layer must shed/degrade, never queue or raise);
+  * ``slow_drain`` — report ``magnitude`` extra wall seconds for the
+    streaming drain (feeds the admission controller's overload EWMA
+    without real sleeps: refreshes look expensive, queries must degrade
+    to serve-stale);
+  * ``cache_poison`` — tamper a view's result-cache entries so their
+    self-described sample_version no longer matches their key (read
+    validation must reject and recompute, never serve the entry).
 
 The plan's epoch cursor is advanced explicitly by the harness
 (``advance()``), so a given (specs, seed) pair replays identically —
@@ -44,6 +54,9 @@ FAULT_KINDS = (
     "corrupt_batch",
     "duplicate_batch",
     "clock_skew",
+    "traffic_spike",
+    "slow_drain",
+    "cache_poison",
 )
 
 
@@ -165,23 +178,57 @@ class FaultPlan:
         return out
 
     # -- producer-path hooks (streaming offer) -------------------------------
-    def mutate_offer(self, base: str, inserts, deletes, seq):
+    def mutate_offer(self, base: str, inserts, deletes, seq, key=None):
         """Expand one producer offer into the list of offers that actually
         reach the service: the original, plus any scheduled duplicate or
-        NaN-corrupt copy under the SAME sequence number (a retried /
-        bit-flipped transmission)."""
-        offers = [(inserts, deletes, seq)]
+        NaN-corrupt copy under the SAME sequence number and idempotency key
+        (a retried / bit-flipped transmission — the duplicate exercises the
+        at-least-once dedupe when the producer set a key)."""
+        offers = [(inserts, deletes, seq, key)]
         for spec in self._active("duplicate_batch", base):
-            offers.append((inserts, deletes, seq))
+            offers.append((inserts, deletes, seq, key))
             self.injected.append((self.epoch, spec, f"offer:{base}"))
         for spec in self._active("corrupt_batch", base):
             offers.append((
                 _corrupt_copy(inserts) if inserts is not None else None,
                 _corrupt_copy(deletes) if deletes is not None else None,
                 seq,
+                key,
             ))
             self.injected.append((self.epoch, spec, f"offer:{base}"))
         return offers
+
+    # -- serving-plane hooks (admission / cache / drain) ---------------------
+    def traffic_multiplier(self) -> float:
+        """Offered-load multiplier for this epoch (product of active
+        ``traffic_spike`` magnitudes; 1.0 when none scheduled).  The load
+        harness multiplies its per-epoch query count by this."""
+        mult = 1.0
+        for spec in self._active("traffic_spike"):
+            self.injected.append((self.epoch, spec, "traffic"))
+            mult *= max(float(spec.magnitude), 0.0)
+        return mult
+
+    def drain_latency_s(self) -> float:
+        """Extra wall seconds to REPORT for this epoch's streaming drain
+        (``slow_drain``): inflates the admission controller's drain-cost
+        EWMA without real sleeps, so overload paths test deterministically."""
+        extra = 0.0
+        for spec in self._active("slow_drain"):
+            self.injected.append((self.epoch, spec, "drain"))
+            extra += float(spec.magnitude)
+        return extra
+
+    def poison_cache(self, cache, view: str) -> int:
+        """Fire any scheduled ``cache_poison`` fault against ``view``:
+        tampers the result cache's stored entries (wrong internal version)
+        via ``ResultCache.poison``.  Returns entries tampered; the cache's
+        read validation must reject every one."""
+        n = 0
+        for spec in self._active("cache_poison", view):
+            n += cache.poison(view)
+            self.injected.append((self.epoch, spec, f"cache:{view}"))
+        return n
 
     # -- clock (harness-owned) -----------------------------------------------
     def clock_skew_s(self) -> float:

@@ -1,3 +1,28 @@
+from repro.serving.admission import (
+    ADMIT,
+    SHED,
+    THROTTLE,
+    AdmissionConfig,
+    AdmissionController,
+    TokenBucket,
+)
 from repro.serving.engine import Request, ServeEngine
+from repro.serving.result_cache import (
+    ResultCache,
+    predicate_digest,
+    query_key,
+)
 
-__all__ = ["Request", "ServeEngine"]
+__all__ = [
+    "ADMIT",
+    "SHED",
+    "THROTTLE",
+    "AdmissionConfig",
+    "AdmissionController",
+    "Request",
+    "ResultCache",
+    "ServeEngine",
+    "TokenBucket",
+    "predicate_digest",
+    "query_key",
+]

@@ -1,8 +1,10 @@
 """Batched serving engine with continuous batching.
 
-A fixed pool of ``max_batch`` slots decodes in lockstep (one jitted
-decode_step per tick over the whole pool).  Finished or empty slots are
-refilled from the request queue; each admission runs a (padded) prefill
+A fixed pool of ``max_batch`` slots decodes per tick (one jitted
+decode_step per distinct cache position — exactly one for the uniform
+pools of the common case; mixed-length prompts group by position and
+splice their rows back with a masked cache merge).  Finished or empty
+slots are refilled from the request queue; each admission runs a prefill
 for that slot's prompt and splices the resulting KV into the pool cache.
 
 Serving telemetry (per-tick active slots, emitted tokens, per-request
@@ -58,8 +60,47 @@ class ServeEngine:
         self._decode = jax.jit(
             lambda p, c, t, pos: model.decode_step(p, c, t, pos)
         )
+        # Which axis of each cache leaf is the batch (slot) axis: the models'
+        # decode_step takes ONE scalar pos and writes EVERY batch row there,
+        # so mixed-position decodes and per-slot prefills must splice only
+        # their own rows back into the pool cache (masked merge).  Inferred
+        # structurally — build two throwaway caches that differ only in B
+        # and diff the leaf shapes — so every model family works unchanged.
+        self._batch_axes = self._infer_batch_axes(model, max_seq)
+        self._merge = jax.jit(self._masked_merge)
         self.completed: List[Request] = []
         self.ticks = 0
+
+    @staticmethod
+    def _infer_batch_axes(model: Model, max_seq: int) -> List[int]:
+        """Per-leaf batch axis of the model's cache pytree (-1: no batch
+        axis; such a leaf is shared and taken from the newest decode)."""
+        a = jax.tree_util.tree_leaves(model.init_cache(3, max_seq))
+        b = jax.tree_util.tree_leaves(model.init_cache(5, max_seq))
+        axes = []
+        for la, lb in zip(a, b):
+            ax = -1
+            for d, (da, db) in enumerate(zip(la.shape, lb.shape)):
+                if da != db:
+                    ax = d
+                    break
+            axes.append(ax)
+        return axes
+
+    def _masked_merge(self, old, new, mask):
+        """new where a slot's mask is set, old elsewhere — per cache leaf,
+        broadcast along that leaf's batch axis."""
+        leaves_old, treedef = jax.tree_util.tree_flatten(old)
+        leaves_new = jax.tree_util.tree_leaves(new)
+        out = []
+        for lo, ln, ax in zip(leaves_old, leaves_new, self._batch_axes):
+            if ax < 0:
+                out.append(ln)
+                continue
+            shape = [1] * lo.ndim
+            shape[ax] = lo.shape[ax]
+            out.append(jnp.where(mask.reshape(shape), ln, lo))
+        return jax.tree_util.tree_unflatten(treedef, out)
 
     # -- admission -------------------------------------------------------------
     def submit(self, req: Request) -> None:
@@ -73,15 +114,19 @@ class ServeEngine:
             req = self.queue.popleft()
             P = len(req.prompt)
             # prefill the slot: feed prompt tokens one by one through
-            # decode_step (simple and uniform across families; batch-1 slices
-            # of the pooled cache are updated in place at this slot's rows).
+            # decode_step (simple and uniform across families).  decode_step
+            # writes EVERY batch row at position i, so only this slot's rows
+            # may merge back — an unmasked splice would corrupt the KV of
+            # whatever the sibling slots have at positions 0..P-1.
+            mask = jnp.asarray(np.arange(self.B) == slot)
             logits = None
             for i, tok in enumerate(req.prompt):
                 tokens = np.zeros((self.B, 1), np.int32)
                 tokens[slot, 0] = tok
-                logits, self.cache = self._decode(
+                logits, new_cache = self._decode(
                     self.params, self.cache, jnp.asarray(tokens), jnp.int32(i)
                 )
+                self.cache = self._merge(self.cache, new_cache, mask)
             self.slots[slot] = req
             self.pos[slot] = P
             self.budget[slot] = req.max_new
@@ -102,16 +147,27 @@ class ServeEngine:
         if not active:
             return 0
         self.ticks += 1
-        tokens = self.last_tok.reshape(self.B, 1).astype(np.int32)
-        # lockstep position: per-slot positions differ; the decode mask uses
-        # a single pos scalar, so we step at the max and rely on per-slot
-        # cache rows being written at their own pos via the tokens we feed.
-        pos = int(self.pos[active].max())
-        logits, self.cache = self._decode(
-            self.params, self.cache, jnp.asarray(tokens), jnp.int32(pos)
-        )
+        tokens = jnp.asarray(self.last_tok.reshape(self.B, 1).astype(np.int32))
+        # Per-slot positions differ under continuous batching (a freshly
+        # admitted short prompt sits at P while long-running slots are deep
+        # into their budget), but decode_step takes ONE scalar pos.  Group
+        # the active slots by position and run one pooled decode per
+        # distinct pos, splicing each group's rows back with a masked merge
+        # — decoding everyone at max(pos) would write (and read) short
+        # slots' KV at the wrong cache position.  Uniform pools (the common
+        # case) still take exactly one decode + one merge.
+        nxt = np.zeros(self.B, np.int64)
+        for pos in sorted({int(self.pos[i]) for i in active}):
+            group = np.asarray([self.slots[i] is not None
+                                and int(self.pos[i]) == pos
+                                for i in range(self.B)])
+            logits, new_cache = self._decode(
+                self.params, self.cache, tokens, jnp.int32(pos)
+            )
+            self.cache = self._merge(self.cache, new_cache, jnp.asarray(group))
+            picks = np.asarray(jnp.argmax(logits[:, -1], axis=-1))
+            nxt[group] = picks[group]
         emitted = 0
-        nxt = np.asarray(jnp.argmax(logits[:, -1], axis=-1))
         for i in active:
             req = self.slots[i]
             tok = int(nxt[i])

@@ -1,0 +1,191 @@
+"""Staleness-keyed result cache: invalidation for free via sample_version.
+
+A cache-aside layer for the serving plane's query answers.  The key is
+
+    (view, ManagedView.sample_version, predicate digest)
+
+so invalidation costs NOTHING: ``svc_refresh`` / ``maintain`` /
+``_retune_sample_ratio`` already bump ``sample_version`` whenever either
+sample moves, which silently strands every cached entry of the old window —
+no flush call, no invalidation bus.  Between version bumps the estimator
+pipeline is deterministic (same samples, same query, same confidence), so a
+cache hit is BIT-IDENTICAL to the recompute it replaced; the bit-equality
+is a tested contract (tests/test_serving_plane.py).
+
+The predicate digest folds the full answer-shaping signature — the frozen
+``Query`` dataclass (agg, column, predicate AST, percentile), confidence
+level, estimator preference and fused flag — through
+``core.hashing.key_digest``, the same 64-bit splitmix32 composite-key
+digest the outlier-membership kernel trusts.  Digests are memoized per
+signature string, so the device-side fold runs once per distinct query
+shape, not per request.
+
+Stale-version entries are not garbage: under overload the admission layer
+may serve the *latest stored version* of an answer (``get_any``) in
+degraded mode — CI widened by the drift bound, method tagged — instead of
+recomputing.  Entries self-describe their version, and every read validates
+the stored version against the key; a mismatch (the ``cache_poison`` chaos
+fault plants exactly that) is rejected with accounting, never served.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from collections import OrderedDict
+from typing import Dict, Optional, Tuple
+
+import numpy as np
+
+from repro.core.estimators import Estimate, Query
+
+
+@functools.lru_cache(maxsize=8192)
+def predicate_digest(signature: str) -> Tuple[int, int]:
+    """64-bit (hi, lo) digest of a query signature string via
+    ``core.hashing.key_digest`` — each uint32 word of the UTF-8 bytes is
+    one key column of a single-row composite key.  Memoized per signature,
+    so the per-request cost is a dict lookup."""
+    import jax.numpy as jnp
+
+    from repro.core import hashing
+
+    raw = signature.encode("utf-8")
+    pad = (-len(raw)) % 4
+    words = np.frombuffer(raw + b"\0" * pad, dtype=np.uint32).copy()
+    # the word count itself is a column: "a" and "a\0\0\0\0" must differ
+    cols = [jnp.asarray(np.array([len(raw)], np.uint32))]
+    cols += [jnp.asarray(words[i:i + 1]) for i in range(words.shape[0])]
+    hi, lo = hashing.key_digest(cols)
+    return int(np.asarray(hi)[0]), int(np.asarray(lo)[0])
+
+
+def query_key(q: Query, confidence: float, prefer: Optional[str],
+              fused: Optional[bool]) -> Optional[Tuple[int, int]]:
+    """Digest for one query, or None when the answer is not cacheable.
+
+    Only the CLT sample-mean class caches: sum/count/avg answers are pure
+    functions of (samples, query, confidence, prefer, fused).  Bootstrap
+    (median/percentile) answers depend on a caller-held PRNG key and
+    min/max on exceedance machinery — both stay on the compute path."""
+    if q.agg not in ("sum", "count", "avg"):
+        return None
+    return predicate_digest(
+        repr((q, float(confidence), prefer, fused))
+    )
+
+
+@dataclasses.dataclass
+class CacheEntry:
+    view: str
+    version: int  # the sample_version the estimate was computed at
+    digest: Tuple[int, int]
+    estimate: Estimate
+
+
+class ResultCache:
+    """Bounded LRU of query answers keyed on (view, sample_version, digest).
+
+    Cache-aside: the serving layer looks up, computes misses, and ``put``s.
+    ``get`` demands an exact version match (bit-equal serving); ``get_any``
+    returns the latest stored version for (view, digest) regardless of
+    staleness — the overload path's serve-stale source.  Both validate the
+    entry's self-described version against its key and reject mismatches
+    (``poison_rejected``): a poisoned entry costs one recompute, never a
+    wrong answer."""
+
+    def __init__(self, capacity: int = 256):
+        self.capacity = int(capacity)
+        self._entries: "OrderedDict[Tuple[str, int, Tuple[int, int]], CacheEntry]" = OrderedDict()
+        # (view, digest) -> newest stored version (the serve-stale index)
+        self._latest: Dict[Tuple[str, Tuple[int, int]], int] = {}
+        self.hits = 0
+        self.misses = 0
+        self.stale_hits = 0  # get_any answers served from an older version
+        self.evictions = 0
+        self.puts = 0
+        self.poison_rejected = 0  # version-mismatched entries refused
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def _validated(self, key, entry: Optional[CacheEntry]) -> Optional[CacheEntry]:
+        if entry is None:
+            return None
+        if entry.view != key[0] or entry.version != key[1] or entry.digest != key[2]:
+            # a wrong-version (poisoned / corrupted) entry: evict + refuse
+            self._entries.pop(key, None)
+            if self._latest.get((key[0], key[2])) == key[1]:
+                self._latest.pop((key[0], key[2]), None)
+            self.poison_rejected += 1
+            return None
+        return entry
+
+    # -- cache-aside API -----------------------------------------------------
+    def get(self, view: str, version: int,
+            digest: Tuple[int, int]) -> Optional[Estimate]:
+        """Exact-version lookup: the bit-equal fast path."""
+        key = (view, int(version), digest)
+        entry = self._validated(key, self._entries.get(key))
+        if entry is None:
+            self.misses += 1
+            return None
+        self._entries.move_to_end(key)
+        self.hits += 1
+        return entry.estimate
+
+    def get_any(self, view: str,
+                digest: Tuple[int, int]) -> Optional[Tuple[Estimate, int]]:
+        """Latest stored version for (view, digest), any staleness: the
+        overload serve-stale source.  Returns (estimate, version) or None;
+        counts as a ``stale_hit`` (the caller widens + tags the answer)."""
+        v = self._latest.get((view, digest))
+        if v is None:
+            return None
+        key = (view, v, digest)
+        entry = self._validated(key, self._entries.get(key))
+        if entry is None:
+            return None
+        self._entries.move_to_end(key)
+        self.stale_hits += 1
+        return entry.estimate, v
+
+    def put(self, view: str, version: int, digest: Tuple[int, int],
+            estimate: Estimate) -> None:
+        key = (view, int(version), digest)
+        self._entries[key] = CacheEntry(view, int(version), digest, estimate)
+        self._entries.move_to_end(key)
+        self.puts += 1
+        latest_key = (view, digest)
+        if version >= self._latest.get(latest_key, -1):
+            self._latest[latest_key] = int(version)
+        while len(self._entries) > self.capacity:
+            old_key, _ = self._entries.popitem(last=False)
+            self.evictions += 1
+            if self._latest.get((old_key[0], old_key[2])) == old_key[1]:
+                self._latest.pop((old_key[0], old_key[2]), None)
+
+    # -- chaos hook ----------------------------------------------------------
+    def poison(self, view: str) -> int:
+        """The ``cache_poison`` fault: tamper every stored entry of ``view``
+        so its self-described version no longer matches its key — the shape
+        a buggy writer or a torn update would leave behind.  Read
+        validation must reject every tampered entry (counted in
+        ``poison_rejected``); returns how many entries were tampered."""
+        n = 0
+        for key, entry in self._entries.items():
+            if key[0] == view:
+                entry.version = entry.version - 1
+                n += 1
+        return n
+
+    def stats(self) -> Dict[str, int]:
+        return {
+            "size": len(self._entries),
+            "hits": self.hits,
+            "misses": self.misses,
+            "stale_hits": self.stale_hits,
+            "puts": self.puts,
+            "evictions": self.evictions,
+            "poison_rejected": self.poison_rejected,
+        }

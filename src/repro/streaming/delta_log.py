@@ -19,7 +19,8 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Callable, List, Optional, Tuple
+from collections import OrderedDict
+from typing import Callable, Hashable, List, Optional, Tuple
 
 from repro.relational.relation import Relation, compact
 
@@ -75,6 +76,7 @@ class DeltaLog:
         base: str,
         max_batches: int = 64,
         clock: Callable[[], float] = time.monotonic,
+        dedupe_window: int = 4096,
     ):
         self.base = base
         self.max_batches = int(max_batches)
@@ -84,6 +86,16 @@ class DeltaLog:
         self.high_seq = -1  # highest sequence number ever offered
         self.drained_through_seq = -1  # highest seq included in a drain
         self.total_offered = 0  # rows, lifetime
+        # -- at-least-once idempotency (queue-based load leveling) ------------
+        # producer idempotency keys of ACCEPTED offers, newest-last; a replay
+        # of an accepted key is absorbed (not an error) so a spiking producer
+        # can retry blindly.  The window survives drains: a retry arriving
+        # after the original's window was drained still dedupes, keeping
+        # re-drains bit-equal to a once-delivered stream.
+        self.dedupe_window = int(dedupe_window)
+        self._seen_keys: "OrderedDict[Hashable, int]" = OrderedDict()
+        self.deduped_batches = 0  # replayed offers absorbed by their key
+        self.deduped_rows = 0
         # -- failure-axis accounting (surfaced in StalenessInfo) -------------
         self.shed_rows = 0  # rows dropped by the drop-oldest shed policy
         self.shed_batches = 0
@@ -101,11 +113,27 @@ class DeltaLog:
         inserts: Optional[Relation] = None,
         deletes: Optional[Relation] = None,
         seq: Optional[int] = None,
-    ) -> MicroBatch:
+        key: Optional[Hashable] = None,
+    ) -> Optional[MicroBatch]:
         """Append a micro-batch; ``seq`` may arrive out of order (coalescing
-        restores sequence order).  Raises Backpressure when the ring is full."""
+        restores sequence order).  Raises Backpressure when the ring is full.
+
+        ``key`` is the producer's idempotency key: a replay of an already-
+        ACCEPTED key is absorbed silently (returns None, counted in
+        ``deduped_batches``/``deduped_rows``) so at-least-once producers can
+        retry under spikes without double-counting rows.  Keys are recorded
+        only on acceptance — a batch rejected as corrupt or bounced by
+        Backpressure may retry the same key — and the seen-window survives
+        drains, so a late replay of a drained window still dedupes and the
+        next drain stays bit-equal to a once-delivered stream."""
         if inserts is None and deletes is None:
             raise ValueError("empty micro-batch")
+        if key is not None and key in self._seen_keys:
+            self.deduped_batches += 1
+            self.deduped_rows += sum(
+                _host_count(r) for r in (inserts, deletes) if r is not None
+            )
+            return None
         try:
             for rel in (inserts, deletes):
                 if rel is not None:
@@ -128,6 +156,10 @@ class DeltaLog:
         self._ring.append(mb)
         self.high_seq = max(self.high_seq, mb.seq)
         self.total_offered += mb.rows()
+        if key is not None:
+            self._seen_keys[key] = mb.seq
+            while len(self._seen_keys) > self.dedupe_window:
+                self._seen_keys.popitem(last=False)
         return mb
 
     # -- watermark state -----------------------------------------------------
@@ -375,8 +407,10 @@ class PartitionedDeltaLog:
         ]
 
     def offer(self, shard: int, inserts: Optional[Relation] = None,
-              deletes: Optional[Relation] = None, seq: Optional[int] = None):
-        return self.shards[shard].offer(inserts=inserts, deletes=deletes, seq=seq)
+              deletes: Optional[Relation] = None, seq: Optional[int] = None,
+              key: Optional[Hashable] = None):
+        return self.shards[shard].offer(inserts=inserts, deletes=deletes,
+                                        seq=seq, key=key)
 
     def pending_rows(self) -> int:
         return sum(s.pending_rows() for s in self.shards)

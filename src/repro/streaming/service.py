@@ -27,7 +27,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Callable, Dict, Optional
+from typing import Callable, Dict, Hashable, List, Optional, Sequence, Tuple
 
 from repro.core.estimators import Estimate, Query
 from repro.streaming.delta_log import Backpressure, CorruptBatch, DeltaLog
@@ -53,6 +53,21 @@ class StreamConfig:
     # a failed watermark refresh inside query()/query_batch() degrades the
     # answer (widened CI + degraded staleness) instead of raising
     degrade_on_error: bool = True
+    # -- serving plane (overload axis) ---------------------------------------
+    # admission control: None serves every query at full cost (the legacy
+    # behaviour); an AdmissionConfig (repro.serving.admission) throttles
+    # over-budget tenants and sheds under fleet overload — both degrade to
+    # serve-stale-with-wider-CI instead of queueing or raising
+    admission: Optional[object] = None
+    # staleness-keyed result cache (repro.serving.result_cache): entries
+    # keyed on (view, sample_version, predicate digest) so svc_refresh /
+    # maintain version bumps invalidate for free; 0 disables
+    cache_capacity: int = 256
+    # under SHED, a stale-version cache entry may answer (widened CI,
+    # "+shed" method) instead of recomputing; False forces a fresh scan
+    cache_serve_stale: bool = True
+    # per-base idempotency-key window for at-least-once producers
+    dedupe_window: int = 4096
 
 
 @dataclasses.dataclass
@@ -64,6 +79,9 @@ class BaseStaleness:
     oldest_pending_s: float
     shed_rows: int = 0  # rows dropped by the drop-oldest shed policy
     corrupt_batches: int = 0  # offers rejected by finite-validation
+    spills: int = 0  # lossless in-place ring coalesces
+    deduped_batches: int = 0  # at-least-once replays absorbed by key
+    deduped_rows: int = 0
 
 
 @dataclasses.dataclass
@@ -86,6 +104,19 @@ class StalenessInfo:
     # by the next successful refresh)
     shed_rows: int = 0  # fleet-wide rows shed by overload policies
     corrupt_batches: int = 0  # fleet-wide rejected offers
+    # -- overload axis (admission + cache + ingest leveling) -----------------
+    # WHY an answer was widened is observable here: admission verdicts,
+    # cache traffic, and at-least-once dedupe accounting, fleet-wide
+    spills: int = 0
+    deduped_batches: int = 0
+    deduped_rows: int = 0
+    throttled_queries: int = 0  # tenant-budget verdicts ("+throttled")
+    shed_queries: int = 0  # fleet-overload verdicts ("+shed")
+    admitted_queries: int = 0
+    overloaded: bool = False  # admission controller's live overload state
+    cache_hits: int = 0  # exact-version result-cache hits (bit-equal serves)
+    cache_stale_hits: int = 0  # stale-version entries served under SHED
+    cache_poison_rejected: int = 0  # version-mismatched entries refused
 
 
 @dataclasses.dataclass
@@ -121,6 +152,17 @@ class StreamingViewService:
         self.refresh_count = 0
         self.planner = None  # MaintenancePlanner once attach_planner ran
         self._refresh_error: Optional[str] = None  # last degraded refresh
+        # -- serving plane (overload axis) -----------------------------------
+        self.admission = None
+        if self.config.admission is not None:
+            from repro.serving.admission import AdmissionController
+
+            self.admission = AdmissionController(self.config.admission, clock)
+        self.result_cache = None
+        if self.config.cache_capacity > 0:
+            from repro.serving.result_cache import ResultCache
+
+            self.result_cache = ResultCache(self.config.cache_capacity)
 
     def attach_planner(self, planner):
         """Route watermark refreshes through the budgeted control plane:
@@ -132,12 +174,15 @@ class StreamingViewService:
     def _log(self, base: str) -> DeltaLog:
         if base not in self.logs:
             self.logs[base] = DeltaLog(
-                base, max_batches=self.config.max_batches, clock=self._clock
+                base, max_batches=self.config.max_batches, clock=self._clock,
+                dedupe_window=self.config.dedupe_window,
             )
         return self.logs[base]
 
     # -- producer side -------------------------------------------------------
-    def offer(self, base: str, inserts=None, deletes=None, seq: Optional[int] = None) -> bool:
+    def offer(self, base: str, inserts=None, deletes=None,
+              seq: Optional[int] = None,
+              key: Optional[Hashable] = None) -> bool:
         """Buffer a micro-batch; returns True if this offer triggered a
         refresh (watermark trip, or ring backpressure under the legacy
         ``shed_policy="refresh"``).
@@ -151,21 +196,26 @@ class StreamingViewService:
         ring even after shedding (``max_batches`` too small for one batch)
         is rejected with a clear ``ValueError`` instead of an uncaught
         ``Backpressure``.
+
+        ``key`` is an optional producer idempotency key: a replay of an
+        already-accepted key is absorbed with accounting (at-least-once
+        retries stay safe under spikes; the drain is bit-equal to a
+        once-delivered stream).
         """
         fault_plan = getattr(self.vm, "fault_plan", None)
         offers = (
-            fault_plan.mutate_offer(base, inserts, deletes, seq)
-            if fault_plan is not None else [(inserts, deletes, seq)]
+            fault_plan.mutate_offer(base, inserts, deletes, seq, key)
+            if fault_plan is not None else [(inserts, deletes, seq, key)]
         )
         triggered = False
-        for ins, dels, s in offers:
-            triggered |= self._offer_one(base, ins, dels, s)
+        for ins, dels, s, k in offers:
+            triggered |= self._offer_one(base, ins, dels, s, k)
         return triggered
 
-    def _offer_one(self, base: str, inserts, deletes, seq) -> bool:
+    def _offer_one(self, base: str, inserts, deletes, seq, key=None) -> bool:
         log = self._log(base)
         try:
-            refreshed = self._offer_bounded(log, inserts, deletes, seq)
+            refreshed = self._offer_bounded(log, inserts, deletes, seq, key)
         except CorruptBatch:
             # rejected with accounting (log.corrupt_batches/corrupt_rows);
             # the producer's retry of the uncorrupted batch carries the data
@@ -175,11 +225,12 @@ class StreamingViewService:
             return True
         return refreshed
 
-    def _offer_bounded(self, log: DeltaLog, inserts, deletes, seq) -> bool:
+    def _offer_bounded(self, log: DeltaLog, inserts, deletes, seq,
+                       key=None) -> bool:
         """Offer under the ring bound, applying the shed policy on overflow;
         returns True iff the legacy policy ran an inline refresh."""
         try:
-            log.offer(inserts=inserts, deletes=deletes, seq=seq)
+            log.offer(inserts=inserts, deletes=deletes, seq=seq, key=key)
             return False
         except Backpressure:
             pass
@@ -197,7 +248,7 @@ class StreamingViewService:
                 self.refresh()
                 refreshed = True
         try:
-            log.offer(inserts=inserts, deletes=deletes, seq=seq)
+            log.offer(inserts=inserts, deletes=deletes, seq=seq, key=key)
         except Backpressure as e:
             raise ValueError(
                 f"micro-batch cannot fit DeltaLog[{log.base}] "
@@ -279,6 +330,14 @@ class StreamingViewService:
                 total = sum(self.vm.svc_refresh_many(
                     affected, fused=self.config.fused
                 ).values())
+        fault_plan = getattr(self.vm, "fault_plan", None)
+        if fault_plan is not None:
+            # slow_drain chaos: report extra wall seconds without sleeping —
+            # the admission controller's overload EWMA sees an expensive
+            # drain and the serving ladder must degrade, deterministically
+            total += fault_plan.drain_latency_s()
+        if self.admission is not None:
+            self.admission.note_drain(total)
         self._last_refresh = self._clock()
         self.refresh_count += 1
         self._refresh_error = None
@@ -307,9 +366,13 @@ class StreamingViewService:
                 oldest_pending_s=l.oldest_age_s(now),
                 shed_rows=l.shed_rows,
                 corrupt_batches=l.corrupt_batches,
+                spills=l.spills,
+                deduped_batches=l.deduped_batches,
+                deduped_rows=l.deduped_rows,
             )
             for b, l in self.logs.items()
         }
+        adm, cache = self.admission, self.result_cache
         degraded_views = self.vm.health.degraded_views()
         return StalenessInfo(
             per_base=per_base,
@@ -331,6 +394,17 @@ class StreamingViewService:
             refresh_error=self._refresh_error,
             shed_rows=sum(l.shed_rows for l in self.logs.values()),
             corrupt_batches=sum(l.corrupt_batches for l in self.logs.values()),
+            spills=sum(l.spills for l in self.logs.values()),
+            deduped_batches=sum(l.deduped_batches for l in self.logs.values()),
+            deduped_rows=sum(l.deduped_rows for l in self.logs.values()),
+            throttled_queries=adm.throttled if adm is not None else 0,
+            shed_queries=adm.shed if adm is not None else 0,
+            admitted_queries=adm.admitted if adm is not None else 0,
+            overloaded=adm.overloaded() if adm is not None else False,
+            cache_hits=cache.hits if cache is not None else 0,
+            cache_stale_hits=cache.stale_hits if cache is not None else 0,
+            cache_poison_rejected=(
+                cache.poison_rejected if cache is not None else 0),
         )
 
     def _degrade_estimate(self, view_name: str, est: Estimate,
@@ -357,31 +431,138 @@ class StreamingViewService:
                 pending += bs.pending_rows
         return widen_estimate(est, self.vm.views[view_name], pending)
 
-    def query(self, view_name: str, q: Query, **kw) -> StreamedEstimate:
+    def query(self, view_name: str, q: Query, tenant: str = "default",
+              **kw) -> StreamedEstimate:
         """Answer from the freshest refreshed sample, with staleness attached.
 
-        With ``auto_refresh``, a due watermark is honored before answering so
-        the response never straddles a missed deadline.  A failed refresh or
-        a quarantined view degrades the answer (widened CI, ``degraded``
-        staleness) rather than raising — queries stay available under
-        failure."""
-        self._maybe_refresh()
-        est = self.vm.query(view_name, q, **kw)
-        st = self.staleness()
-        return StreamedEstimate(estimate=self._degrade_estimate(view_name, est, st),
-                                staleness=st)
+        The serving decision ladder (docs/ARCHITECTURE.md "Serving plane"):
+        admission first (an over-budget tenant or an overloaded fleet skips
+        all refresh work and degrades to serve-stale-with-wider-CI, method
+        tagged ``"+throttled"`` / ``"+shed"``), then the staleness-keyed
+        result cache (an exact ``sample_version`` hit is bit-identical to
+        the recompute it replaced), then compute.  With ``auto_refresh``,
+        an ADMITTED query honors a due watermark before answering.  A
+        failed refresh or a quarantined view degrades the answer (widened
+        CI, ``degraded`` staleness) rather than raising — queries stay
+        available under failure AND under load."""
+        return self.query_batch(view_name, [q], tenant=tenant, **kw)[0]
 
-    def query_batch(self, view_name: str, queries, **kw) -> list:
+    def query_batch(self, view_name: str, queries, tenant: str = "default",
+                    **kw) -> list:
         """Answer N dashboard queries in one fused engine pass
-        (``ViewManager.query_batch``) under ONE staleness snapshot: the
-        watermark is honored once up front and every estimate in the batch
-        carries the same ``StalenessInfo`` — the whole dashboard refers to
-        a single consistent refresh window (degraded or not)."""
-        self._maybe_refresh()
-        ests = self.vm.query_batch(view_name, queries, **kw)
+        (``ViewManager.query_batch``) under ONE staleness snapshot and ONE
+        admission verdict: the watermark is honored once up front (admitted
+        batches only) and every estimate in the batch carries the same
+        ``StalenessInfo`` — the whole dashboard refers to a single
+        consistent refresh window (degraded or not)."""
+        from repro.serving.admission import ADMIT
+
+        decision = ADMIT
+        if self.admission is not None:
+            decision = self.admission.decide(tenant, len(queries))
+        if decision == ADMIT:
+            self._maybe_refresh()
+        ests = self._answer_batch(view_name, list(queries), decision, kw)
         st = self.staleness()
         return [
             StreamedEstimate(estimate=self._degrade_estimate(view_name, e, st),
                              staleness=st)
             for e in ests
         ]
+
+    # -- the cache + degrade rungs of the ladder -----------------------------
+    def _answer_batch(self, view_name: str, queries: Sequence[Query],
+                      decision: str, kw: dict) -> List[Estimate]:
+        """Resolve a batch under an admission verdict: result-cache lookups
+        (exact version always; stale version under SHED), one batched
+        compute for the misses, cache fills, and — for non-admitted
+        verdicts — CI widening + method tagging.  Order matches
+        ``queries``; every query resolves in bounded work."""
+        from repro.serving.admission import ADMIT, SHED
+
+        mv = self.vm.views[view_name]
+        cache = self.result_cache
+        version = mv.sample_version
+        fault_plan = getattr(self.vm, "fault_plan", None)
+        if cache is not None and fault_plan is not None:
+            fault_plan.poison_cache(cache, view_name)
+
+        if cache is None:
+            results: List[Optional[Estimate]] = list(
+                self.vm.query_batch(view_name, queries, **kw)
+            )
+            stale_version: Dict[int, int] = {}
+        else:
+            from repro.serving.result_cache import query_key
+
+            confidence = kw.get("confidence", 0.95)
+            prefer = kw.get("prefer")
+            fused = kw.get("fused")
+            record_traffic = kw.get("record_traffic", True)
+            keys = [
+                None if kw.get("rng") is not None
+                else query_key(q, confidence, prefer, fused)
+                for q in queries
+            ]
+            results = [None] * len(queries)
+            stale_version = {}  # index -> version a stale hit was served at
+            misses: List[int] = []
+            hits = 0
+            for i, (q, key) in enumerate(zip(queries, keys)):
+                if key is None:
+                    misses.append(i)
+                    continue
+                est = cache.get(view_name, version, key)
+                if est is not None:
+                    results[i] = est
+                    hits += 1
+                    continue
+                if decision == SHED and self.config.cache_serve_stale:
+                    stale = cache.get_any(view_name, key)
+                    if stale is not None:
+                        results[i], stale_version[i] = stale
+                        hits += 1
+                        continue
+                misses.append(i)
+            # cache hits are real demand: the planner's traffic counter must
+            # see them even though vm.query_batch never ran for them
+            if hits and record_traffic and self.vm.cost_model is not None:
+                self.vm.cost_model.observe_traffic(view_name, hits)
+            if misses:
+                computed = self.vm.query_batch(
+                    view_name, [queries[i] for i in misses], **kw
+                )
+                for i, est in zip(misses, computed):
+                    results[i] = est
+                    if keys[i] is not None:
+                        cache.put(view_name, version, keys[i], est)
+
+        if decision == ADMIT:
+            return results  # type: ignore[return-value]
+        return [
+            self._widen_for_load(view_name, est, decision,
+                                 stale=(i in stale_version))
+            for i, est in enumerate(results)
+        ]
+
+    def _widen_for_load(self, view_name: str, est: Estimate, decision: str,
+                        stale: bool) -> Estimate:
+        """Serve-stale-under-load answer: widen by the pending-delta bound
+        (buffered log rows + rows never cleaned in) and tag the method with
+        the admission verdict.  A stale-VERSION cache entry additionally
+        covers everything since the last full maintenance (``since="ivm"``
+        dominates ``since="clean"``) — we cannot know which rows its window
+        had absorbed, so the bound is the conservative superset."""
+        from repro.robustness.degrade import widen_estimate
+        from repro.serving.admission import SHED
+
+        suffix = "+shed" if decision == SHED else "+throttled"
+        pending = self.vm.drift_rows(
+            view_name, since="ivm" if stale else "clean"
+        )
+        for b in self.vm.views[view_name].delta_bases:
+            log = self.logs.get(b)
+            if log is not None:
+                pending += log.pending_rows()
+        return widen_estimate(est, self.vm.views[view_name], pending,
+                              suffix=suffix)

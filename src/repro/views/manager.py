@@ -142,13 +142,17 @@ class ViewManager:
         return self._pending_from(0)
 
     # -- streaming -----------------------------------------------------------
-    def configure_streaming(self, config=None):
+    def configure_streaming(self, config=None, clock=None):
         """Route ``ingest`` through the streaming engine: micro-batches are
         buffered in bounded DeltaLogs and ``svc_refresh`` fires on size/age
-        watermarks instead of manual calls (repro.streaming)."""
+        watermarks instead of manual calls (repro.streaming).  ``clock`` is
+        injectable for deterministic age/throttle tests."""
+        import time
+
         from repro.streaming import StreamConfig, StreamingViewService
 
-        self.stream = StreamingViewService(self, config or StreamConfig())
+        self.stream = StreamingViewService(self, config or StreamConfig(),
+                                           clock=clock or time.monotonic)
         return self.stream
 
     # -- registration --------------------------------------------------------
@@ -247,13 +251,16 @@ class ViewManager:
 
     # -- delta ingestion -----------------------------------------------------
     def ingest(self, base: str, inserts: Optional[Relation] = None,
-               deletes: Optional[Relation] = None, seq: Optional[int] = None):
+               deletes: Optional[Relation] = None, seq: Optional[int] = None,
+               key=None):
         """Ingest a delta batch.  With streaming configured, the batch lands
-        in the DeltaLog (``seq`` orders out-of-order producers) and refresh
-        happens on watermarks; otherwise it goes straight into the pending
-        set and the caller refreshes manually."""
+        in the DeltaLog (``seq`` orders out-of-order producers, ``key`` is
+        an optional producer idempotency key for at-least-once replay
+        dedupe) and refresh happens on watermarks; otherwise it goes
+        straight into the pending set and the caller refreshes manually."""
         if self.stream is not None:
-            return self.stream.offer(base, inserts=inserts, deletes=deletes, seq=seq)
+            return self.stream.offer(base, inserts=inserts, deletes=deletes,
+                                     seq=seq, key=key)
         return self._ingest_pending(base, inserts=inserts, deletes=deletes)
 
     def _ingest_pending(self, base: str, inserts: Optional[Relation] = None,

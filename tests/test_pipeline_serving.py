@@ -61,6 +61,34 @@ def test_serving_engine_completes_and_is_deterministic():
     assert all(len(v) >= 4 for v in a.values())
 
 
+def test_mixed_length_prompts_match_isolated_decode():
+    """Regression: continuous batching with MIXED prompt lengths must emit
+    the same tokens as running each request alone.  The old step() decoded
+    every slot at one scalar ``max(pos)`` and _admit spliced the FULL batch
+    cache during prefill — a short prompt pooled with a long one read and
+    wrote its KV at the wrong cache position and corrupted its neighbour's
+    rows, silently changing outputs."""
+    cfg = get_smoke_config("granite-3-2b")
+    model = get_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(7)
+    # pointedly unequal lengths: pos diverges from the very first tick
+    prompts = [rng.integers(0, cfg.vocab, n).astype(np.int32)
+               for n in (2, 7, 4)]
+
+    def run(max_batch, reqs):
+        eng = ServeEngine(model, params, max_batch=max_batch, max_seq=64)
+        for i, p in reqs:
+            eng.submit(Request(rid=i, prompt=p, max_new=5))
+        return {r.rid: tuple(r.out_tokens) for r in eng.run()}
+
+    pooled = run(3, list(enumerate(prompts)))
+    isolated = {}
+    for i, p in enumerate(prompts):
+        isolated.update(run(1, [(i, p)]))
+    assert pooled == isolated
+
+
 class _ConstModel:
     """Minimal Model protocol: constant logits, empty cache."""
 

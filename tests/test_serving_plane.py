@@ -1,0 +1,381 @@
+"""Overload axis: admission control, staleness-keyed result cache, dedupe.
+
+The serving decision ladder's contracts (docs/ARCHITECTURE.md "Serving
+plane"): every query resolves to an Estimate in bounded work; an
+exact-version cache hit is bit-identical to the recompute it replaced;
+version bumps (svc_refresh / maintain / retune) invalidate for free;
+degraded serves are CI-widened and method-tagged with WHY
+("+throttled" / "+shed"); at-least-once producer replays drain bit-equally.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import Query, ViewDef
+from repro.relational.expr import Cmp, Col, Lit
+from repro.data.synthetic import grow_log, make_log_video
+from repro.relational.plan import FKJoin, GroupByNode, Scan
+from repro.robustness import FaultPlan, FaultSpec
+from repro.serving import (
+    ADMIT,
+    SHED,
+    THROTTLE,
+    AdmissionConfig,
+    AdmissionController,
+    TokenBucket,
+    query_key,
+)
+from repro.streaming import StreamConfig
+from repro.views import ViewManager
+
+
+class FakeClock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+
+def _vm(seed=5, m=0.2):
+    rng = np.random.default_rng(0)
+    log, video = make_log_video(rng, 300, 6000)
+    plan = GroupByNode(
+        child=FKJoin(fact=Scan("Log", pk=("sessionId",)),
+                     dim=Scan("Video", pk=("videoId",)), fact_key="videoId"),
+        keys=("videoId",),
+        aggs=(("visitCount", "count", None), ("totalBytes", "sum", "bytes")),
+        num_groups=512,
+    )
+    vm = ViewManager()
+    vm.register_base("Log", log)
+    vm.register_base("Video", video)
+    vm.register_view(ViewDef("v", plan), delta_bases=("Log",), m=m, seed=seed,
+                     delta_group_capacity=512)
+    return vm, rng
+
+
+def _svc(vm, clock, **cfg_kw):
+    cfg_kw.setdefault("max_rows", 10**9)
+    cfg_kw.setdefault("max_age_s", 1e9)
+    return vm.configure_streaming(StreamConfig(**cfg_kw), clock=clock)
+
+
+Q_SUM = Query(agg="sum", col="totalBytes")
+Q_CNT = Query(agg="count")
+
+
+# ---------------------------------------------------------------------------
+# TokenBucket / AdmissionController
+# ---------------------------------------------------------------------------
+
+def test_token_bucket_refill_burst_and_skew_clamp():
+    clock = FakeClock()
+    b = TokenBucket(rate=2.0, burst=4.0, clock=clock)
+    assert b.take(4) and not b.take(1)  # burst drained, atomic refusal
+    assert b.peek() == 0.0
+    clock.t = 1.0
+    assert b.peek() == pytest.approx(2.0)  # 2 qps refill
+    clock.t = 100.0
+    assert b.peek() == pytest.approx(4.0)  # capped at burst
+    b.take(4)
+    clock.t = 50.0  # backwards clock: refills NOTHING, never negative
+    assert b.peek() == 0.0
+    clock.t = 50.5
+    assert b.peek() == pytest.approx(1.0)
+
+
+def test_admission_progression_and_tenant_isolation():
+    clock = FakeClock()
+    ctl = AdmissionController(
+        AdmissionConfig(tenant_qps=1, tenant_burst=2, fleet_qps=100,
+                        fleet_burst=10),
+        clock=clock,
+    )
+    # tenant a: 2 admits on burst, then throttled (fleet still has tokens)
+    assert [ctl.decide("a") for _ in range(3)] == [ADMIT, ADMIT, THROTTLE]
+    # tenant b is untouched by a's greed: its own burst admits
+    assert ctl.decide("b") == ADMIT
+    assert ctl.tenant_stats["a"].throttled == 1
+    assert ctl.tenant_stats["b"].admitted == 1
+    # fleet bucket exhaustion sheds uniformly, charging no tenant budget
+    for _ in range(20):
+        ctl.decide("c")
+    assert ctl.shed > 0
+    assert ctl.overloaded()
+    # refill: service resumes
+    clock.t = 100.0
+    assert ctl.decide("b") == ADMIT
+    assert not ctl.overloaded()
+
+
+def test_drain_ewma_overload_sheds_before_buckets():
+    ctl = AdmissionController(
+        AdmissionConfig(drain_overload_s=0.5, drain_ewma_alpha=1.0),
+        clock=FakeClock(),
+    )
+    assert ctl.decide() == ADMIT
+    ctl.note_drain(2.0)  # refreshes are eating the plane's capacity
+    assert ctl.overloaded()
+    assert ctl.decide() == SHED
+    ctl.note_drain(0.0)
+    assert ctl.decide() == ADMIT
+
+
+# ---------------------------------------------------------------------------
+# Query digests
+# ---------------------------------------------------------------------------
+
+def test_query_key_separates_queries_and_rejects_uncacheable():
+    k1 = query_key(Q_SUM, 0.95, None, None)
+    assert k1 == query_key(Q_SUM, 0.95, None, None)  # memo-stable
+    # every signature dimension separates the digest
+    assert k1 != query_key(Q_CNT, 0.95, None, None)
+    assert k1 != query_key(Q_SUM, 0.99, None, None)
+    assert k1 != query_key(Q_SUM, 0.95, "aqp", None)
+    assert k1 != query_key(Q_SUM, 0.95, None, True)
+    pred = Query(agg="sum", col="totalBytes", pred=Cmp("lt", Col("videoId"), Lit(10)))
+    assert k1 != query_key(pred, 0.95, None, None)
+    # bootstrap / exceedance classes depend on caller state: never cached
+    assert query_key(Query(agg="median", col="totalBytes"), 0.95, None, None) is None
+    assert query_key(Query(agg="max", col="totalBytes"), 0.95, None, None) is None
+
+
+# ---------------------------------------------------------------------------
+# Result cache through the service: bit-equality + free invalidation
+# ---------------------------------------------------------------------------
+
+def test_cache_hit_is_bit_identical_to_recompute():
+    vm, _ = _vm()
+    clock = FakeClock()
+    svc = _svc(vm, clock, cache_capacity=64)
+    twin_vm, _ = _vm()  # identical seed: the no-cache control
+    twin = _svc(twin_vm, FakeClock(), cache_capacity=0)
+    for q in (Q_SUM, Q_CNT):
+        miss = svc.query("v", q).estimate
+        hit = svc.query("v", q).estimate
+        control = twin.query("v", q).estimate
+        assert hit == miss  # bit-equal serve, not approximately-equal
+        assert hit == control  # and identical to the never-cached path
+    assert svc.result_cache.hits == 2
+    assert twin.result_cache is None
+
+
+@pytest.mark.parametrize("bump", ["svc_refresh", "maintain", "retune"])
+def test_version_bump_invalidates_cached_answers(bump):
+    """Cached answers must NEVER survive a sample rebuild: each bump path
+    (clean, full IVM, planner retune) strands the old version's entries and
+    the next query recomputes against the new sample."""
+    vm, rng = _vm()
+    svc = _svc(vm, FakeClock(), cache_capacity=64)
+    first = svc.query("v", Q_SUM).estimate
+    assert svc.query("v", Q_SUM).estimate == first  # warm
+    vm.ingest("Log", inserts=grow_log(rng, 300, 6000, 400), seq=0)
+    mv = vm.views["v"]
+    v0 = mv.sample_version
+    if bump == "svc_refresh":
+        svc.refresh()
+    elif bump == "maintain":
+        svc.refresh()  # drain the log first (refresh bumps too)
+        vm.ingest("Log", inserts=grow_log(rng, 300, 6000, 400), seq=1)
+        svc.refresh()
+        vm.maintain("v")
+    else:
+        vm._retune_sample_ratio(mv, 0.4)
+    assert mv.sample_version > v0
+    puts_before = svc.result_cache.puts
+    again = svc.query("v", Q_SUM).estimate
+    assert svc.result_cache.puts == puts_before + 1  # recomputed, re-cached
+    if bump != "retune":  # retune re-derives samples without folding deltas:
+        # the recompute is real (puts moved) but lands on the same value
+        assert again.value != first.value  # the deltas moved the answer
+
+
+def test_cache_eviction_is_bounded_and_latest_index_survives():
+    vm, _ = _vm()
+    svc = _svc(vm, FakeClock(), cache_capacity=2)
+    queries = [Query(agg="sum", col="totalBytes",
+                     pred=Cmp("lt", Col("videoId"), Lit(10 * (i + 1)))) for i in range(5)]
+    for q in queries:
+        svc.query("v", q)
+    cache = svc.result_cache
+    assert len(cache) == 2 and cache.evictions == 3
+    # the survivors still hit; evicted ones recompute without error
+    hits0 = cache.hits
+    svc.query("v", queries[-1])
+    assert cache.hits == hits0 + 1
+
+
+# ---------------------------------------------------------------------------
+# Degraded serving: throttle / shed widening + stale-version serves
+# ---------------------------------------------------------------------------
+
+def test_throttle_and_shed_widen_and_tag_but_keep_value():
+    vm, rng = _vm()
+    clock = FakeClock()
+    svc = _svc(vm, clock, cache_capacity=64,
+               admission=AdmissionConfig(tenant_qps=1, tenant_burst=1,
+                                         fleet_qps=100, fleet_burst=2))
+    fresh = svc.query("v", Q_SUM)  # ADMIT
+    assert fresh.estimate.method == "SVC+CORR" or "+" in fresh.estimate.method
+    # leave pending rows so the widening bound is non-trivial
+    svc.offer("Log", inserts=grow_log(rng, 300, 6000, 500), seq=0)
+    throttled = svc.query("v", Q_SUM)  # tenant burst spent
+    shed = svc.query("v", Q_SUM)  # fleet burst spent
+    assert throttled.estimate.method.endswith("+throttled")
+    assert shed.estimate.method.endswith("+shed")
+    for r in (throttled, shed):
+        assert r.estimate.value == fresh.estimate.value  # value never moves
+        assert r.estimate.ci_low < fresh.estimate.ci_low
+        assert r.estimate.ci_high > fresh.estimate.ci_high
+    st = shed.staleness
+    assert (st.admitted_queries, st.throttled_queries, st.shed_queries) == (1, 1, 1)
+    assert st.overloaded
+
+
+def test_shed_serves_stale_version_from_cache_without_recompute():
+    vm, rng = _vm()
+    clock = FakeClock()
+    svc = _svc(vm, clock, cache_capacity=64,
+               admission=AdmissionConfig(tenant_qps=100, tenant_burst=100,
+                                         fleet_qps=1, fleet_burst=1))
+    old = svc.query("v", Q_SUM).estimate  # ADMIT; cached at version v0
+    vm.ingest("Log", inserts=grow_log(rng, 300, 6000, 400), seq=0)
+    svc.refresh()  # bumps sample_version: the entry is now stale-version
+    stale = svc.query("v", Q_SUM)  # fleet bucket empty -> SHED
+    assert stale.estimate.method.endswith("+shed")
+    assert stale.estimate.value == old.value  # the v0 answer, not recomputed
+    assert svc.result_cache.stale_hits == 1
+    assert stale.staleness.cache_stale_hits == 1
+    # opting out forces a bounded recompute instead
+    vm2, rng2 = _vm()
+    svc2 = _svc(vm2, FakeClock(), cache_capacity=64, cache_serve_stale=False,
+                admission=AdmissionConfig(tenant_qps=100, tenant_burst=100,
+                                          fleet_qps=1, fleet_burst=1))
+    svc2.query("v", Q_SUM)
+    vm2.ingest("Log", inserts=grow_log(rng2, 300, 6000, 400), seq=0)
+    svc2.refresh()
+    shed2 = svc2.query("v", Q_SUM)
+    assert shed2.estimate.method.endswith("+shed")
+    assert svc2.result_cache.stale_hits == 0
+
+
+def test_cache_poison_is_rejected_never_served():
+    vm, _ = _vm()
+    svc = _svc(vm, FakeClock(), cache_capacity=64)
+    good = svc.query("v", Q_SUM).estimate
+    tampered = svc.result_cache.poison("v")
+    assert tampered >= 1
+    served = svc.query("v", Q_SUM).estimate
+    assert served.value == good.value  # recomputed, not the poisoned entry
+    assert svc.result_cache.poison_rejected >= 1
+    assert svc.staleness().cache_poison_rejected >= 1
+
+
+# ---------------------------------------------------------------------------
+# Idempotent ingest: at-least-once replay drains bit-equally
+# ---------------------------------------------------------------------------
+
+def test_offer_dedupe_makes_replay_bit_equal():
+    """The same event stream delivered once vs. with at-least-once replays
+    (every batch re-offered under its idempotency key) must drain to the
+    same answer, with the replays absorbed and accounted."""
+    def run(replay):
+        vm, rng = _vm()
+        svc = _svc(vm, FakeClock(), cache_capacity=0)
+        batches = [grow_log(rng, 300, 6000, 150) for _ in range(4)]
+        for i, b in enumerate(batches):
+            svc.offer("Log", inserts=b, seq=i, key=f"batch-{i}")
+            if replay:
+                svc.offer("Log", inserts=b, seq=i, key=f"batch-{i}")
+        svc.refresh()
+        st = svc.staleness()
+        return float(svc.query("v", Q_SUM).estimate.value), st
+
+    once, st_once = run(replay=False)
+    twice, st_twice = run(replay=True)
+    assert once == twice
+    assert st_once.deduped_batches == 0
+    assert st_twice.deduped_batches == 4
+    assert st_twice.deduped_rows == 4 * 150
+
+
+def test_dedupe_survives_drain_and_ignores_unkeyed():
+    vm, rng = _vm()
+    svc = _svc(vm, FakeClock(), cache_capacity=0)
+    b = grow_log(rng, 300, 6000, 100)
+    svc.offer("Log", inserts=b, seq=0, key="k0")
+    svc.refresh()
+    # a LATE replay of an already-drained window must still be absorbed
+    svc.offer("Log", inserts=b, seq=0, key="k0")
+    assert svc.staleness().pending_rows == 0
+    assert svc.logs["Log"].deduped_batches == 1
+    # unkeyed offers never dedupe (legacy producers keep exact behaviour)
+    b2 = grow_log(rng, 300, 6000, 100)
+    svc.offer("Log", inserts=b2, seq=1)
+    svc.offer("Log", inserts=b2, seq=1)
+    assert svc.staleness().pending_batches == 2
+
+
+def test_duplicate_batch_fault_carries_key_and_is_absorbed():
+    vm, rng = _vm()
+    svc = _svc(vm, FakeClock(), cache_capacity=0)
+    FaultPlan([FaultSpec(epoch=0, kind="duplicate_batch", target="Log")]).attach(vm)
+    svc.offer("Log", inserts=grow_log(rng, 300, 6000, 120), seq=0, key="k0")
+    # the fault re-offered the batch under the SAME key: dedupe absorbed it
+    assert svc.logs["Log"].deduped_batches == 1
+    assert svc.staleness().pending_rows == 120
+
+
+# ---------------------------------------------------------------------------
+# Chaos kinds: traffic_spike / slow_drain / cache_poison via FaultPlan
+# ---------------------------------------------------------------------------
+
+def test_traffic_spike_multiplier_and_slow_drain_report():
+    plan = FaultPlan([
+        FaultSpec(epoch=1, kind="traffic_spike", magnitude=10.0),
+        FaultSpec(epoch=1, kind="traffic_spike", magnitude=2.0),
+        FaultSpec(epoch=2, kind="slow_drain", magnitude=3.0),
+    ])
+    assert plan.traffic_multiplier() == 1.0  # epoch 0: nothing scheduled
+    plan.advance()
+    assert plan.traffic_multiplier() == 20.0  # spikes compose
+    assert plan.drain_latency_s() == 0.0
+    plan.advance()
+    assert plan.traffic_multiplier() == 1.0
+    assert plan.drain_latency_s() == 3.0
+    assert len(plan.injected) == 3
+
+
+def test_slow_drain_fault_drives_overload_shedding():
+    """An injected slow drain must push the admission EWMA over budget so
+    the NEXT queries shed — the deterministic stand-in for refreshes eating
+    the serving plane's capacity."""
+    vm, rng = _vm()
+    clock = FakeClock()
+    svc = _svc(vm, clock, cache_capacity=64,
+               admission=AdmissionConfig(tenant_qps=1e9, tenant_burst=1e9,
+                                         fleet_qps=1e9, fleet_burst=1e9,
+                                         drain_overload_s=5.0,
+                                         drain_ewma_alpha=1.0))
+    FaultPlan([FaultSpec(epoch=0, kind="slow_drain", magnitude=60.0)]).attach(vm)
+    assert not svc.query("v", Q_SUM).estimate.method.endswith(
+        ("+shed", "+throttled"))
+    svc.offer("Log", inserts=grow_log(rng, 300, 6000, 50), seq=0)
+    svc.refresh()  # reports +60s -> EWMA 60 > 5: overloaded
+    assert svc.admission.drain_ewma_s > 5.0
+    r = svc.query("v", Q_SUM)
+    assert r.estimate.method.endswith("+shed")
+    assert r.staleness.overloaded
+
+
+def test_cache_poison_fault_fires_through_query_path():
+    vm, _ = _vm()
+    svc = _svc(vm, FakeClock(), cache_capacity=64)
+    good = svc.query("v", Q_SUM).estimate
+    plan = FaultPlan([FaultSpec(epoch=1, kind="cache_poison", target="v")]).attach(vm)
+    plan.advance()
+    served = svc.query("v", Q_SUM).estimate  # fault fires inside the ladder
+    assert served.value == good.value
+    assert svc.result_cache.poison_rejected >= 1
+    assert any(where == "cache:v" for _, _, where in plan.injected)
