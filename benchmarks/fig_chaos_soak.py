@@ -54,6 +54,8 @@ from benchmarks.fig_planner_fleet import (
 )
 from repro.core import Query
 from repro.distributed.ft import FleetMonitor
+from repro.obs import export_service_trace
+from repro.obs import trace as obs_trace
 from repro.planner import MaintenancePlanner
 from repro.robustness import FaultPlan, FaultSpec
 from repro.streaming import StreamConfig, StreamingViewService
@@ -109,6 +111,11 @@ def _build_soak(n_views: int, n_rows: int, groups: int, d_rows: int,
     the timed epochs measure steady-state behaviour (cold compiles would
     otherwise trip the deadline check as spurious overruns)."""
     vm = build_fleet(n_views, n_rows, groups, seed=1)
+    # ONE clock: the manager's action timings ride the same injectable
+    # sim clock as the service watermarks, so a clock_skew fault shifts
+    # every wall-time reading coherently (costs are pinned below — the
+    # planner's economics never read the measured walls)
+    vm.clock = clock
     svc = StreamingViewService(
         vm, StreamConfig(auto_refresh=False), clock=clock
     )
@@ -156,6 +163,13 @@ def _soak(n_views: int, n_rows: int, groups: int,
     """One soak run (chaos or fault-free twin): per-epoch Zipf traffic,
     producer offers through the streaming service, one planner epoch, then
     an availability/error probe over every view."""
+    # the chaos run records a full causal trace (real perf_counter for the
+    # span clock — only the PIPELINE rides the sim clock), enabled before
+    # warmup so every clean/maintain span is captured; set SVC_TRACE_OUT
+    # to export it for tools/trace_report.py
+    tracing = specs is not None
+    if tracing:
+        obs_trace.enable(capacity=1 << 18)
     clock = _SimClock()
     vm, svc = _build_soak(n_views, n_rows, groups,
                           int(np.asarray(
@@ -234,8 +248,17 @@ def _soak(n_views: int, n_rows: int, groups: int,
         clock.tick(1.0)
 
     stale = svc.staleness()
+    trace_records = 0
+    if tracing:
+        tracer = obs_trace.get_tracer()
+        trace_records = len(tracer.records)
+        out = os.environ.get("SVC_TRACE_OUT")
+        if out:
+            export_service_trace(svc, out)
+        obs_trace.disable()
     return {
         "epochs": n_epochs,
+        "trace_records": trace_records,
         "attempted": attempted,
         "answered": answered,
         "availability": answered / max(attempted, 1),

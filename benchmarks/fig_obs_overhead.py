@@ -1,0 +1,158 @@
+"""Observability overhead guard: traced vs untraced planner-fleet epochs.
+
+The observatory's contract is that it watches the pipeline without
+slowing it: end-to-end span tracing on the quick ``fig_planner_fleet``
+epoch loop (ingest → snapshot → schedule → act → merge, the same path
+the planner wall guard times) must add at most 5% epoch wall.
+
+Two identical fleets run the SAME shared delta stream and Zipf traffic;
+their epochs are interleaved (untraced then traced, every epoch) so host
+noise lands on both sides, and the headline per-mode number is the MIN
+epoch wall — the noise-robust floor the 1.05× ratio guard compares.
+The traced run's ring is then exported and must reconcile exactly
+(``repro.obs.reconcile``): the overhead budget buys a complete record,
+not a sampled one.
+
+Writes ``BENCH_obs_overhead.json`` (override with ``BENCH_OUT``); CI
+runs the quick mode and enforces both guards.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import tempfile
+import time
+from typing import Dict, List
+
+import numpy as np
+
+from benchmarks.common import Row
+from benchmarks.fig_planner_fleet import (
+    _delta_rel,
+    _measure_prices,
+    _serve_traffic,
+    _traffic_weights,
+    build_fleet,
+    epoch_deltas,
+)
+from repro.obs import trace as obs_trace
+from repro.obs.reconcile import load_jsonl, reconcile
+from repro.planner import MaintenancePlanner
+
+N_VIEWS = 12
+EPOCHS_QUICK = 6
+EPOCHS_FULL = 10
+OVERHEAD_CAP = 1.05  # traced epoch wall must stay within 5% of untraced
+
+
+def _build(n_views: int, n_rows: int, groups: int, d_rows: int,
+           prices: Dict[str, float]):
+    """Fleet + pinned-cost planner, warmed exactly like fig_planner_fleet's
+    planner policy so the timed epochs measure steady state."""
+    vm = build_fleet(n_views, n_rows, groups, seed=1)
+    w_rng = np.random.default_rng(5)
+    for i in range(n_views):
+        vm.ingest(f"Log{i}",
+                  inserts=_delta_rel(5 * n_rows + d_rows * i, d_rows, groups,
+                                     w_rng))
+        vm.svc_refresh(f"v{i}")
+    for i in range(n_views):
+        vm.ingest(f"Log{i}",
+                  inserts=_delta_rel(7 * n_rows + d_rows * i, d_rows, groups,
+                                     w_rng))
+    for i in range(n_views):
+        vm.maintain(f"v{i}")
+    for i in range(n_views):
+        vm.ingest(f"Log{i}",
+                  inserts=_delta_rel(9 * n_rows + d_rows * i, d_rows, groups,
+                                     w_rng))
+    vm.svc_refresh_many([f"v{i}" for i in range(n_views)])
+    budget = prices["maintain_s"] + 2.5 * prices["clean_s"]
+    planner = MaintenancePlanner(vm, budget_s=budget, age_cap_s=1e9)
+    planner.cost_model.pin_costs(refresh_s=prices["clean_s"],
+                                 maintain_s=prices["maintain_s"])
+    planner.plan()  # compile the snapshot + scorer pass off the clock
+    return vm, planner
+
+
+def run(quick: bool = False) -> List[Row]:
+    epochs = EPOCHS_QUICK if quick else EPOCHS_FULL
+    n_views = N_VIEWS
+    n_rows, groups, d_rows = (512, 32, 160) if quick else (1024, 48, 300)
+    weights = _traffic_weights(n_views)
+    deltas = epoch_deltas(n_views, n_rows, groups, d_rows, epochs)
+    prices = _measure_prices(n_rows, groups, d_rows)
+
+    obs_trace.disable()
+    vm_u, planner_u = _build(n_views, n_rows, groups, d_rows, prices)
+    vm_t, planner_t = _build(n_views, n_rows, groups, d_rows, prices)
+    tracer = obs_trace.Tracer(capacity=1 << 18)
+
+    walls: Dict[str, List[float]] = {"untraced": [], "traced": []}
+    rng_u = np.random.default_rng(31)
+    rng_t = np.random.default_rng(31)
+    for epoch in range(epochs):
+        for mode, vm, planner, rng in (
+            ("untraced", vm_u, planner_u, rng_u),
+            ("traced", vm_t, planner_t, rng_t),
+        ):
+            obs_trace.set_tracer(tracer if mode == "traced" else None)
+            _serve_traffic(vm, n_views, weights, rng)  # off the clock
+            t0 = time.perf_counter()
+            for base, rel in deltas[epoch].items():
+                vm.ingest(base, inserts=rel)
+            planner.step()
+            walls[mode].append(time.perf_counter() - t0)
+    obs_trace.set_tracer(None)
+
+    untraced_s = min(walls["untraced"])
+    traced_s = min(walls["traced"])
+    ratio = traced_s / max(untraced_s, 1e-12)
+
+    # the traced ring must reconcile: complete record, not a sample
+    with tempfile.TemporaryDirectory() as tmp:
+        path = os.path.join(tmp, "trace.jsonl")
+        tracer.export_jsonl(path, meta={"metrics": vm_t.metrics.snapshot()})
+        meta, records = load_jsonl(path)
+        rec = reconcile(meta, records)
+
+    payload = {
+        "quick": bool(quick),
+        "n_views": n_views,
+        "epochs": epochs,
+        "rows_per_view": n_rows,
+        "delta_rows_per_epoch": d_rows,
+        "epoch_walls": walls,
+        "untraced_s": untraced_s,
+        "traced_s": traced_s,
+        "overhead_ratio": ratio,
+        "trace_records": len(records),
+        "reconcile_problems": rec["problems"],
+        "guards": {
+            "overhead_ok": ratio <= OVERHEAD_CAP,
+            "reconciled_ok": rec["ok"],
+        },
+    }
+    out_path = os.environ.get("BENCH_OUT", "BENCH_obs_overhead.json")
+    with open(out_path, "w") as f:
+        json.dump(payload, f, indent=2)
+
+    return [
+        Row(
+            "fig_obs_overhead",
+            traced_s * 1e6,
+            f"ratio={ratio:.3f} untraced_s={untraced_s:.4f} "
+            f"records={len(records)} reconciled={rec['ok']}",
+        ),
+    ]
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    for row in run(quick=args.quick):
+        print(row.csv(), flush=True)

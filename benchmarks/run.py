@@ -27,6 +27,7 @@ MODULES = (
     "fig_planner_fleet",
     "fig_chaos_soak",
     "fig_serving_soak",
+    "fig_obs_overhead",
     "appendix_minmax",
     "kernels_bench",
     "svc_training",

@@ -31,7 +31,16 @@ CPU), and ``ref.py`` (pure-jnp oracle).  Tests sweep shapes/dtypes against
 the oracle.
 
 Call ``enable()`` to route repro.core.hashing through the Pallas path.
+
+Profiling: every ops.py dispatch funnels through
+``repro.obs.kprof.profiled(op, fn, ...)``.  Install a ``KernelProfiler``
+(re-exported here with ``set_profiler``/``get_profiler``) to record
+per-op dispatch counts, fallback-path takes, compile vs. execute wall,
+and padded-vs-real row occupancy; with no profiler installed the hook is
+a tail call with zero added work.
 """
+
+from repro.obs.kprof import KernelProfiler, get_profiler, set_profiler  # noqa: F401
 
 
 def enable() -> None:

@@ -6,6 +6,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels.corr_diff.kernel import BLOCK_R, LANES, corr_diff_tiles
+from repro.obs.kprof import profiled
 
 INTERPRET = jax.default_backend() != "tpu"
 
@@ -21,10 +22,11 @@ def corr_moments(t_new: jnp.ndarray, t_old: jnp.ndarray, mask: jnp.ndarray):
         x = jnp.asarray(x, dtype)
         return jnp.pad(x, (0, padded - n)).reshape(rows, LANES)
 
-    acc = corr_diff_tiles(
+    acc = profiled(
+        "corr_diff", corr_diff_tiles,
         pad2d(t_new, jnp.float32),
         pad2d(t_old, jnp.float32),
         pad2d(mask.astype(jnp.int8), jnp.int8),
-        interpret=INTERPRET,
+        rows=n, padded=padded, interpret=INTERPRET,
     )
     return acc[0, 0], acc[0, 1], acc[0, 2]

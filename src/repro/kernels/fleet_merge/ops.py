@@ -25,6 +25,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.obs.kprof import profiled
 from repro.relational.relation import SENTINEL_KEY
 
 from .kernel import BLOCK_G, BLOCK_R, BLOCK_V, fleet_merge_tiles
@@ -127,9 +128,11 @@ def fleet_merge(
 
     up = USE_PALLAS if use_pallas is None else use_pallas
     if not up:
-        return _ref_sorted(
+        return profiled(
+            "fleet_merge", _ref_sorted,
             stale_keys, stale_valid, stale_vals,
             ins_valid, ins_vals, del_valid, del_vals,
+            fallback=True, rows=V * R, padded=V * R,
         )
 
     Vp = _pad_to(V, BLOCK_V)
@@ -155,8 +158,10 @@ def fleet_merge(
         jnp.pad(del_vals.astype(jnp.float32), ((0, Vp - V), (0, Gp - G), (0, 0))),
         (2, 1, 0),
     )
-    return _pallas_sorted(
+    return profiled(
+        "fleet_merge", _pallas_sorted,
         skeys_t, svals_t, ivalid_t, ivals_t, dvalid_t, dvals_t,
         stale_keys, sv, ins_valid, ins_vals, del_valid, del_vals,
+        rows=V * R, padded=Vp * Rp,
         v=V, r=R, g=G, interpret=INTERPRET,
     )

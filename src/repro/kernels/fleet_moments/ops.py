@@ -25,6 +25,7 @@ from repro.kernels.fleet_moments.kernel import (
     fleet_moments_tiles,
 )
 from repro.kernels.fleet_moments.ref import N_MOMENTS, fleet_moments_ref
+from repro.obs.kprof import profiled
 
 # CPU containers run the kernel body in interpret mode; on TPU set False.
 INTERPRET = jax.default_backend() != "tpu"
@@ -58,9 +59,11 @@ def fleet_moments(
     if V == 0:
         return jnp.zeros((0, N_MOMENTS), jnp.float32)
     if not (use_pallas if use_pallas is not None else USE_PALLAS):
-        return _ref_jit(*args)
+        return profiled("fleet_moments", _ref_jit, *args,
+                        fallback=True, rows=V, padded=V)
     Vp = _pad_to(max(V, BLOCK_V), BLOCK_V)
     Rp = _pad_to(max(R, BLOCK_R), BLOCK_R)
     padded = [jnp.pad(a, ((0, Vp - V), (0, Rp - R))).T for a in args]
-    out = fleet_moments_tiles(*padded, interpret=INTERPRET)
+    out = profiled("fleet_moments", fleet_moments_tiles, *padded,
+                   rows=V, padded=Vp, interpret=INTERPRET)
     return out[:N_MOMENTS, :V].T

@@ -21,6 +21,7 @@ import jax.numpy as jnp
 
 from repro.kernels.fleet_score.kernel import BLOCK_V, FEAT_ROWS, fleet_score_tiles
 from repro.kernels.fleet_score.ref import N_FEATURES, N_SCORES, fleet_score_ref
+from repro.obs.kprof import profiled
 
 # CPU containers run the kernel body in interpret mode; on TPU set False.
 INTERPRET = jax.default_backend() != "tpu"
@@ -39,10 +40,12 @@ def fleet_scores(features, use_pallas: Optional[bool] = None) -> jnp.ndarray:
     if feats.ndim != 2 or feats.shape[1] != N_FEATURES:
         raise ValueError(f"expected (V, {N_FEATURES}) features, got {feats.shape}")
     up = use_pallas if use_pallas is not None else USE_PALLAS
-    if not up:
-        return _ref_jit(feats)
     V = feats.shape[0]
+    if not up:
+        return profiled("fleet_score", _ref_jit, feats,
+                        fallback=True, rows=V, padded=V)
     Vp = max(BLOCK_V, ((V + BLOCK_V - 1) // BLOCK_V) * BLOCK_V)
     panel = jnp.pad(feats, ((0, Vp - V), (0, FEAT_ROWS - N_FEATURES))).T
-    out = fleet_score_tiles(panel, interpret=INTERPRET)
+    out = profiled("fleet_score", fleet_score_tiles, panel,
+                   rows=V, padded=Vp, interpret=INTERPRET)
     return out[:N_SCORES, :V].T

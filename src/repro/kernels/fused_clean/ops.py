@@ -15,6 +15,7 @@ import jax.numpy as jnp
 
 from repro.core.hashing import seed_mix as _seed_mix
 from repro.kernels.fused_clean.kernel import BLOCK_G, BLOCK_R, fused_clean_tiles
+from repro.obs.kprof import profiled
 
 # CPU containers run the kernel body in interpret mode; on TPU set False.
 INTERPRET = jax.default_backend() != "tpu"
@@ -76,9 +77,12 @@ def fused_clean_groupby_fleet(
     """
     thresh = jnp.asarray([float(m) for m in ms], jnp.float32)
     mixes = jnp.asarray([_seed_mix(int(s)) for s in seeds], jnp.uint32)
-    return _fleet_path(
+    V, R = gid.shape[0], gid.shape[1]
+    return profiled(
+        "fused_clean_fleet", _fleet_path,
         jnp.asarray(gid, jnp.int32), jnp.asarray(vals, jnp.float32),
         jnp.asarray(valid, bool), thresh, mixes, int(num_groups),
+        rows=V * R, padded=V * R,
     )
 
 
@@ -103,11 +107,13 @@ def fused_clean_groupby(
     if not (use_pallas if use_pallas is not None else USE_PALLAS):
         if squeeze:
             vals = vals[:, None]
-        counts, sums = _fused_ref_path(
+        counts, sums = profiled(
+            "fused_clean", _fused_ref_path,
             jnp.asarray(gid, jnp.int32), jnp.asarray(vals, jnp.float32),
             jnp.asarray(valid, bool),
             None if pin_mask is None else jnp.asarray(pin_mask, bool),
             float(m), int(seed), int(num_groups),
+            fallback=True, rows=vals.shape[0], padded=vals.shape[0],
         )
         return counts, (sums[:, 0] if squeeze else sums)
     if squeeze:
@@ -126,9 +132,10 @@ def fused_clean_groupby(
     vals_ext = jnp.concatenate([ones, jnp.asarray(vals, jnp.float32)], axis=1)
     vals_p = jnp.pad(vals_ext, ((0, Rp - R), (0, 0)))
 
-    out = fused_clean_tiles(
+    out = profiled(
+        "fused_clean", fused_clean_tiles,
         gid_p, pin_p, vals_p, seed_mix=_seed_mix(seed), thresh=float(m),
-        num_groups=Gp, interpret=INTERPRET,
+        num_groups=Gp, rows=R, padded=Rp, interpret=INTERPRET,
     )
     out = out[:num_groups]
     counts, sums = out[:, 0], out[:, 1:]

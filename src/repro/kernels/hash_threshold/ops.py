@@ -10,6 +10,7 @@ import numpy as np
 
 from repro.core.hashing import seed_mix as _seed_mix
 from repro.kernels.hash_threshold.kernel import BLOCK_R, LANES, hash_threshold_tiles
+from repro.obs.kprof import profiled
 
 # CPU containers run the kernel body in interpret mode; on TPU set False.
 INTERPRET = jax.default_backend() != "tpu"
@@ -28,7 +29,9 @@ def hash_threshold(cols: Sequence[jnp.ndarray], m: float, seed: int = 0) -> jnp.
         return c.reshape(rows, LANES)
 
     cols2d = tuple(pad2d(c) for c in cols)
-    out = hash_threshold_tiles(
-        cols2d, _seed_mix(seed), float(m), n_cols=len(cols2d), interpret=INTERPRET
+    out = profiled(
+        "hash_threshold", hash_threshold_tiles,
+        cols2d, _seed_mix(seed), float(m), n_cols=len(cols2d),
+        rows=n, padded=padded, interpret=INTERPRET,
     )
     return out.reshape(padded)[:n].astype(bool)

@@ -16,6 +16,7 @@ import jax.numpy as jnp
 
 from repro.kernels.multi_agg.kernel import BLOCK_R, LANE, multi_agg_tiles_one, multi_agg_tiles_two
 from repro.kernels.multi_agg.ref import N_MOMENTS, multi_agg_ref
+from repro.obs.kprof import profiled
 
 # CPU containers run the kernel body in interpret mode; on TPU set False.
 INTERPRET = jax.default_backend() != "tpu"
@@ -70,18 +71,23 @@ def multi_agg_moments(
     """
     two = x_old is not None
     if not (use_pallas if use_pallas is not None else USE_PALLAS):
+        nrows = x_new.shape[0]
         if two:
-            return _ref_two(
+            return profiled(
+                "multi_agg", _ref_two,
                 jnp.asarray(x_new, jnp.float32), jnp.asarray(valid_new, bool),
                 jnp.asarray(w_new, jnp.float32), jnp.asarray(ompi_new, jnp.float32),
                 sel, meta,
                 jnp.asarray(x_old, jnp.float32), jnp.asarray(valid_old, bool),
                 jnp.asarray(w_old, jnp.float32), jnp.asarray(ompi_old, jnp.float32),
+                fallback=True, rows=nrows, padded=nrows,
             )
-        return _ref_one(
+        return profiled(
+            "multi_agg", _ref_one,
             jnp.asarray(x_new, jnp.float32), jnp.asarray(valid_new, bool),
             jnp.asarray(w_new, jnp.float32), jnp.asarray(ompi_new, jnp.float32),
             sel, meta,
+            fallback=True, rows=nrows, padded=nrows,
         )
 
     R, C = x_new.shape
@@ -99,9 +105,15 @@ def multi_agg_moments(
     xn, vn, wn, on = _pad_side(x_new, valid_new, w_new, ompi_new, Rp, Cp)
     if two:
         xo, vo, wo, oo = _pad_side(x_old, valid_old, w_old, ompi_old, Rp, Cp)
-        out = multi_agg_tiles_two(xn, vn, wn, on, xo, vo, wo, oo, sel_p, meta_p,
-                                  C=Cp, P=P, interpret=INTERPRET)
+        out = profiled(
+            "multi_agg", multi_agg_tiles_two,
+            xn, vn, wn, on, xo, vo, wo, oo, sel_p, meta_p,
+            rows=R, padded=Rp, C=Cp, P=P, interpret=INTERPRET,
+        )
     else:
-        out = multi_agg_tiles_one(xn, vn, wn, on, sel_p, meta_p,
-                                  C=Cp, P=P, interpret=INTERPRET)
+        out = profiled(
+            "multi_agg", multi_agg_tiles_one,
+            xn, vn, wn, on, sel_p, meta_p,
+            rows=R, padded=Rp, C=Cp, P=P, interpret=INTERPRET,
+        )
     return out[:N_MOMENTS, :Q]

@@ -34,6 +34,7 @@ from repro.kernels.outlier_member.kernel import (
     LANE,
     outlier_member_tiles,
 )
+from repro.obs.kprof import profiled
 from repro.relational.relation import SENTINEL_KEY, next_pow2
 
 # CPU containers run the kernel body in interpret mode; on TPU set False.
@@ -108,12 +109,14 @@ def _fused_pallas(cols, key_cols, m: float, seed: int,
     )
     khi, klo = key_digest(kcols)
     keys = jnp.zeros((KEY_ROWS, Kp), jnp.uint32).at[0].set(khi).at[1].set(klo)
-    code = outlier_member_tiles(
+    code = profiled(
+        "outlier_member", outlier_member_tiles,
         panel, keys,
         seed_eta=seed_mix(seed),
         seed_hi=seed_mix(DIGEST_SEED_HI),
         seed_lo=seed_mix(DIGEST_SEED_LO),
         thresh=float(m),
+        rows=R, padded=Rp,
         interpret=INTERPRET if interpret is None else interpret,
     )[:R, 0]
     return (code & 1) > 0, (code & 2) > 0
@@ -139,7 +142,10 @@ def fused_hash_member(
     up = use_pallas if use_pallas is not None else USE_PALLAS
     if up and key_cols[0].shape[0] <= MAX_KERNEL_KEYS:
         return _fused_pallas(cols, key_cols, m, seed)
-    return _fused_xla(cols, key_cols, float(m), int(seed), True)
+    R = cols[0].shape[0]
+    return profiled("outlier_member", _fused_xla,
+                    cols, key_cols, float(m), int(seed), True,
+                    fallback=True, rows=R, padded=R)
 
 
 def outlier_member(
@@ -153,4 +159,7 @@ def outlier_member(
     up = use_pallas if use_pallas is not None else USE_PALLAS
     if up and key_cols[0].shape[0] <= MAX_KERNEL_KEYS:
         return _fused_pallas(probe_cols, key_cols, 0.0, 0)[1]
-    return _fused_xla(probe_cols, key_cols, 0.0, 0, False)[1]
+    R = probe_cols[0].shape[0]
+    return profiled("outlier_member", _fused_xla,
+                    probe_cols, key_cols, 0.0, 0, False,
+                    fallback=True, rows=R, padded=R)[1]

@@ -6,6 +6,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels.segment_aggsum.kernel import BLOCK_G, BLOCK_R, segment_sum_tiles
+from repro.obs.kprof import profiled
 
 INTERPRET = jax.default_backend() != "tpu"
 
@@ -24,6 +25,9 @@ def segment_sum(gid: jnp.ndarray, vals: jnp.ndarray, num_groups: int) -> jnp.nda
     Gp = ((num_groups + BLOCK_G - 1) // BLOCK_G) * BLOCK_G
     gid_p = jnp.pad(jnp.asarray(gid, jnp.int32), (0, Rp - R), constant_values=-1)[:, None]
     vals_p = jnp.pad(jnp.asarray(vals, jnp.float32), ((0, Rp - R), (0, 0)))
-    out = segment_sum_tiles(gid_p, vals_p, num_groups=Gp, interpret=INTERPRET)
+    out = profiled(
+        "segment_aggsum", segment_sum_tiles, gid_p, vals_p,
+        rows=R, padded=Rp, num_groups=Gp, interpret=INTERPRET,
+    )
     out = out[:num_groups]
     return out[:, 0] if squeeze else out

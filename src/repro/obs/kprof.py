@@ -1,0 +1,147 @@
+"""Kernel profiling hooks: per-op compile/execute split + occupancy.
+
+Every fleet kernel's ``ops.py`` wrapper routes its dispatch through
+``profiled(op, fn, *args, ...)``.  With no profiler installed (the
+default) that is one global read and a tail call — the dispatch overhead
+is unmeasurable next to the jit call it wraps.  With a profiler installed
+(``set_profiler(KernelProfiler())``) each dispatch records:
+
+  * **compile vs execute time** — the first call per ``(op, shape key)``
+    is the traced+compiled call (XLA caches by shape/dtype, exactly the
+    key we dedupe on), charged to ``compile_s``; repeat calls charge
+    ``execute_s``.  The result is blocked on (``jax.block_until_ready``)
+    so async dispatch cannot hide the wall time — profiling buys honest
+    timings at the cost of pipeline overlap, which is why it is opt-in.
+  * **dispatch counts** and **fallback takes** — how often the op ran and
+    how often it took its XLA/interpret fallback path instead of the
+    Pallas kernel (a persistently-fallback op is silently degraded).
+  * **padded-vs-real row occupancy** — wrappers pad to block multiples
+    (BLOCK_R rows, BLOCK_V views); the real/padded ratio is the fraction
+    of the dispatch that was useful work.
+
+``repro.kernels`` re-exports ``set_profiler``/``get_profiler`` as the
+public toggle, mirroring its ``enable()``/``disable()`` Pallas switch.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict, Optional, Set, Tuple
+
+
+class OpStats:
+    """Accumulated profile of one kernel op."""
+
+    __slots__ = ("dispatches", "fallbacks", "compiles", "compile_s",
+                 "execute_s", "rows_real", "rows_padded")
+
+    def __init__(self):
+        self.dispatches = 0
+        self.fallbacks = 0
+        self.compiles = 0
+        self.compile_s = 0.0
+        self.execute_s = 0.0
+        self.rows_real = 0
+        self.rows_padded = 0
+
+    @property
+    def occupancy(self) -> float:
+        """Real rows / padded rows across every dispatch (1.0 = no waste)."""
+        return self.rows_real / self.rows_padded if self.rows_padded else 1.0
+
+    def to_dict(self) -> Dict:
+        return {
+            "dispatches": self.dispatches,
+            "fallbacks": self.fallbacks,
+            "compiles": self.compiles,
+            "compile_s": self.compile_s,
+            "execute_s": self.execute_s,
+            "rows_real": self.rows_real,
+            "rows_padded": self.rows_padded,
+            "occupancy": self.occupancy,
+        }
+
+
+class KernelProfiler:
+    """Per-op dispatch recorder with an injectable wall clock."""
+
+    def __init__(self, clock: Callable[[], float] = time.perf_counter):
+        self._clock = clock
+        self.ops: Dict[str, OpStats] = {}
+        self._seen: Set[Tuple[str, Tuple]] = set()
+
+    def _stat(self, op: str) -> OpStats:
+        st = self.ops.get(op)
+        if st is None:
+            st = OpStats()
+            self.ops[op] = st
+        return st
+
+    @staticmethod
+    def _shape_key(args, kwargs) -> Tuple:
+        def one(a):
+            shape = getattr(a, "shape", None)
+            if shape is not None:
+                return ("arr", tuple(shape), str(getattr(a, "dtype", "")))
+            return ("val", a if isinstance(a, (int, float, str, bool, type(None)))
+                    else type(a).__name__)
+
+        return (tuple(one(a) for a in args),
+                tuple((k, one(v)) for k, v in sorted(kwargs.items())))
+
+    def call(self, op: str, fn: Callable, *args, fallback: bool = False,
+             rows: Optional[int] = None, padded: Optional[int] = None,
+             **kwargs):
+        """Run ``fn(*args, **kwargs)`` under the profile: times the call
+        (blocked to completion), classifies it compile vs execute by shape
+        novelty, and accrues occupancy."""
+        import jax
+
+        st = self._stat(op)
+        st.dispatches += 1
+        if fallback:
+            st.fallbacks += 1
+        if rows is not None:
+            st.rows_real += int(rows)
+            st.rows_padded += int(padded if padded is not None else rows)
+        key = (op, self._shape_key(args, kwargs))
+        first = key not in self._seen
+        self._seen.add(key)
+        t0 = self._clock()
+        out = fn(*args, **kwargs)
+        jax.block_until_ready(out)
+        dt = self._clock() - t0
+        if first:
+            st.compiles += 1
+            st.compile_s += dt
+        else:
+            st.execute_s += dt
+        return out
+
+    def summary(self) -> Dict[str, Dict]:
+        return {op: st.to_dict() for op, st in sorted(self.ops.items())}
+
+
+_PROFILER: Optional[KernelProfiler] = None
+
+
+def get_profiler() -> Optional[KernelProfiler]:
+    return _PROFILER
+
+
+def set_profiler(profiler: Optional[KernelProfiler]) -> Optional[KernelProfiler]:
+    global _PROFILER
+    _PROFILER = profiler
+    return profiler
+
+
+def profiled(op: str, fn: Callable, *args, fallback: bool = False,
+             rows: Optional[int] = None, padded: Optional[int] = None,
+             **kwargs):
+    """The ops.py dispatch hook: tail-calls ``fn`` when no profiler is
+    installed, else records the dispatch through it."""
+    prof = _PROFILER
+    if prof is None:
+        return fn(*args, **kwargs)
+    return prof.call(op, fn, *args, fallback=fallback, rows=rows,
+                     padded=padded, **kwargs)

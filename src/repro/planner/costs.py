@@ -123,6 +123,14 @@ class CostModel:
         # views whose feature rows were non-finite on the LAST features()
         # pass (sanitized + quarantined, see _sanitize)
         self.last_poisoned: List[str] = []
+        # mirror the observation stream into the unified metrics registry
+        # (per-view label sets): the EWMAs stay the planner's pricing
+        # inputs, the registry carries the raw observations for telemetry
+        self._registry = getattr(vm, "metrics", None)
+
+    def _observe_metric(self, name: str, view: str, value: float) -> None:
+        if self._registry is not None:
+            self._registry.histogram(name, view=view).observe(float(value))
 
     def attach(self) -> "CostModel":
         self.vm.cost_model = self
@@ -158,12 +166,14 @@ class CostModel:
         st = self._stat(name)
         if not self.frozen:
             st.refresh_s = self._ewma(st.refresh_s, float(dt))
+        self._observe_metric("planner_refresh_s", name, dt)
 
     def observe_maintain(self, name: str, dt: float) -> None:
         st = self._stat(name)
         if not self.frozen:
             st.maintain_s = self._ewma(st.maintain_s, float(dt))
         st.last_maintain_t = self._clock()
+        self._observe_metric("planner_maintain_s", name, dt)
 
     def observe_retune(self, name: str, dt: float) -> None:
         """A retune-then-clean's wall time prices FUTURE retunes, not plain
@@ -172,17 +182,24 @@ class CostModel:
         st = self._stat(name)
         if not self.frozen:
             st.retune_s = self._ewma(st.retune_s, float(dt))
+        self._observe_metric("planner_retune_s", name, dt)
 
     def observe_traffic(self, name: str, n_queries: int) -> None:
-        self._stat(name).traffic += float(n_queries)
+        st = self._stat(name)
+        st.traffic += float(n_queries)
+        if self._registry is not None:
+            self._registry.gauge("planner_traffic", view=name).set(st.traffic)
 
     def observe_ingest(self, base: str, n_rows: int) -> None:
         """Drift rides ViewManager's own counters; nothing to do here (the
         hook exists so subclasses can rate-model ingest streams)."""
 
     def decay_traffic(self, factor: float = 0.5) -> None:
-        for st in self.stats.values():
+        for name, st in self.stats.items():
             st.traffic *= factor
+            if self._registry is not None:
+                self._registry.gauge("planner_traffic",
+                                     view=name).set(st.traffic)
 
     def pin_costs(self, refresh_s: float, maintain_s: float,
                   retune_s: Optional[float] = None) -> None:

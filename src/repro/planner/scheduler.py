@@ -33,6 +33,7 @@ import time
 from typing import Callable, Dict, List, Optional
 
 from repro.kernels.fleet_score import A_CLEAN, A_MAINTAIN, A_RETUNE
+from repro.obs import trace
 from repro.planner.costs import CostModel
 from repro.planner.score import FleetScores, score_fleet
 
@@ -138,12 +139,16 @@ class MaintenancePlanner:
     def plan(self, budget_s: Optional[float] = None) -> PlanReport:
         """Score the fleet and pick this epoch's actions (no execution)."""
         budget = self.budget_s if budget_s is None else float(budget_s)
-        t0 = time.perf_counter()
-        fs: FleetScores = score_fleet(
-            self.cost_model, use_pallas=self.use_pallas
-        )
-        snapshot_s = time.perf_counter() - t0
-        t0 = time.perf_counter()
+        clock = self.vm.clock
+        t0 = clock()
+        with trace.span("snapshot", epoch=self.epoch):
+            fs: FleetScores = score_fleet(
+                self.cost_model, use_pallas=self.use_pallas
+            )
+        snapshot_s = clock() - t0
+        t0 = clock()
+        sched_sp = trace.span("schedule", epoch=self.epoch)
+        sched_sp.__enter__()
         rec_m = fs.recommended_m()
         chosen: Dict[str, PlannedAction] = {}
         remaining = budget
@@ -202,6 +207,10 @@ class MaintenancePlanner:
         for act in actions:
             act.deadline_s = max(self.deadline_floor_s,
                                  self.deadline_factor * act.predicted_s)
+        schedule_s = clock() - t0
+        sched_sp.set(chosen=len(actions),
+                     skipped=len(fs.names) - len(actions))
+        sched_sp.__exit__(None, None, None)
         return PlanReport(
             epoch=self.epoch,
             budget_s=budget,
@@ -212,7 +221,7 @@ class MaintenancePlanner:
             quarantined=sorted(blocked),
             predicted_spend_s=sum(a.predicted_s for a in actions),
             snapshot_s=snapshot_s,
-            schedule_s=time.perf_counter() - t0,
+            schedule_s=schedule_s,
         )
 
     # -- the control-plane epoch ---------------------------------------------
@@ -245,43 +254,50 @@ class MaintenancePlanner:
                 rm = report.recommended_m.get(act.view, 0.0)
                 if rm > 0.0:
                     self.vm.views[act.view].recommended_m = rm
-        t0 = time.perf_counter()
-        cleans = [a for a in report.actions if a.action != "maintain"]
-        for act in report.actions:
-            if act.action == "maintain":
-                try:
-                    act.actual_s = self.vm.maintain(act.view)
-                except Exception:
-                    # maintain() already restored the view and recorded the
-                    # failure in vm.health; the epoch goes on without it
-                    act.failed = True
-                    act.actual_s = 0.0
-        if cleans:
-            # the epoch's scheduled cleans go through the fleet refresh
-            # path: delta aggregations sharing a plan shape run as ONE
-            # batched fused dispatch instead of len(cleans) sequential ones
-            # (isolate=True: a failed view is rolled back + quarantined and
-            # the other cleans still commit)
-            dts = self.vm.svc_refresh_many([a.view for a in cleans],
-                                           fused=fused, isolate=True)
-            for act in cleans:
-                act.actual_s = dts[act.view]
-                if self.vm.health.failed_this_epoch(act.view):
-                    act.failed = True
-        # deadline check: an action that ran past its deadline is treated
-        # as cancelled-equivalent — the view degrades to serve-stale and
-        # the blown-up wall time is already in the cost EWMA, so the next
-        # epoch both prices it honestly and backs off retrying it
-        for act in report.actions:
-            if (not act.failed and act.deadline_s > 0.0
-                    and act.actual_s > act.deadline_s):
-                act.overrun = True
-                self.vm.health.record_failure(
-                    act.view,
-                    TimeoutError(
-                        f"{act.action} ran {act.actual_s:.3f}s > deadline "
-                        f"{act.deadline_s:.3f}s"))
-        report.act_s = time.perf_counter() - t0
+        clock = self.vm.clock
+        t0 = clock()
+        with trace.span("act", epoch=self.epoch,
+                        actions=len(report.actions)) as act_sp:
+            cleans = [a for a in report.actions if a.action != "maintain"]
+            for act in report.actions:
+                if act.action == "maintain":
+                    try:
+                        act.actual_s = self.vm.maintain(act.view)
+                    except Exception:
+                        # maintain() already restored the view and recorded
+                        # the failure in vm.health; the epoch goes on
+                        # without it
+                        act.failed = True
+                        act.actual_s = 0.0
+            if cleans:
+                # the epoch's scheduled cleans go through the fleet refresh
+                # path: delta aggregations sharing a plan shape run as ONE
+                # batched fused dispatch instead of len(cleans) sequential
+                # ones (isolate=True: a failed view is rolled back +
+                # quarantined and the other cleans still commit)
+                dts = self.vm.svc_refresh_many([a.view for a in cleans],
+                                               fused=fused, isolate=True)
+                for act in cleans:
+                    act.actual_s = dts[act.view]
+                    if self.vm.health.failed_this_epoch(act.view):
+                        act.failed = True
+            # deadline check: an action that ran past its deadline is
+            # treated as cancelled-equivalent — the view degrades to
+            # serve-stale and the blown-up wall time is already in the cost
+            # EWMA, so the next epoch both prices it honestly and backs off
+            # retrying it
+            for act in report.actions:
+                if (not act.failed and act.deadline_s > 0.0
+                        and act.actual_s > act.deadline_s):
+                    act.overrun = True
+                    self.vm.health.record_failure(
+                        act.view,
+                        TimeoutError(
+                            f"{act.action} ran {act.actual_s:.3f}s > "
+                            f"deadline {act.deadline_s:.3f}s"))
+            report.act_s = clock() - t0
+            act_sp.set(act_s=report.act_s,
+                       failed=sum(1 for a in report.actions if a.failed))
         report.actual_spend_s = sum(a.actual_s for a in report.actions)
         self.cost_model.decay_traffic(self.traffic_decay)
         self.epoch += 1

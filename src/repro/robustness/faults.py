@@ -45,6 +45,8 @@ from __future__ import annotations
 import dataclasses
 from typing import List, Optional, Sequence, Tuple
 
+from repro.obs import trace
+
 FAULT_KINDS = (
     "refresh_error",
     "maintain_error",
@@ -141,20 +143,28 @@ class FaultPlan:
             and (target is None or s.target == "*" or s.target == target)
         ]
 
+    def _record(self, spec: FaultSpec, where: str) -> None:
+        """One fault fired: append to the injection log AND emit a trace
+        event, so an exported trace carries exactly as many ``fault``
+        events as ``len(self.injected)`` (the reconciliation invariant)."""
+        self.injected.append((self.epoch, spec, where))
+        trace.event("fault", kind=spec.kind, target=spec.target, where=where,
+                    epoch=self.epoch)
+
     # -- action-path hooks (ViewManager._inject_fault) -----------------------
     def fire(self, point: str, name: str) -> float:
         """Called at an action's start: ``point`` is "refresh" | "maintain" |
         "kernel".  Raises ``FaultInjected`` for a scheduled error, returns
         extra latency seconds for a scheduled spike (0.0 otherwise)."""
         for spec in self._active(point + "_error", name):
-            self.injected.append((self.epoch, spec, f"{point}:{name}"))
+            self._record(spec, f"{point}:{name}")
             raise FaultInjected(
                 f"injected {spec.kind} on {name!r} at epoch {self.epoch}"
             )
         extra = 0.0
         if point in ("refresh", "maintain"):
             for spec in self._active("latency", name):
-                self.injected.append((self.epoch, spec, f"{point}:{name}"))
+                self._record(spec, f"{point}:{name}")
                 extra += float(spec.magnitude)
         return extra
 
@@ -174,7 +184,7 @@ class FaultPlan:
             for i in idx:
                 out[i, :] = np.nan
             if idx:
-                self.injected.append((self.epoch, spec, "features"))
+                self._record(spec, "features")
         return out
 
     # -- producer-path hooks (streaming offer) -------------------------------
@@ -187,7 +197,7 @@ class FaultPlan:
         offers = [(inserts, deletes, seq, key)]
         for spec in self._active("duplicate_batch", base):
             offers.append((inserts, deletes, seq, key))
-            self.injected.append((self.epoch, spec, f"offer:{base}"))
+            self._record(spec, f"offer:{base}")
         for spec in self._active("corrupt_batch", base):
             offers.append((
                 _corrupt_copy(inserts) if inserts is not None else None,
@@ -195,7 +205,7 @@ class FaultPlan:
                 seq,
                 key,
             ))
-            self.injected.append((self.epoch, spec, f"offer:{base}"))
+            self._record(spec, f"offer:{base}")
         return offers
 
     # -- serving-plane hooks (admission / cache / drain) ---------------------
@@ -205,7 +215,7 @@ class FaultPlan:
         harness multiplies its per-epoch query count by this."""
         mult = 1.0
         for spec in self._active("traffic_spike"):
-            self.injected.append((self.epoch, spec, "traffic"))
+            self._record(spec, "traffic")
             mult *= max(float(spec.magnitude), 0.0)
         return mult
 
@@ -215,7 +225,7 @@ class FaultPlan:
         EWMA without real sleeps, so overload paths test deterministically."""
         extra = 0.0
         for spec in self._active("slow_drain"):
-            self.injected.append((self.epoch, spec, "drain"))
+            self._record(spec, "drain")
             extra += float(spec.magnitude)
         return extra
 
@@ -227,7 +237,7 @@ class FaultPlan:
         n = 0
         for spec in self._active("cache_poison", view):
             n += cache.poison(view)
-            self.injected.append((self.epoch, spec, f"cache:{view}"))
+            self._record(spec, f"cache:{view}")
         return n
 
     # -- clock (harness-owned) -----------------------------------------------
@@ -236,7 +246,7 @@ class FaultPlan:
         its injectable clock; may be negative)."""
         skew = 0.0
         for spec in self._active("clock_skew"):
-            self.injected.append((self.epoch, spec, "clock"))
+            self._record(spec, "clock")
             skew += float(spec.magnitude)
         return skew
 

@@ -26,6 +26,8 @@ from __future__ import annotations
 import dataclasses
 from typing import Dict, List, Optional
 
+from repro.obs import trace
+
 
 @dataclasses.dataclass
 class ViewHealth:
@@ -95,6 +97,10 @@ class FleetHealth:
         h.last_error = f"{type(error).__name__}: {error}" if isinstance(
             error, BaseException) else str(error)
         h.last_failure_epoch = self.epoch
+        # one quarantine event per recorded failure: the trace's count must
+        # reconcile exactly against Σ ViewHealth.failures at export time
+        trace.event("quarantine", view=name, error=h.last_error,
+                    epoch=self.epoch, consecutive=h.consecutive)
         return h
 
     def record_success(self, name: str) -> ViewHealth:
@@ -103,6 +109,7 @@ class FleetHealth:
         h = self._h(name)
         if h.degraded:
             h.recovered_epoch = self.epoch
+            trace.event("recover", view=name, epoch=self.epoch)
         h.degraded = False
         h.consecutive = 0
         h.retries_left = self.max_retries

@@ -35,6 +35,8 @@ import dataclasses
 import time
 from typing import Callable, Dict, Optional
 
+from repro.obs.registry import MetricsRegistry, counter_attr
+
 # admission verdicts (the serving ladder's top rung)
 ADMIT = "admit"
 THROTTLE = "throttle"
@@ -106,8 +108,16 @@ class AdmissionController:
     every tenant uniformly (per-tenant budgets are not charged for shed
     queries), then per-tenant budgets throttle the individually greedy."""
 
+    # fleet-wide verdict tallies: bit-compatible views over the metrics
+    # registry (per-tenant splits ride the labeled admission_verdicts
+    # counter and the TenantStats mirror)
+    admitted = counter_attr()
+    throttled = counter_attr()
+    shed = counter_attr()
+
     def __init__(self, config: Optional[AdmissionConfig] = None,
-                 clock: Callable[[], float] = time.monotonic):
+                 clock: Callable[[], float] = time.monotonic,
+                 registry: Optional[MetricsRegistry] = None):
         self.config = config or AdmissionConfig()
         self._clock = clock
         self.fleet_bucket = TokenBucket(
@@ -115,10 +125,15 @@ class AdmissionController:
         )
         self._tenants: Dict[str, TokenBucket] = {}
         self.tenant_stats: Dict[str, TenantStats] = {}
-        self.admitted = 0
-        self.throttled = 0
-        self.shed = 0
+        self.metrics = registry or MetricsRegistry()
+        self._c_admitted = self.metrics.counter("admission_admitted")
+        self._c_throttled = self.metrics.counter("admission_throttled")
+        self._c_shed = self.metrics.counter("admission_shed")
         self._drain_ewma = 0.0
+
+    def _verdict_counter(self, tenant: str, verdict: str):
+        return self.metrics.counter("admission_verdicts", tenant=tenant,
+                                    verdict=verdict)
 
     def _tenant_bucket(self, tenant: str) -> TokenBucket:
         b = self._tenants.get(tenant)
@@ -163,17 +178,21 @@ class AdmissionController:
         the fleet bucket (they do run a scan, just no refresh)."""
         stats = self._stats(tenant)
         if self._drain_ewma > self.config.drain_overload_s:
+            verdict = SHED
+        elif not self.fleet_bucket.take(n):
+            verdict = SHED
+        elif not self._tenant_bucket(tenant).take(n):
+            verdict = THROTTLE
+        else:
+            verdict = ADMIT
+        if verdict == SHED:
             self.shed += n
             stats.shed += n
-            return SHED
-        if not self.fleet_bucket.take(n):
-            self.shed += n
-            stats.shed += n
-            return SHED
-        if not self._tenant_bucket(tenant).take(n):
+        elif verdict == THROTTLE:
             self.throttled += n
             stats.throttled += n
-            return THROTTLE
-        self.admitted += n
-        stats.admitted += n
-        return ADMIT
+        else:
+            self.admitted += n
+            stats.admitted += n
+        self._verdict_counter(tenant, verdict).inc(n)
+        return verdict

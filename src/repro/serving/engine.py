@@ -222,6 +222,12 @@ class ServeEngine:
         """
         if self.telemetry is None:
             raise RuntimeError("dashboard() requires a telemetry StreamingViewService")
+        if view_name == "observatory":
+            # the staleness observatory: metrics registry + trace + kernel
+            # profile + reconciliation in one panel (no sample scan at all)
+            from repro.obs import observatory_panel
+
+            return observatory_panel(self.telemetry)
         from repro.core.estimators import Query
 
         vm = self.telemetry.vm

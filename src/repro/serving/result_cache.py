@@ -38,6 +38,7 @@ from typing import Dict, Optional, Tuple
 import numpy as np
 
 from repro.core.estimators import Estimate, Query
+from repro.obs.registry import MetricsRegistry, counter_attr
 
 
 @functools.lru_cache(maxsize=8192)
@@ -94,17 +95,28 @@ class ResultCache:
     (``poison_rejected``): a poisoned entry costs one recompute, never a
     wrong answer."""
 
-    def __init__(self, capacity: int = 256):
+    hits = counter_attr()
+    misses = counter_attr()
+    stale_hits = counter_attr()  # get_any answers served from an older version
+    evictions = counter_attr()
+    puts = counter_attr()
+    poison_rejected = counter_attr()  # version-mismatched entries refused
+
+    def __init__(self, capacity: int = 256,
+                 registry: Optional[MetricsRegistry] = None):
         self.capacity = int(capacity)
         self._entries: "OrderedDict[Tuple[str, int, Tuple[int, int]], CacheEntry]" = OrderedDict()
         # (view, digest) -> newest stored version (the serve-stale index)
         self._latest: Dict[Tuple[str, Tuple[int, int]], int] = {}
-        self.hits = 0
-        self.misses = 0
-        self.stale_hits = 0  # get_any answers served from an older version
-        self.evictions = 0
-        self.puts = 0
-        self.poison_rejected = 0  # version-mismatched entries refused
+        # counters are bit-compatible views over a repro.obs registry (pass
+        # the service-wide one to correlate with the rest of the plane)
+        self.metrics = registry or MetricsRegistry()
+        self._c_hits = self.metrics.counter("cache_hits")
+        self._c_misses = self.metrics.counter("cache_misses")
+        self._c_stale_hits = self.metrics.counter("cache_stale_hits")
+        self._c_evictions = self.metrics.counter("cache_evictions")
+        self._c_puts = self.metrics.counter("cache_puts")
+        self._c_poison_rejected = self.metrics.counter("cache_poison_rejected")
 
     def __len__(self) -> int:
         return len(self._entries)

@@ -22,6 +22,8 @@ import time
 from collections import OrderedDict
 from typing import Callable, Hashable, List, Optional, Tuple
 
+from repro.obs import trace
+from repro.obs.registry import MetricsRegistry, counter_attr
 from repro.relational.relation import Relation, compact
 
 
@@ -69,7 +71,25 @@ def _finite_or_raise(rel: Relation, base: str) -> None:
 
 
 class DeltaLog:
-    """Per-base-relation bounded log of out-of-order micro-batches."""
+    """Per-base-relation bounded log of out-of-order micro-batches.
+
+    Accounting is a set of bit-compatible counter views over a
+    ``repro.obs`` MetricsRegistry (labeled by base relation), and every
+    lifecycle step — offer, drain, shed, spill, requeue — additionally
+    emits a structured trace event carrying the affected sequence numbers,
+    so trace reconciliation can account for every offered batch (a shed
+    used to be a local tally only: a dropped batch was visible as a count,
+    not as WHICH batch)."""
+
+    total_offered = counter_attr()  # rows, lifetime
+    deduped_batches = counter_attr()  # replayed offers absorbed by their key
+    deduped_rows = counter_attr()
+    shed_rows = counter_attr()  # rows dropped by the drop-oldest shed policy
+    shed_batches = counter_attr()
+    corrupt_batches = counter_attr()  # offers rejected by finite-validation
+    corrupt_rows = counter_attr()
+    spills = counter_attr()  # in-place ring coalesces (spill-and-coalesce)
+    requeues = counter_attr()  # drained windows given back after failed apply
 
     def __init__(
         self,
@@ -77,6 +97,7 @@ class DeltaLog:
         max_batches: int = 64,
         clock: Callable[[], float] = time.monotonic,
         dedupe_window: int = 4096,
+        registry: Optional[MetricsRegistry] = None,
     ):
         self.base = base
         self.max_batches = int(max_batches)
@@ -85,7 +106,12 @@ class DeltaLog:
         self._auto_seq = 0
         self.high_seq = -1  # highest sequence number ever offered
         self.drained_through_seq = -1  # highest seq included in a drain
-        self.total_offered = 0  # rows, lifetime
+        self.metrics = registry or MetricsRegistry()
+
+        def _c(name: str):
+            return self.metrics.counter(name, base=base)
+
+        self._c_total_offered = _c("log_offered_rows")
         # -- at-least-once idempotency (queue-based load leveling) ------------
         # producer idempotency keys of ACCEPTED offers, newest-last; a replay
         # of an accepted key is absorbed (not an error) so a spiking producer
@@ -94,15 +120,15 @@ class DeltaLog:
         # re-drains bit-equal to a once-delivered stream.
         self.dedupe_window = int(dedupe_window)
         self._seen_keys: "OrderedDict[Hashable, int]" = OrderedDict()
-        self.deduped_batches = 0  # replayed offers absorbed by their key
-        self.deduped_rows = 0
+        self._c_deduped_batches = _c("log_deduped_batches")
+        self._c_deduped_rows = _c("log_deduped_rows")
         # -- failure-axis accounting (surfaced in StalenessInfo) -------------
-        self.shed_rows = 0  # rows dropped by the drop-oldest shed policy
-        self.shed_batches = 0
-        self.corrupt_batches = 0  # offers rejected by finite-validation
-        self.corrupt_rows = 0
-        self.spills = 0  # in-place ring coalesces (spill-and-coalesce)
-        self.requeues = 0  # drained windows given back after a failed apply
+        self._c_shed_rows = _c("log_shed_rows")
+        self._c_shed_batches = _c("log_shed_batches")
+        self._c_corrupt_batches = _c("log_corrupt_batches")
+        self._c_corrupt_rows = _c("log_corrupt_rows")
+        self._c_spills = _c("log_spills")
+        self._c_requeues = _c("log_requeues")
         # (prior drained_through_seq, oldest arrival, max seq) of the last
         # drain — what requeue() needs to give the window back losslessly
         self._last_drain: Optional[Tuple[int, float, int]] = None
@@ -129,20 +155,26 @@ class DeltaLog:
         if inserts is None and deletes is None:
             raise ValueError("empty micro-batch")
         if key is not None and key in self._seen_keys:
-            self.deduped_batches += 1
-            self.deduped_rows += sum(
+            n_dup = sum(
                 _host_count(r) for r in (inserts, deletes) if r is not None
             )
+            self.deduped_batches += 1
+            self.deduped_rows += n_dup
+            trace.event("offer", base=self.base, seq=self._seen_keys[key],
+                        rows=n_dup, outcome="deduped")
             return None
         try:
             for rel in (inserts, deletes):
                 if rel is not None:
                     _finite_or_raise(rel, self.base)
         except CorruptBatch:
-            self.corrupt_batches += 1
-            self.corrupt_rows += sum(
+            n_bad = sum(
                 _host_count(r) for r in (inserts, deletes) if r is not None
             )
+            self.corrupt_batches += 1
+            self.corrupt_rows += n_bad
+            trace.event("offer", base=self.base, seq=seq, rows=n_bad,
+                        outcome="corrupt")
             raise
         if len(self._ring) >= self.max_batches:
             raise Backpressure(
@@ -156,6 +188,8 @@ class DeltaLog:
         self._ring.append(mb)
         self.high_seq = max(self.high_seq, mb.seq)
         self.total_offered += mb.rows()
+        trace.event("offer", base=self.base, seq=mb.seq, rows=mb.rows(),
+                    outcome="accepted")
         if key is not None:
             self._seen_keys[key] = mb.seq
             while len(self._seen_keys) > self.dedupe_window:
@@ -168,6 +202,11 @@ class DeltaLog:
 
     def pending_rows(self) -> int:
         return sum(mb.rows() for mb in self._ring)
+
+    def pending_seqs(self) -> List[int]:
+        """Seq numbers still in the ring (trace reconciliation's end-state
+        term: accepted == drained ⊎ shed ⊎ spilled ⊎ THESE)."""
+        return sorted(mb.seq for mb in self._ring)
 
     def oldest_age_s(self, now: Optional[float] = None) -> float:
         if not self._ring:
@@ -199,6 +238,9 @@ class DeltaLog:
             batches[-1].seq,
         )
         self.drained_through_seq = max(self.drained_through_seq, batches[-1].seq)
+        trace.event("drain", base=self.base,
+                    seqs=[mb.seq for mb in batches],
+                    rows=sum(mb.rows() for mb in batches))
         return _coalesce_batches(batches)
 
     def requeue(self, inserts: Optional[Relation],
@@ -221,6 +263,7 @@ class DeltaLog:
         self.drained_through_seq = prev_seq
         self._last_drain = None
         self.requeues += 1
+        trace.event("requeue", base=self.base, seq=max_seq, rows=n)
 
     # -- overload shedding (non-blocking producers) --------------------------
     def shed_oldest(self, n: int = 1) -> int:
@@ -229,12 +272,16 @@ class DeltaLog:
         ``shed_rows`` and surfaced through staleness metadata — dropped,
         never silently."""
         shed = 0
+        shed_seqs: List[int] = []
         for _ in range(min(n, len(self._ring))):
             oldest = min(self._ring, key=lambda mb: (mb.t_arrival, mb.seq))
             self._ring.remove(oldest)
             shed += oldest.rows()
+            shed_seqs.append(oldest.seq)
             self.shed_batches += 1
         self.shed_rows += shed
+        if shed_seqs:
+            trace.event("shed", base=self.base, seqs=shed_seqs, rows=shed)
         return shed
 
     def spill(self) -> int:
@@ -253,6 +300,9 @@ class DeltaLog:
             min(mb.t_arrival for mb in batches), n_rows=n,
         )]
         self.spills += 1
+        trace.event("spill", base=self.base,
+                    absorbed=[mb.seq for mb in batches[:-1]],
+                    survivor=batches[-1].seq, freed=freed)
         return freed
 
 
@@ -399,10 +449,12 @@ class PartitionedDeltaLog:
     by the sharded (psum) delta aggregation rather than by row shuffling."""
 
     def __init__(self, base: str, n_shards: int, max_batches: int = 64,
-                 clock: Callable[[], float] = time.monotonic):
+                 clock: Callable[[], float] = time.monotonic,
+                 registry: Optional[MetricsRegistry] = None):
         self.base = base
         self.shards = [
-            DeltaLog(f"{base}[{i}]", max_batches=max_batches, clock=clock)
+            DeltaLog(f"{base}[{i}]", max_batches=max_batches, clock=clock,
+                     registry=registry)
             for i in range(n_shards)
         ]
 

@@ -30,6 +30,8 @@ import time
 from typing import Callable, Dict, Hashable, List, Optional, Sequence, Tuple
 
 from repro.core.estimators import Estimate, Query
+from repro.obs import trace
+from repro.obs.registry import counter_attr
 from repro.streaming.delta_log import Backpressure, CorruptBatch, DeltaLog
 
 # ring-overflow shed policies (StreamConfig.shed_policy)
@@ -137,6 +139,11 @@ class StreamedEstimate:
 class StreamingViewService:
     """Wraps a ViewManager with log-buffered ingest + watermark refresh."""
 
+    # bit-compatible counter views over the ViewManager's metrics registry
+    # (the one snapshot every serving/streaming instrument lands in)
+    refresh_count = counter_attr()
+    queries_issued = counter_attr()  # lifetime queries through query_batch
+
     def __init__(self, vm, config: Optional[StreamConfig] = None,
                  clock: Callable[[], float] = time.monotonic):
         self.vm = vm
@@ -149,7 +156,8 @@ class StreamingViewService:
         self._clock = clock
         self.logs: Dict[str, DeltaLog] = {}
         self._last_refresh: Optional[float] = None
-        self.refresh_count = 0
+        self._c_refresh_count = vm.metrics.counter("stream_refreshes")
+        self._c_queries_issued = vm.metrics.counter("stream_queries")
         self.planner = None  # MaintenancePlanner once attach_planner ran
         self._refresh_error: Optional[str] = None  # last degraded refresh
         # -- serving plane (overload axis) -----------------------------------
@@ -157,12 +165,14 @@ class StreamingViewService:
         if self.config.admission is not None:
             from repro.serving.admission import AdmissionController
 
-            self.admission = AdmissionController(self.config.admission, clock)
+            self.admission = AdmissionController(self.config.admission, clock,
+                                                 registry=vm.metrics)
         self.result_cache = None
         if self.config.cache_capacity > 0:
             from repro.serving.result_cache import ResultCache
 
-            self.result_cache = ResultCache(self.config.cache_capacity)
+            self.result_cache = ResultCache(self.config.cache_capacity,
+                                            registry=vm.metrics)
 
     def attach_planner(self, planner):
         """Route watermark refreshes through the budgeted control plane:
@@ -176,6 +186,7 @@ class StreamingViewService:
             self.logs[base] = DeltaLog(
                 base, max_batches=self.config.max_batches, clock=self._clock,
                 dedupe_window=self.config.dedupe_window,
+                registry=self.vm.metrics,
             )
         return self.logs[base]
 
@@ -295,52 +306,60 @@ class StreamingViewService:
         before ``svc_refresh`` re-derives the pin set for cleaning."""
         planner = plan if plan is not None else self.planner
         health = self.vm.health
-        touched = set()
-        for base, log in self.logs.items():
-            ins, dels = log.drain()
-            if ins is None and dels is None:
-                continue
-            try:
-                self.vm._ingest_pending(base, inserts=ins, deletes=dels)
-            except Exception:
-                # drained-but-unapplied deltas are NEVER stranded: the
-                # window goes back into the ring for an idempotent re-drain
-                log.requeue(ins, dels)
-                raise
-            touched.add(base)
-        total = 0.0
-        if planner is not None:
-            total = planner.step(fused=self.config.fused).actual_spend_s
-        else:
-            # clean-all epoch: every affected sample refreshes through the
-            # fleet path, so delta aggregations sharing a plan shape run as
-            # ONE batched fused dispatch instead of V sequential calls.
-            # Quarantined views inside their backoff window sit out; ones
-            # whose retry is due re-enter even if this window left their
-            # bases untouched (their drift is from earlier windows).
-            health.begin_epoch()
-            affected = [
-                name for name, mv in self.vm.views.items()
-                if not health.blocked(name)
-                and (touched & set(mv.delta_bases)
-                     or (health.retry_due(name)
-                         and self.vm.drift_rows(name, since="clean") > 0))
-            ]
-            if affected:
-                total = sum(self.vm.svc_refresh_many(
-                    affected, fused=self.config.fused
-                ).values())
-        fault_plan = getattr(self.vm, "fault_plan", None)
-        if fault_plan is not None:
-            # slow_drain chaos: report extra wall seconds without sleeping —
-            # the admission controller's overload EWMA sees an expensive
-            # drain and the serving ladder must degrade, deterministically
-            total += fault_plan.drain_latency_s()
-        if self.admission is not None:
-            self.admission.note_drain(total)
-        self._last_refresh = self._clock()
-        self.refresh_count += 1
-        self._refresh_error = None
+        with trace.span("epoch") as ep:
+            touched = set()
+            for base, log in self.logs.items():
+                if log.pending_batches() == 0:
+                    continue
+                with trace.span("drain", base=base):
+                    ins, dels = log.drain()
+                    if ins is None and dels is None:
+                        continue
+                    try:
+                        self.vm._ingest_pending(base, inserts=ins, deletes=dels)
+                    except Exception:
+                        # drained-but-unapplied deltas are NEVER stranded:
+                        # the window goes back into the ring for an
+                        # idempotent re-drain
+                        log.requeue(ins, dels)
+                        raise
+                    touched.add(base)
+            total = 0.0
+            if planner is not None:
+                total = planner.step(fused=self.config.fused).actual_spend_s
+            else:
+                # clean-all epoch: every affected sample refreshes through
+                # the fleet path, so delta aggregations sharing a plan shape
+                # run as ONE batched fused dispatch instead of V sequential
+                # calls.  Quarantined views inside their backoff window sit
+                # out; ones whose retry is due re-enter even if this window
+                # left their bases untouched (drift is from earlier windows).
+                health.begin_epoch()
+                affected = [
+                    name for name, mv in self.vm.views.items()
+                    if not health.blocked(name)
+                    and (touched & set(mv.delta_bases)
+                         or (health.retry_due(name)
+                             and self.vm.drift_rows(name, since="clean") > 0))
+                ]
+                if affected:
+                    total = sum(self.vm.svc_refresh_many(
+                        affected, fused=self.config.fused
+                    ).values())
+            fault_plan = getattr(self.vm, "fault_plan", None)
+            if fault_plan is not None:
+                # slow_drain chaos: report extra wall seconds without
+                # sleeping — the admission controller's overload EWMA sees
+                # an expensive drain and the serving ladder must degrade,
+                # deterministically
+                total += fault_plan.drain_latency_s()
+            if self.admission is not None:
+                self.admission.note_drain(total)
+            self._last_refresh = self._clock()
+            self.refresh_count += 1
+            self._refresh_error = None
+            ep.set(bases=len(touched), total_s=total,
+                   planned=planner is not None)
         return total
 
     def _maybe_refresh(self) -> None:
@@ -457,18 +476,29 @@ class StreamingViewService:
         consistent refresh window (degraded or not)."""
         from repro.serving.admission import ADMIT
 
-        decision = ADMIT
-        if self.admission is not None:
-            decision = self.admission.decide(tenant, len(queries))
-        if decision == ADMIT:
-            self._maybe_refresh()
-        ests = self._answer_batch(view_name, list(queries), decision, kw)
-        st = self.staleness()
-        return [
-            StreamedEstimate(estimate=self._degrade_estimate(view_name, e, st),
-                             staleness=st)
-            for e in ests
-        ]
+        queries = list(queries)
+        with trace.span("query", view=view_name, tenant=tenant,
+                        n=len(queries)) as sp:
+            self.queries_issued += len(queries)
+            decision = ADMIT
+            if self.admission is not None:
+                with trace.span("admit", tenant=tenant):
+                    decision = self.admission.decide(tenant, len(queries))
+            sp.set(verdict=decision)
+            if decision == ADMIT and (self.config.auto_refresh
+                                      and self.watermark_due()):
+                # span only when a refresh will actually run: a due
+                # watermark honored inline before the batch answers
+                with trace.span("refresh"):
+                    self._maybe_refresh()
+            ests = self._answer_batch(view_name, queries, decision, kw)
+            st = self.staleness()
+            return [
+                StreamedEstimate(
+                    estimate=self._degrade_estimate(view_name, e, st),
+                    staleness=st)
+                for e in ests
+            ]
 
     # -- the cache + degrade rungs of the ladder -----------------------------
     def _answer_batch(self, view_name: str, queries: Sequence[Query],
@@ -508,22 +538,25 @@ class StreamingViewService:
             stale_version = {}  # index -> version a stale hit was served at
             misses: List[int] = []
             hits = 0
-            for i, (q, key) in enumerate(zip(queries, keys)):
-                if key is None:
-                    misses.append(i)
-                    continue
-                est = cache.get(view_name, version, key)
-                if est is not None:
-                    results[i] = est
-                    hits += 1
-                    continue
-                if decision == SHED and self.config.cache_serve_stale:
-                    stale = cache.get_any(view_name, key)
-                    if stale is not None:
-                        results[i], stale_version[i] = stale
+            with trace.span("cache", view=view_name,
+                            sample_version=version) as csp:
+                for i, (q, key) in enumerate(zip(queries, keys)):
+                    if key is None:
+                        misses.append(i)
+                        continue
+                    est = cache.get(view_name, version, key)
+                    if est is not None:
+                        results[i] = est
                         hits += 1
                         continue
-                misses.append(i)
+                    if decision == SHED and self.config.cache_serve_stale:
+                        stale = cache.get_any(view_name, key)
+                        if stale is not None:
+                            results[i], stale_version[i] = stale
+                            hits += 1
+                            continue
+                    misses.append(i)
+                csp.set(hits=hits, misses=len(misses))
             # cache hits are real demand: the planner's traffic counter must
             # see them even though vm.query_batch never ran for them
             if hits and record_traffic and self.vm.cost_model is not None:

@@ -14,7 +14,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax.numpy as jnp
 
@@ -48,6 +48,8 @@ from repro.relational.plan import plan_leaves
 from repro.relational.execute import execute
 from repro.relational.relation import Relation, compact, from_columns
 from repro.relational.relation import empty as empty_relation
+from repro.obs import trace as obs_trace
+from repro.obs.registry import MetricsRegistry, counter_attr
 from repro.robustness.health import FleetHealth
 import numpy as np
 
@@ -99,7 +101,21 @@ class ManagedView:
 
 
 class ViewManager:
-    def __init__(self):
+    # batched fleet-merge dispatches that fell back to per-view cleans
+    # because the dispatch itself raised (telemetry: a persistent count
+    # here means the fleet path is silently degraded to the slow path);
+    # a bit-compatible view over the metrics registry
+    fleet_merge_failures = counter_attr()
+
+    def __init__(self, clock: Optional[Callable[[], float]] = None):
+        # every wall-clock duration in the manager/planner plane reads THIS
+        # clock (injectable: simulation tests pass a fake, production gets
+        # perf_counter) — one time source instead of scattered call sites
+        self.clock: Callable[[], float] = clock or time.perf_counter
+        # the unified metrics registry for the whole pipeline: serving-
+        # plane and DeltaLog instruments are created against this registry
+        # by configure_streaming, so one snapshot covers every subsystem
+        self.metrics = MetricsRegistry()
         self.base: Dict[str, Relation] = {}
         self.views: Dict[str, ManagedView] = {}
         # pending deltas as an ordered SEGMENT log (one DeltaSet per ingest
@@ -124,10 +140,9 @@ class ViewManager:
         # chaos-test injection point (robustness.faults.FaultPlan.attach);
         # None in production — the hooks below are single attribute checks
         self.fault_plan = None
-        # batched fleet-merge dispatches that fell back to per-view cleans
-        # because the dispatch itself raised (telemetry: a persistent count
-        # here means the fleet path is silently degraded to the slow path)
-        self.fleet_merge_failures = 0
+        self._c_fleet_merge_failures = self.metrics.counter(
+            "fleet_merge_failures"
+        )
 
     def _inject_fault(self, point: str, name: Optional[str]) -> float:
         """Fire the chaos hook at a designed failure point; returns injected
@@ -277,6 +292,7 @@ class ViewManager:
             self.pending_segments.append(seg)
             self._merged_cache.clear()
             self.ingested_rows[base] = self.ingested_rows.get(base, 0) + n_rows
+            obs_trace.event("ingest", base=base, rows=n_rows)
         for mv in self.views.values():
             if base in mv.delta_bases:
                 mv.stale_since_ivm = True
@@ -388,17 +404,19 @@ class ViewManager:
         pending), bit-equal to a run that never failed."""
         mv = self.views[view_name]
         snap = _view_snapshot(mv)
-        try:
-            dt = self._svc_refresh_inner(
-                mv, view_name, fused, _precomputed, _extra_s, _retuned
-            )
-        except Exception as e:
-            _restore_view(mv, snap)
-            if self._panel is not None:
-                self._panel.invalidate(view_name)
-            self.health.record_failure(view_name, e)
-            raise
-        self.health.record_success(view_name)
+        with obs_trace.span("clean", view=view_name) as sp:
+            try:
+                dt = self._svc_refresh_inner(
+                    mv, view_name, fused, _precomputed, _extra_s, _retuned
+                )
+            except Exception as e:
+                _restore_view(mv, snap)
+                if self._panel is not None:
+                    self._panel.invalidate(view_name)
+                self.health.record_failure(view_name, e)
+                raise
+            self.health.record_success(view_name)
+            sp.set(wall_s=dt, sample_version=mv.sample_version)
         return dt
 
     def _svc_refresh_inner(self, mv: ManagedView, view_name: str,
@@ -406,7 +424,7 @@ class ViewManager:
                            _extra_s: float, _retuned: bool) -> float:
         retuned = bool(_retuned)
         lat_s = self._inject_fault("refresh", view_name)
-        t0 = time.perf_counter()  # a retune below is part of the clean's cost
+        t0 = self.clock()  # a retune below is part of the clean's cost
         if (self.adaptive_m and mv.recommended_m is not None
                 and abs(mv.recommended_m - mv.m) > 1e-9):
             self._retune_sample_ratio(mv, mv.recommended_m)
@@ -437,7 +455,7 @@ class ViewManager:
         mv.stale_sample = flag_outliers(mv.stale_sample, mv.outlier_pin)
         mv.corr_cache = None  # samples moved: new correspondence window
         jnp.asarray(mv.clean_sample.valid).block_until_ready()
-        dt = time.perf_counter() - t0 + float(_extra_s) + lat_s
+        dt = self.clock() - t0 + float(_extra_s) + lat_s
         mv.maintenance_s = dt
         mv.refresh_s = dt
         self._bump_sample_version(mv)
@@ -541,9 +559,9 @@ class ViewManager:
                     continue
                 if (self.adaptive_m and mv.recommended_m is not None
                         and abs(mv.recommended_m - mv.m) > 1e-9):
-                    tr = time.perf_counter()  # charge the retune to this view
+                    tr = self.clock()  # charge the retune to this view
                     self._retune_sample_ratio(mv, mv.recommended_m)
-                    retune_s[name] = time.perf_counter() - tr
+                    retune_s[name] = self.clock() - tr
                     retuned.add(name)
                 if len(mv.view.pk) != 1:
                     continue
@@ -589,26 +607,29 @@ class ViewManager:
                     dele=(env[specs[1].fact_name], specs[1]) if has_del else None,
                     out_capacity=mv.sample_capacity,
                 ))
-        t0 = time.perf_counter()
         merged, precomputed = {}, {}
-        if jobs:
-            try:
-                self._inject_fault("kernel", None)
-                merged, precomputed = fleet_clean_merge(jobs)
-                for rel in merged.values():
-                    jnp.asarray(rel.valid).block_until_ready()
-            except Exception:
-                if not isolate:
-                    raise
-                # the batched dispatch failed as a unit: degrade the whole
-                # epoch to per-view cleans (slow but correct) — panel slots
-                # were only read, never written, so no restore is needed
-                self.fleet_merge_failures += 1
-                merged, precomputed = {}, {}
-        share = (
-            (time.perf_counter() - t0) / max(len(merged), 1)
-            if merged else 0.0
-        )
+        with obs_trace.span("merge", jobs=len(jobs)) as sp:
+            t0 = self.clock()
+            if jobs:
+                try:
+                    self._inject_fault("kernel", None)
+                    merged, precomputed = fleet_clean_merge(jobs)
+                    for rel in merged.values():
+                        jnp.asarray(rel.valid).block_until_ready()
+                except Exception:
+                    if not isolate:
+                        raise
+                    # the batched dispatch failed as a unit: degrade the
+                    # whole epoch to per-view cleans (slow but correct) —
+                    # panel slots were only read, never written, so no
+                    # restore is needed
+                    self.fleet_merge_failures += 1
+                    merged, precomputed = {}, {}
+            share = (
+                (self.clock() - t0) / max(len(merged), 1)
+                if merged else 0.0
+            )
+            sp.set(merged=len(merged), fell_back=len(names) - len(merged))
         for name in names:
             try:
                 if name in merged:
@@ -640,15 +661,17 @@ class ViewManager:
         restores the view and quarantines it."""
         mv = self.views[view_name]
         snap = _view_snapshot(mv)
-        try:
-            dt = self._finish_batched_inner(mv, view_name, rel, dt, retuned)
-        except Exception as e:
-            _restore_view(mv, snap)
-            if self._panel is not None:
-                self._panel.invalidate(view_name)
-            self.health.record_failure(view_name, e)
-            raise
-        self.health.record_success(view_name)
+        with obs_trace.span("clean", view=view_name, batched=True) as sp:
+            try:
+                dt = self._finish_batched_inner(mv, view_name, rel, dt, retuned)
+            except Exception as e:
+                _restore_view(mv, snap)
+                if self._panel is not None:
+                    self._panel.invalidate(view_name)
+                self.health.record_failure(view_name, e)
+                raise
+            self.health.record_success(view_name)
+            sp.set(wall_s=dt, sample_version=mv.sample_version)
         return dt
 
     def _finish_batched_inner(self, mv: ManagedView, view_name: str,
@@ -694,30 +717,32 @@ class ViewManager:
         call leaves nothing pending for the next repeat to fold)."""
         mv = self.views[view_name]
         if not consume:
-            t0 = time.perf_counter()
+            t0 = self.clock()
             scratch = full_maintenance(
                 mv.strategy, mv.view.name, mv.materialized,
                 self._deltas_for(mv), extra_env=self.base,
                 out_capacity=mv.materialized.capacity,
             )
             jnp.asarray(scratch.valid).block_until_ready()
-            return time.perf_counter() - t0
+            return self.clock() - t0
         snap = _view_snapshot(mv)
-        try:
-            dt = self._maintain_inner(mv, view_name)
-        except Exception as e:
-            _restore_view(mv, snap)
-            if self._panel is not None:
-                self._panel.invalidate(view_name)
-            self.health.record_failure(view_name, e)
-            raise
-        self.health.record_success(view_name)
+        with obs_trace.span("maintain", view=view_name) as sp:
+            try:
+                dt = self._maintain_inner(mv, view_name)
+            except Exception as e:
+                _restore_view(mv, snap)
+                if self._panel is not None:
+                    self._panel.invalidate(view_name)
+                self.health.record_failure(view_name, e)
+                raise
+            self.health.record_success(view_name)
+            sp.set(wall_s=dt, sample_version=mv.sample_version)
         return dt
 
     def _maintain_inner(self, mv: ManagedView, view_name: str) -> float:
         lat_s = self._inject_fault("maintain", view_name)
         self._flush_outlier_offers(mv)
-        t0 = time.perf_counter()
+        t0 = self.clock()
         hi = len(self.pending_segments)
         mv.materialized = full_maintenance(
             mv.strategy,
@@ -728,7 +753,7 @@ class ViewManager:
             out_capacity=mv.materialized.capacity,
         )
         jnp.asarray(mv.materialized.valid).block_until_ready()
-        dt = time.perf_counter() - t0 + lat_s
+        dt = self.clock() - t0 + lat_s
         mv.stale_sample = compact(
             hashing.apply_hash(mv.materialized, mv.view.pk, mv.m, mv.seed, pin=mv.outlier_pin),
             mv.sample_capacity,
@@ -841,31 +866,34 @@ class ViewManager:
         if self.cost_model is not None and record_traffic:
             self.cost_model.observe_traffic(view_name, len(queries))
         mv = self.views[view_name]
-        results: List[Optional[Estimate]] = [None] * len(queries)
-        cols = sample_columns(mv.clean_sample)
-        batched = [i for i, q in enumerate(queries) if is_encodable(q, cols)]
-        fast = set(batched)
-        for i, q in enumerate(queries):
-            if i not in fast:
-                results[i] = self._query_fallback(mv, q, confidence, prefer, rng)
-        if batched:
-            batch = QueryBatch.encode([queries[i] for i in batched], cols)
-            if prefer == "aqp":
-                # AQP never needs the stale side: skip the correspondence
-                # join entirely and scan only the clean sample
-                ests = run_batch_aqp(
-                    mv.clean_sample, batch, mv.m, confidence=confidence,
-                    fused=True if fused is None else fused,
-                )
-            else:
-                cache = self._corr_cache(mv)
-                ests = run_batch(
-                    cache, batch, confidence=confidence, prefer=prefer,
-                    materialized=mv.materialized,
-                    fused=True if fused is None else fused,
-                )
-            for i, e in zip(batched, ests):
-                results[i] = e
+        with obs_trace.span("estimate", view=view_name, n=len(queries),
+                            sample_version=mv.sample_version):
+            results: List[Optional[Estimate]] = [None] * len(queries)
+            cols = sample_columns(mv.clean_sample)
+            batched = [i for i, q in enumerate(queries) if is_encodable(q, cols)]
+            fast = set(batched)
+            for i, q in enumerate(queries):
+                if i not in fast:
+                    results[i] = self._query_fallback(mv, q, confidence,
+                                                      prefer, rng)
+            if batched:
+                batch = QueryBatch.encode([queries[i] for i in batched], cols)
+                if prefer == "aqp":
+                    # AQP never needs the stale side: skip the correspondence
+                    # join entirely and scan only the clean sample
+                    ests = run_batch_aqp(
+                        mv.clean_sample, batch, mv.m, confidence=confidence,
+                        fused=True if fused is None else fused,
+                    )
+                else:
+                    cache = self._corr_cache(mv)
+                    ests = run_batch(
+                        cache, batch, confidence=confidence, prefer=prefer,
+                        materialized=mv.materialized,
+                        fused=True if fused is None else fused,
+                    )
+                for i, e in zip(batched, ests):
+                    results[i] = e
         return results
 
     def _corr_cache(self, mv: ManagedView):

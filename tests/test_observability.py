@@ -1,0 +1,352 @@
+"""The staleness observatory: registry, tracer, kernel profiler, and the
+trace-reconciliation contract over real pipeline workloads."""
+
+from __future__ import annotations
+
+import pathlib
+import sys
+
+import numpy as np
+import pytest
+
+from repro.core import Query, ViewDef
+from repro.core.estimators import Estimate
+from repro.obs import export_service_trace, observatory_panel
+from repro.obs import kprof
+from repro.obs import trace as obs_trace
+from repro.obs.reconcile import load_jsonl, reconcile
+from repro.obs.registry import MetricsRegistry, counter_attr
+from repro.obs.trace import NOOP_SPAN, Tracer
+from repro.relational.plan import GroupByNode, Scan
+from repro.relational.relation import from_columns
+from repro.serving.admission import ADMIT, AdmissionConfig, AdmissionController
+from repro.serving.result_cache import ResultCache
+from repro.streaming import StreamConfig, StreamingViewService
+from repro.views import ViewManager
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+
+
+@pytest.fixture(autouse=True)
+def _clean_observability_globals():
+    """Tracer/profiler are process-wide: every test starts and ends bare."""
+    obs_trace.set_tracer(None)
+    kprof.set_profiler(None)
+    yield
+    obs_trace.set_tracer(None)
+    kprof.set_profiler(None)
+
+
+# -- fixtures ----------------------------------------------------------------
+
+def _fleet(n_views=2, n=300, groups=8, seed=3):
+    rng = np.random.default_rng(seed)
+    vm = ViewManager()
+    for i in range(n_views):
+        base = f"Log{i}"
+        vm.register_base(base, from_columns(
+            {
+                "k": np.arange(n, dtype=np.int32),
+                "g": rng.integers(0, groups, n).astype(np.int32),
+                "v": rng.exponential(5.0, n).astype(np.float32),
+            },
+            pk=["k"], capacity=2048,
+        ))
+        plan = GroupByNode(
+            child=Scan(base, pk=("k",)), keys=("g",),
+            aggs=(("total", "sum", "v"), ("cnt", "count", None)),
+            num_groups=2 * groups,
+        )
+        vm.register_view(ViewDef(f"v{i}", plan), delta_bases=(base,), m=0.4,
+                         seed=i, delta_group_capacity=2 * groups)
+    return vm, rng
+
+
+def _delta(start, n, groups, rng):
+    return from_columns(
+        {
+            "k": np.arange(start, start + n, dtype=np.int32),
+            "g": rng.integers(0, groups, n).astype(np.int32),
+            "v": rng.exponential(5.0, n).astype(np.float32),
+        },
+        pk=["k"],
+    )
+
+
+# -- registry ----------------------------------------------------------------
+
+def test_counter_is_monotone():
+    reg = MetricsRegistry()
+    c = reg.counter("stream_refreshes")
+    c.inc()
+    c.inc(3.0)
+    assert c.value == 4.0
+    with pytest.raises(ValueError):
+        c.inc(-1.0)
+
+
+def test_registry_interns_by_name_and_labels():
+    reg = MetricsRegistry()
+    a = reg.counter("admission_verdicts", tenant="t0", verdict="admit")
+    b = reg.counter("admission_verdicts", verdict="admit", tenant="t0")
+    c = reg.counter("admission_verdicts", tenant="t1", verdict="admit")
+    assert a is b and a is not c
+    a.inc(2)
+    c.inc(3)
+    assert reg.total("admission_verdicts") == 5.0
+    snap = reg.snapshot()
+    assert snap["admission_verdicts{tenant=t0,verdict=admit}"] == 2.0
+
+
+def test_registry_rejects_kind_collision():
+    reg = MetricsRegistry()
+    reg.counter("planner_traffic")
+    with pytest.raises(TypeError):
+        reg.gauge("planner_traffic")
+
+
+def test_histogram_streams_moments():
+    reg = MetricsRegistry()
+    h = reg.histogram("planner_refresh_s", view="v0")
+    for v in (0.5, 0.1, 0.9):
+        h.observe(v)
+    assert h.count == 3
+    assert h.min == pytest.approx(0.1) and h.max == pytest.approx(0.9)
+    assert h.mean == pytest.approx(0.5)
+    assert h.last == pytest.approx(0.9)
+
+
+def test_counter_attr_is_bit_compatible_and_monotone():
+    class Thing:
+        hits = counter_attr()
+
+        def __init__(self, reg):
+            self._c_hits = reg.counter("cache_hits")
+
+    reg = MetricsRegistry()
+    t = Thing(reg)
+    assert t.hits == 0 and isinstance(t.hits, int)
+    t.hits += 1
+    t.hits += 2
+    assert t.hits == 3
+    assert reg.counter("cache_hits").value == 3.0
+    with pytest.raises(ValueError):
+        t.hits -= 1  # counters cannot decrease
+
+
+# -- tracer ------------------------------------------------------------------
+
+def test_tracer_nests_spans_and_exports(tmp_path):
+    tr = obs_trace.enable()
+    with obs_trace.span("epoch", epoch=1):
+        with obs_trace.span("drain", base="Log0") as sp:
+            sp.set(rows=7)
+        obs_trace.event("offer", base="Log0", seq=3)
+    path = tmp_path / "t.jsonl"
+    n = tr.export_jsonl(str(path), meta={"extra": 1,
+                                         "pending": {"Log0": [3]}})
+    assert n == 3
+    meta, records = load_jsonl(str(path))
+    assert meta["dropped"] == 0 and meta["extra"] == 1
+    by_name = {r["name"]: r for r in records}
+    epoch, drain, offer = by_name["epoch"], by_name["drain"], by_name["offer"]
+    assert drain["parent"] == epoch["id"]
+    assert offer["parent"] == epoch["id"]
+    assert drain["attrs"] == {"base": "Log0", "rows": 7}
+    assert epoch["t0"] <= drain["t0"] and drain["t1"] <= epoch["t1"]
+    assert not reconcile(meta, records)["problems"]
+
+
+def test_tracer_disabled_is_shared_noop():
+    assert obs_trace.get_tracer() is None
+    sp = obs_trace.span("epoch")
+    assert sp is NOOP_SPAN
+    with sp as inner:
+        inner.set(anything=1)  # never raises, never records
+    obs_trace.event("offer", seq=1)
+
+
+def test_tracer_ring_retention_counts_drops():
+    tr = obs_trace.enable(capacity=4)
+    for i in range(10):
+        obs_trace.event("offer", seq=i)
+    assert len(tr.records) == 4
+    assert tr.dropped == 6
+    assert tr.summary()["dropped"] == 6
+
+
+def test_span_records_exception_and_unwinds():
+    tr = obs_trace.enable()
+    with pytest.raises(RuntimeError):
+        with obs_trace.span("clean", view="v0"):
+            raise RuntimeError("boom")
+    rec = list(tr.records)[-1]
+    assert rec["attrs"]["error"] == "RuntimeError"
+    assert tr.summary()["open_spans"] == 0
+
+
+# -- kernel profiler ---------------------------------------------------------
+
+def test_profiled_tail_calls_without_profiler():
+    assert kprof.get_profiler() is None
+    assert kprof.profiled("fused_clean", lambda a, b: a + b, 2, 3) == 5
+
+
+def test_profiler_splits_compile_and_execute():
+    import jax.numpy as jnp
+
+    prof = kprof.set_profiler(kprof.KernelProfiler())
+    x = jnp.arange(8, dtype=jnp.float32)
+    for _ in range(3):
+        kprof.profiled("fused_clean", lambda a: a * 2, x, rows=6, padded=8)
+    kprof.profiled("fused_clean", lambda a: a, x[:4], fallback=True,
+                   rows=4, padded=4)
+    st = prof.summary()["fused_clean"]
+    assert st["dispatches"] == 4 and st["fallbacks"] == 1
+    assert st["compiles"] == 2  # one per distinct shape key
+    assert st["rows_real"] == 22 and st["rows_padded"] == 28
+    assert st["occupancy"] == pytest.approx(22 / 28)
+
+
+def test_profiler_sees_pipeline_dispatches():
+    prof = kprof.set_profiler(kprof.KernelProfiler())
+    vm, rng = _fleet()
+    vm.ingest("Log0", inserts=_delta(1000, 40, 8, rng))
+    vm.svc_refresh("v0")
+    vm.query_batch("v0", [Query(agg="sum", col="total")])
+    ops = prof.summary()
+    assert "multi_agg" in ops and ops["multi_agg"]["dispatches"] >= 1
+    assert all(st["dispatches"] >= st["compiles"] for st in ops.values())
+
+
+# -- serving-plane counters back onto the registry ---------------------------
+
+def test_result_cache_counters_ride_the_registry():
+    reg = MetricsRegistry()
+    cache = ResultCache(capacity=4, registry=reg)
+    digest = (1, 2)
+    est = Estimate(value=1.0, stderr=0.0, ci_low=1.0, ci_high=1.0,
+                   method="svc+aqp", confidence=0.95)
+    assert cache.get("v0", 1, digest) is None
+    cache.put("v0", 1, digest, est)
+    assert cache.get("v0", 1, digest) is not None
+    assert isinstance(cache.hits, int) and cache.hits == 1
+    assert cache.misses == 1 and cache.puts == 1
+    snap = reg.snapshot()
+    assert snap["cache_hits"] == 1.0 and snap["cache_misses"] == 1.0
+
+
+def test_admission_counters_ride_the_registry():
+    reg = MetricsRegistry()
+    t = [0.0]
+    adm = AdmissionController(
+        AdmissionConfig(tenant_qps=1.0, tenant_burst=2.0,
+                        fleet_qps=100.0, fleet_burst=100.0),
+        clock=lambda: t[0], registry=reg,
+    )
+    verdicts = [adm.decide("t0") for _ in range(5)]
+    assert verdicts.count(ADMIT) == adm.admitted
+    assert adm.admitted + adm.throttled + adm.shed == 5
+    assert reg.total("admission_verdicts") == 5.0
+    assert reg.counter("admission_admitted").value == float(adm.admitted)
+
+
+# -- pipeline workloads ------------------------------------------------------
+
+CUMULATIVE_STALENESS_FIELDS = (
+    "shed_rows", "corrupt_batches", "spills", "deduped_batches",
+    "deduped_rows", "throttled_queries", "shed_queries", "admitted_queries",
+    "cache_hits", "cache_stale_hits", "cache_poison_rejected",
+)
+
+
+def test_staleness_counters_are_monotone_over_workload():
+    vm, rng = _fleet()
+    svc = StreamingViewService(
+        vm, StreamConfig(auto_refresh=False, admission=AdmissionConfig()))
+    vm.stream = svc
+    prev = None
+    for epoch in range(4):
+        svc.offer("Log0", inserts=_delta(1000 + epoch * 30, 30, 8, rng),
+                  seq=epoch, key=f"e{epoch}")
+        svc.offer("Log0", inserts=_delta(1000 + epoch * 30, 30, 8, rng),
+                  seq=epoch, key=f"e{epoch}")  # at-least-once replay
+        svc.refresh()
+        svc.query_batch("v0", [Query(agg="sum", col="total")])
+        st = svc.staleness()
+        cur = {f: getattr(st, f) for f in CUMULATIVE_STALENESS_FIELDS}
+        assert all(isinstance(v, int) and v >= 0 for v in cur.values())
+        if prev is not None:
+            for f in CUMULATIVE_STALENESS_FIELDS:
+                assert cur[f] >= prev[f], f"staleness counter {f} decreased"
+        prev = cur
+    assert prev["deduped_batches"] >= 1  # the replays were absorbed
+    assert prev["admitted_queries"] >= 1
+
+
+def test_serving_soak_admission_ledger_reconciles():
+    """Under the fig_serving_soak quick schedule every query lands in
+    exactly one verdict bucket: admitted + throttled + shed == attempted."""
+    sys.path.insert(0, str(ROOT))
+    try:
+        from benchmarks.fig_planner_fleet import _traffic_weights, epoch_deltas
+        from benchmarks.fig_serving_soak import N_VIEWS, _soak
+    finally:
+        sys.path.pop(0)
+    deltas = epoch_deltas(N_VIEWS, 256, 8, 24, 3)
+    out = _soak(True, 3, 256, 8, deltas, _traffic_weights(N_VIEWS), None)
+    assert out["attempted"] > 0
+    assert out["admitted"] + out["throttled"] + out["shed"] == out["attempted"]
+    assert out["availability"] == 1.0
+
+
+def test_service_trace_exports_and_reconciles(tmp_path):
+    obs_trace.enable()
+    vm, rng = _fleet()
+    svc = StreamingViewService(
+        vm, StreamConfig(auto_refresh=False, admission=AdmissionConfig()))
+    vm.stream = svc
+    for epoch in range(3):
+        svc.offer("Log0", inserts=_delta(1000 + epoch * 30, 30, 8, rng),
+                  seq=epoch)
+        svc.offer("Log1", inserts=_delta(2000 + epoch * 30, 30, 8, rng),
+                  seq=epoch)
+        svc.refresh()
+        svc.query_batch("v0", [Query(agg="sum", col="total")] * 2)
+        svc.query("v1", Query(agg="avg", col="total"))
+    path = tmp_path / "trace.jsonl"
+    export_service_trace(svc, str(path))
+    meta, records = load_jsonl(str(path))
+    result = reconcile(meta, records)
+    assert result["ok"], result["problems"]
+    query_spans = [r for r in records
+                   if r["kind"] == "span" and r["name"] == "query"]
+    assert query_spans
+    assert all("verdict" in r["attrs"] for r in query_spans)
+    assert sum(int(r["attrs"]["n"]) for r in query_spans) == 9
+    # epoch spans parent the per-base drains
+    epochs = {r["id"] for r in records
+              if r["kind"] == "span" and r["name"] == "epoch"}
+    drains = [r for r in records
+              if r["kind"] == "span" and r["name"] == "drain"]
+    assert drains and all(r["parent"] in epochs for r in drains)
+
+
+def test_observatory_panel_reconciles_live():
+    obs_trace.enable()
+    kprof.set_profiler(kprof.KernelProfiler())
+    vm, rng = _fleet()
+    svc = StreamingViewService(
+        vm, StreamConfig(auto_refresh=False, admission=AdmissionConfig()))
+    vm.stream = svc
+    svc.offer("Log0", inserts=_delta(1000, 30, 8, rng), seq=0)
+    svc.refresh()
+    svc.query_batch("v0", [Query(agg="sum", col="total")])
+    panel = observatory_panel(svc)
+    assert set(panel) >= {"metrics", "trace", "kernels", "staleness",
+                          "reconciliation"}
+    assert panel["trace"]["enabled"] and panel["trace"]["records"] > 0
+    assert panel["kernels"]  # at least one profiled dispatch
+    assert panel["reconciliation"]["queries_ok"]
+    assert panel["reconciliation"]["issued"] == 1
+    assert panel["metrics"]["stream_refreshes"] >= 1.0

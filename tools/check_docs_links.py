@@ -3,6 +3,10 @@ resolve.  Scans backtick spans and markdown links for path-shaped
 references (src/..., docs/..., benchmarks/..., examples/..., tests/...,
 tools/..., top-level *.md / *.txt) and fails listing any that don't exist.
 
+Also pins required sections: headings that other docs, CI jobs, or tools
+point readers at (REQUIRED_SECTIONS below) must stay present — renaming
+one silently strands its cross-references.
+
 Run:  python tools/check_docs_links.py
 """
 
@@ -24,6 +28,25 @@ TOPLEVEL = re.compile(r"^[A-Za-z0-9_.-]+\.(md|txt)$")
 
 SPAN = re.compile(r"`([^`]+)`|\]\(([^)#]+)\)")
 
+# doc file -> headings that must exist (matched as a "## " line prefix, so
+# a heading may carry a trailing annotation like a path in backticks).
+REQUIRED_SECTIONS = {
+    "docs/ARCHITECTURE.md": (
+        "## Observability",
+        "## Serving plane",
+        "## Kernels",
+        "## Tests",
+    ),
+    "docs/API.md": (
+        "## Observability",
+        "## Running things",
+    ),
+    "docs/BENCHMARKS.md": (
+        "## The observability-overhead rows",
+        "## The serving-soak rows",
+    ),
+}
+
 
 def candidates(text: str):
     for m in SPAN.finditer(text):
@@ -36,10 +59,19 @@ def candidates(text: str):
             yield ref
 
 
+def missing_sections(rel: str, text: str):
+    lines = text.splitlines()
+    for heading in REQUIRED_SECTIONS.get(rel, ()):
+        if not any(ln == heading or ln.startswith(heading + " ")
+                   for ln in lines):
+            yield f"{rel}: required section {heading!r} not found"
+
+
 def main() -> int:
     missing = []
     for doc in DOC_FILES:
         text = doc.read_text()
+        missing.extend(missing_sections(str(doc.relative_to(ROOT)), text))
         for ref in candidates(text):
             if "*" in ref:  # glob reference: require at least one match
                 if not list(ROOT.glob(ref)):

@@ -1,0 +1,155 @@
+"""Render an exported SVC trace as a text flamegraph + staleness timeline.
+
+Input is the JSONL file ``repro.obs.export_service_trace`` (or
+``Tracer.export_jsonl``) writes: one meta header line carrying the
+metrics snapshot and harness end-state, then one line per span/event.
+
+The report has three parts:
+
+  * **flamegraph** — spans aggregated by their name-path from the root
+    (``epoch/drain``, ``query/cache``, ...): call count, total wall,
+    self wall (total minus child spans), and a width-proportional bar.
+  * **staleness timeline** — per view, the chronological clean /
+    maintain / quarantine / recover record with sample versions, so a
+    view's freshness history reads top to bottom.
+  * **reconciliation** — ``repro.obs.reconcile``'s full cross-check of
+    the trace against the pipeline's own counters (batch, verdict, span,
+    and fault accounting).
+
+Run:  PYTHONPATH=src python tools/trace_report.py TRACE.jsonl [--strict]
+
+``--strict`` exits nonzero when any reconciliation check fails (the CI
+chaos job runs this over a ``fig_chaos_soak`` quick trace).
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+from typing import Dict, List, Tuple
+
+BAR_WIDTH = 40
+
+
+def _name_paths(records: List[Dict]) -> Dict[int, Tuple[str, ...]]:
+    """Span id → name path from its root (('epoch', 'drain'), ...)."""
+    spans = {r["id"]: r for r in records if r["kind"] == "span"}
+    paths: Dict[int, Tuple[str, ...]] = {}
+
+    def path(sid: int) -> Tuple[str, ...]:
+        if sid in paths:
+            return paths[sid]
+        r = spans[sid]
+        pid = r.get("parent")
+        p = (path(pid) if pid in spans else ()) + (r["name"],)
+        paths[sid] = p
+        return p
+
+    for sid in spans:
+        path(sid)
+    return paths
+
+
+def flamegraph(records: List[Dict]) -> List[str]:
+    spans = [r for r in records if r["kind"] == "span"]
+    if not spans:
+        return ["  (no spans)"]
+    paths = _name_paths(records)
+    # aggregate per name-path: count, total wall, child wall (for self time)
+    agg: Dict[Tuple[str, ...], List[float]] = {}
+    for r in spans:
+        p = paths[r["id"]]
+        row = agg.setdefault(p, [0, 0.0, 0.0])
+        row[0] += 1
+        row[1] += r["dur_s"]
+        if len(p) > 1:
+            agg.setdefault(p[:-1], [0, 0.0, 0.0])[2] += r["dur_s"]
+    total = sum(v[1] for p, v in agg.items() if len(p) == 1) or 1e-12
+    lines = []
+    for p in sorted(agg, key=lambda p: (p[:1], -agg[p[:1]][1] if p[:1] in agg
+                                        else 0.0, p)):
+        count, wall, child = agg[p]
+        self_s = max(wall - child, 0.0)
+        bar = "#" * max(1, round(BAR_WIDTH * wall / total))
+        indent = "  " * (len(p) - 1)
+        lines.append(
+            f"  {indent}{p[-1]:<{24 - 2 * (len(p) - 1)}} "
+            f"x{count:<5d} {wall:9.4f}s  self {self_s:9.4f}s  {bar}"
+        )
+    return lines
+
+
+def timeline(records: List[Dict]) -> List[str]:
+    """Per-view chronological freshness record."""
+    rows: Dict[str, List[Tuple[float, str]]] = {}
+    t_min = min((r["t0"] for r in records), default=0.0)
+    for r in records:
+        a = r.get("attrs", {})
+        view = a.get("view")
+        if view is None:
+            continue
+        t = r["t0"] - t_min
+        if r["kind"] == "span" and r["name"] == "clean":
+            ver = a.get("sample_version")
+            tag = "clean(batched)" if a.get("batched") else "clean"
+            note = f" -> v{ver}" if ver is not None else ""
+            if a.get("error"):
+                tag, note = "clean FAILED", f" [{a['error']}]"
+            rows.setdefault(view, []).append((t, f"{tag}{note}"))
+        elif r["kind"] == "span" and r["name"] == "maintain":
+            tag = "maintain FAILED" if a.get("error") else "maintain"
+            rows.setdefault(view, []).append((t, tag))
+        elif r["kind"] == "event" and r["name"] == "quarantine":
+            rows.setdefault(view, []).append(
+                (t, f"QUARANTINE #{a.get('consecutive', '?')} "
+                    f"({a.get('error', '')})"))
+        elif r["kind"] == "event" and r["name"] == "recover":
+            rows.setdefault(view, []).append((t, "recovered"))
+    if not rows:
+        return ["  (no per-view records)"]
+    lines = []
+    for view in sorted(rows):
+        lines.append(f"  {view}:")
+        for t, what in sorted(rows[view]):
+            lines.append(f"    +{t:8.4f}s  {what}")
+    return lines
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("trace", help="JSONL trace file")
+    ap.add_argument("--strict", action="store_true",
+                    help="exit nonzero unless the trace reconciles exactly")
+    args = ap.parse_args(argv)
+
+    from repro.obs.reconcile import load_jsonl, reconcile
+
+    meta, records = load_jsonl(args.trace)
+    spans = sum(1 for r in records if r["kind"] == "span")
+    events = len(records) - spans
+    print(f"trace: {args.trace}")
+    print(f"  records: {len(records)} ({spans} spans, {events} events), "
+          f"dropped: {meta.get('dropped', 0)}")
+
+    print("\nflamegraph (wall time by span path):")
+    for line in flamegraph(records):
+        print(line)
+
+    print("\nstaleness timeline (per view):")
+    for line in timeline(records):
+        print(line)
+
+    result = reconcile(meta, records)
+    print("\nreconciliation:")
+    for check, n in result.get("checks", {}).items():
+        print(f"  {check:<12} {'OK' if not n else f'{n} problem(s)'}")
+    for p in result["problems"]:
+        print(f"  !! {p}")
+    if result["ok"]:
+        print("  trace reconciles exactly")
+        return 0
+    return 1 if args.strict else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
