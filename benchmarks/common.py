@@ -7,6 +7,10 @@ Every ``fig*.py`` module exposes ``run(quick: bool) -> list[Row]``; rows are
 from __future__ import annotations
 
 import dataclasses
+import os
+import pathlib
+import subprocess
+import sys
 import time
 from typing import Callable, Dict, List, Optional, Tuple
 
@@ -33,6 +37,28 @@ class Row:
 
     def csv(self) -> str:
         return f"{self.name},{self.us_per_call:.1f},{self.derived}"
+
+
+def run_forced_device_child(code: str, device_count: int,
+                            timeout: int = 900) -> subprocess.CompletedProcess:
+    """Run ``code`` in a child interpreter with ``device_count`` placeholder
+    XLA host devices (the multi-device benchmarks can't set the flag in
+    THIS process — jax locks its device count at first init).
+
+    The child environment is derived, not replaced: any existing
+    ``XLA_FLAGS`` tokens are kept (only a previous device-count force is
+    replaced with ours), and the repo's ``src`` is PREPENDED to whatever
+    ``PYTHONPATH`` the user already exported."""
+    env = dict(os.environ)
+    flags = [t for t in env.get("XLA_FLAGS", "").split()
+             if not t.startswith("--xla_force_host_platform_device_count")]
+    flags.append(f"--xla_force_host_platform_device_count={int(device_count)}")
+    env["XLA_FLAGS"] = " ".join(flags)
+    src = str(pathlib.Path(__file__).resolve().parent.parent / "src")
+    prev = env.get("PYTHONPATH", "")
+    env["PYTHONPATH"] = src + (os.pathsep + prev if prev else "")
+    return subprocess.run([sys.executable, "-c", code], capture_output=True,
+                          text=True, env=env, timeout=timeout)
 
 
 def timeit(fn: Callable, repeats: int = 3, warmup: int = 1) -> float:

@@ -1,1 +1,22 @@
-"""Distribution: sharding rules, fault tolerance, gradient compression."""
+"""Distribution: sharded fleet execution, fault tolerance, sharding rules.
+
+``fleet.ShardedFleet`` is the scale-out epoch path (views sharded across a
+mesh axis, one psum-closed global plan per epoch); ``ft.FleetMonitor`` is
+the liveness registry it wires into the mesh plan.
+"""
+
+from repro.distributed.fleet import (
+    FleetPlanReport,
+    ShardedAction,
+    ShardedFleet,
+    ShardLostError,
+)
+from repro.distributed.ft import FleetMonitor
+
+__all__ = [
+    "FleetMonitor",
+    "FleetPlanReport",
+    "ShardedAction",
+    "ShardedFleet",
+    "ShardLostError",
+]

@@ -9,7 +9,7 @@ lane axis in the Pallas kernel; the XLA path compiles the same one-pass
 reference math off-TPU.
 """
 
-from repro.kernels.fleet_score.ops import fleet_scores
+from repro.kernels.fleet_score.ops import fleet_scores, fleet_scores_sharded
 from repro.kernels.fleet_score.ref import (
     A_CLEAN,
     A_MAINTAIN,
@@ -69,4 +69,5 @@ __all__ = [
     "REC_M",
     "fleet_score_ref",
     "fleet_scores",
+    "fleet_scores_sharded",
 ]

@@ -49,3 +49,65 @@ def fleet_scores(features, use_pallas: Optional[bool] = None) -> jnp.ndarray:
     out = profiled("fleet_score", fleet_score_tiles, panel,
                    rows=V, padded=Vp, interpret=INTERPRET)
     return out[:N_SCORES, :V].T
+
+
+_sharded_cache = {}
+
+
+def _make_sharded_score(mesh, axis: str):
+    """One shard_map program: each shard scores ITS (1, Vmax, F) slice
+    locally, then one all_gather closes the global (S, Vmax, N_SCORES)
+    panel — the only cross-shard traffic is the scored decision panel,
+    never the raw features' provenance (rows stay put, §7.5)."""
+    from jax.sharding import PartitionSpec as P
+
+    from repro.compat import shard_map
+
+    def per_shard(feats):  # (1, Vmax, F) local slice
+        scores = fleet_score_ref(feats[0])
+        return jax.lax.all_gather(scores, axis)
+
+    return jax.jit(shard_map(
+        per_shard, mesh,
+        in_specs=(P(axis),),
+        out_specs=P(),
+    ))
+
+
+def fleet_scores_sharded(stacked, mesh=None, axis: str = "data",
+                         shard_views=None) -> jnp.ndarray:
+    """(S, Vmax, N_FEATURES) per-shard feature panels → (S, Vmax, N_SCORES).
+
+    With a mesh whose ``axis`` size equals S, each device scores its own
+    shard's panel in place and a single all_gather returns the global
+    score panel to every shard (the psum-closed planner input).  Without a
+    mesh (host fallback — e.g. a single-device test process) the same
+    math runs as one vmapped reference call; ``fleet_score_ref`` is
+    elementwise per view, so both paths are bit-equal.
+
+    ``shard_views`` (optional per-shard real view counts) feeds the
+    profiler's per-shard occupancy ledger; padded lanes carry all-zero
+    features and score 0.
+    """
+    feats = jnp.asarray(stacked, jnp.float32)
+    if feats.ndim != 3 or feats.shape[2] != N_FEATURES:
+        raise ValueError(
+            f"expected (S, Vmax, {N_FEATURES}) stacked features, got "
+            f"{feats.shape}")
+    S, Vmax = feats.shape[0], feats.shape[1]
+    rows = [int(v) for v in shard_views] if shard_views is not None \
+        else [Vmax] * S
+    prof = dict(shards=list(range(S)), shard_rows=rows,
+                shard_padded=[Vmax] * S,
+                rows=sum(rows), padded=S * Vmax)
+    if mesh is not None and mesh.shape.get(axis, 1) == S and S > 1:
+        key = (id(mesh), axis)
+        fn = _sharded_cache.get(key)
+        if fn is None:
+            fn = _sharded_cache[key] = _make_sharded_score(mesh, axis)
+        return profiled("fleet_score_sharded", fn, feats, **prof)
+    return profiled("fleet_score_sharded", _sharded_ref_jit, feats,
+                    fallback=True, **prof)
+
+
+_sharded_ref_jit = jax.jit(jax.vmap(fleet_score_ref))

@@ -18,6 +18,12 @@ is unmeasurable next to the jit call it wraps.  With a profiler installed
   * **padded-vs-real row occupancy** — wrappers pad to block multiples
     (BLOCK_R rows, BLOCK_V views); the real/padded ratio is the fraction
     of the dispatch that was useful work.
+  * **per-shard attribution** — a shard-mapped fleet dispatch is ONE call
+    at the call site but S shards of work on the mesh.  The dispatcher
+    passes ``shards=[...]`` + per-shard row splits (fan-out), or wraps a
+    shard's host-side act loop in ``shard_scope(s)`` (ambient), and the
+    profiler keeps a parallel per-shard ledger whose counter sums must
+    equal the fleet totals (``obs.reconcile.check_shard_accounting``).
 
 ``repro.kernels`` re-exports ``set_profiler``/``get_profiler`` as the
 public toggle, mirroring its ``enable()``/``disable()`` Pallas switch.
@@ -25,8 +31,9 @@ public toggle, mirroring its ``enable()``/``disable()`` Pallas switch.
 
 from __future__ import annotations
 
+import contextlib
 import time
-from typing import Callable, Dict, Optional, Set, Tuple
+from typing import Callable, Dict, Optional, Sequence, Set, Tuple
 
 
 class OpStats:
@@ -69,12 +76,32 @@ class KernelProfiler:
         self._clock = clock
         self.ops: Dict[str, OpStats] = {}
         self._seen: Set[Tuple[str, Tuple]] = set()
+        # per-shard ledger: only dispatches that carried shard attribution
+        # (explicit ``shards=`` fan-out or an ambient shard_scope) land
+        # here, mirrored by ``fleet_ops`` at the op level so the two sides
+        # reconcile exactly (check_shard_accounting)
+        self.shard_ops: Dict[Tuple[str, int], OpStats] = {}
+        self.fleet_ops: Dict[str, OpStats] = {}
 
     def _stat(self, op: str) -> OpStats:
         st = self.ops.get(op)
         if st is None:
             st = OpStats()
             self.ops[op] = st
+        return st
+
+    def _shard_stat(self, op: str, shard: int) -> OpStats:
+        st = self.shard_ops.get((op, shard))
+        if st is None:
+            st = OpStats()
+            self.shard_ops[(op, shard)] = st
+        return st
+
+    def _fleet_stat(self, op: str) -> OpStats:
+        st = self.fleet_ops.get(op)
+        if st is None:
+            st = OpStats()
+            self.fleet_ops[op] = st
         return st
 
     @staticmethod
@@ -91,10 +118,20 @@ class KernelProfiler:
 
     def call(self, op: str, fn: Callable, *args, fallback: bool = False,
              rows: Optional[int] = None, padded: Optional[int] = None,
+             shards: Optional[Sequence[int]] = None,
+             shard_rows: Optional[Sequence[int]] = None,
+             shard_padded: Optional[Sequence[int]] = None,
              **kwargs):
         """Run ``fn(*args, **kwargs)`` under the profile: times the call
         (blocked to completion), classifies it compile vs execute by shape
-        novelty, and accrues occupancy."""
+        novelty, and accrues occupancy.
+
+        ``shards`` fans ONE dispatch out across mesh shards: per-shard
+        dispatch/occupancy counters accrue from ``shard_rows`` /
+        ``shard_padded`` (wall time splits evenly — the shard programs run
+        concurrently on the mesh, so per-shard wall is not separable).
+        Without ``shards``, an ambient ``shard_scope`` attributes the whole
+        dispatch to the scoped shard."""
         import jax
 
         st = self._stat(op)
@@ -116,13 +153,74 @@ class KernelProfiler:
             st.compile_s += dt
         else:
             st.execute_s += dt
+        self._attribute(op, shards, shard_rows, shard_padded, rows, padded,
+                        dt, first, fallback)
         return out
+
+    def _attribute(self, op: str, shards, shard_rows, shard_padded,
+                   rows, padded, dt: float, first: bool,
+                   fallback: bool) -> None:
+        """Mirror one dispatch into the per-shard + fleet ledgers."""
+        if shards is None:
+            ambient = _SHARD_SCOPE
+            if ambient is None:
+                return
+            shards = (ambient,)
+            shard_rows = (rows,) if rows is not None else None
+            shard_padded = (padded,) if padded is not None else None
+        shards = list(shards)
+        if not shards:
+            return
+        fl = self._fleet_stat(op)
+        fl.dispatches += 1
+        if fallback:
+            fl.fallbacks += 1
+        if first:
+            fl.compiles += 1
+            fl.compile_s += dt
+        else:
+            fl.execute_s += dt
+        if rows is not None:
+            fl.rows_real += int(rows)
+            fl.rows_padded += int(padded if padded is not None else rows)
+        share = dt / len(shards)
+        for i, shard in enumerate(shards):
+            ss = self._shard_stat(op, int(shard))
+            ss.dispatches += 1
+            if fallback:
+                ss.fallbacks += 1
+            if first:
+                ss.compiles += 1
+                ss.compile_s += share
+            else:
+                ss.execute_s += share
+            if shard_rows is not None and shard_rows[i] is not None:
+                sr = int(shard_rows[i])
+                sp = int(shard_padded[i]) if (
+                    shard_padded is not None and shard_padded[i] is not None
+                ) else sr
+                ss.rows_real += sr
+                ss.rows_padded += sp
 
     def summary(self) -> Dict[str, Dict]:
         return {op: st.to_dict() for op, st in sorted(self.ops.items())}
 
+    def shard_summary(self) -> Dict[str, Dict]:
+        """The per-shard ledger and its op-level fleet mirror:
+        ``{"fleet": {op: stats}, "shards": {op: {shard: stats}}}`` —
+        exactly what ``obs.reconcile.check_shard_accounting`` consumes."""
+        shards: Dict[str, Dict[int, Dict]] = {}
+        for (op, shard), st in sorted(self.shard_ops.items()):
+            shards.setdefault(op, {})[shard] = st.to_dict()
+        return {
+            "fleet": {op: st.to_dict()
+                      for op, st in sorted(self.fleet_ops.items())},
+            "shards": shards,
+        }
+
 
 _PROFILER: Optional[KernelProfiler] = None
+_SHARD_SCOPE: Optional[int] = None
 
 
 def get_profiler() -> Optional[KernelProfiler]:
@@ -135,8 +233,31 @@ def set_profiler(profiler: Optional[KernelProfiler]) -> Optional[KernelProfiler]
     return profiler
 
 
+@contextlib.contextmanager
+def shard_scope(shard: Optional[int]):
+    """Ambient per-shard attribution: every profiled dispatch inside the
+    scope lands in the installed profiler's shard ledger under ``shard``
+    (the sharded fleet wraps each shard's host-side act loop in this, so
+    kernel dispatches need no threading of shard ids through ops.py).
+    Scopes nest; ``None`` clears attribution inside an outer scope."""
+    global _SHARD_SCOPE
+    prev = _SHARD_SCOPE
+    _SHARD_SCOPE = shard if shard is None else int(shard)
+    try:
+        yield
+    finally:
+        _SHARD_SCOPE = prev
+
+
+def current_shard() -> Optional[int]:
+    return _SHARD_SCOPE
+
+
 def profiled(op: str, fn: Callable, *args, fallback: bool = False,
              rows: Optional[int] = None, padded: Optional[int] = None,
+             shards: Optional[Sequence[int]] = None,
+             shard_rows: Optional[Sequence[int]] = None,
+             shard_padded: Optional[Sequence[int]] = None,
              **kwargs):
     """The ops.py dispatch hook: tail-calls ``fn`` when no profiler is
     installed, else records the dispatch through it."""
@@ -144,4 +265,5 @@ def profiled(op: str, fn: Callable, *args, fallback: bool = False,
     if prof is None:
         return fn(*args, **kwargs)
     return prof.call(op, fn, *args, fallback=fallback, rows=rows,
-                     padded=padded, **kwargs)
+                     padded=padded, shards=shards, shard_rows=shard_rows,
+                     shard_padded=shard_padded, **kwargs)

@@ -20,6 +20,11 @@ event is accounted for:
   * **fault/quarantine accounting** — the trace carries exactly as many
     ``fault`` / ``quarantine`` events as the FaultPlan injection log and
     FleetHealth failure counters recorded.
+  * **shard accounting** — per op, the kernel profiler's per-shard
+    counter sums (rows, wall) equal the fleet totals of the
+    shard-attributed dispatches: a shard-mapped dispatch counted once at
+    the call site must fan out to per-shard ledgers that cover exactly
+    its row count, no more and no less.
 
 Each check returns a list of problem strings (empty = reconciled); the
 ``reconcile`` driver aggregates them for ``tools/trace_report.py --strict``
@@ -220,8 +225,56 @@ def check_fault_accounting(records: List[Dict], meta: Dict) -> List[str]:
     return problems
 
 
-def reconcile(meta: Dict, records: List[Dict]) -> Dict:
-    """Run every check; ``ok`` iff the trace reconciles exactly."""
+SHARD_WALL_REL_TOL = 1e-6  # even wall split must re-sum exactly (float eps)
+
+
+def check_shard_accounting(shard_summary: Dict) -> List[str]:
+    """Per-shard kprof ledger vs its fleet mirror (KernelProfiler.
+    shard_summary()): for every op with shard-attributed dispatches, the
+    per-shard row and wall sums must equal the fleet totals, and neither
+    side may carry an op the other lacks."""
+    problems: List[str] = []
+    fleet = shard_summary.get("fleet", {})
+    shards = shard_summary.get("shards", {})
+    for op in sorted(set(fleet) | set(shards)):
+        fl = fleet.get(op)
+        per = shards.get(op)
+        if fl is None:
+            problems.append(f"op {op!r}: shard entries with no fleet total")
+            continue
+        if per is None:
+            problems.append(f"op {op!r}: fleet total with no shard entries")
+            continue
+        for field in ("rows_real", "rows_padded"):
+            got = sum(s[field] for s in per.values())
+            want = fl[field]
+            if got != want:
+                problems.append(
+                    f"op {op!r}: Σ shard {field} = {got} but fleet total is "
+                    f"{want}"
+                )
+        got_wall = sum(s["compile_s"] + s["execute_s"] for s in per.values())
+        want_wall = fl["compile_s"] + fl["execute_s"]
+        tol = max(SHARD_WALL_REL_TOL * max(got_wall, want_wall), 1e-9)
+        if abs(got_wall - want_wall) > tol:
+            problems.append(
+                f"op {op!r}: Σ shard wall {got_wall:.6f}s vs fleet "
+                f"{want_wall:.6f}s exceeds tolerance"
+            )
+        if sum(s["dispatches"] for s in per.values()) < fl["dispatches"]:
+            problems.append(
+                f"op {op!r}: fewer shard dispatches than fleet dispatches"
+            )
+    return problems
+
+
+def reconcile(meta: Dict, records: List[Dict],
+              shard_summary: Optional[Dict] = None) -> Dict:
+    """Run every check; ``ok`` iff the trace reconciles exactly.
+
+    ``shard_summary`` (KernelProfiler.shard_summary(), when a profiler ran
+    alongside the trace) additionally cross-checks the per-shard kernel
+    ledger against its fleet mirror."""
     if meta.get("dropped", 0):
         # an evicted record can no longer be accounted for — say so rather
         # than reporting spurious coverage gaps
@@ -235,6 +288,8 @@ def reconcile(meta: Dict, records: List[Dict]) -> Dict:
         "act_spans": check_span_accounting(records),
         "faults": check_fault_accounting(records, meta),
     }
+    if shard_summary is not None:
+        checks["shards"] = check_shard_accounting(shard_summary)
     problems = [p for ps in checks.values() for p in ps]
     return {
         "ok": not problems,

@@ -40,6 +40,30 @@ from repro.planner.score import FleetScores, score_fleet
 COST_FIT_EPS = 1e-9  # float slack when charging predicted costs
 
 
+def greedy_knapsack(cands, remaining: float,
+                    chosen: Dict[str, "PlannedAction"]) -> float:
+    """The planner's greedy fill: walk ``(score, view, action, cost)``
+    candidates sorted by (-score, view, action) — the deterministic
+    tie-break that keeps plans reproducible — charging each chosen action
+    against ``remaining``.  Mutates ``chosen`` in place (one action per
+    view; pre-seeded entries, e.g. the starvation guard's forced
+    maintains, are respected) and returns the budget left.
+
+    Shared verbatim by ``MaintenancePlanner.plan`` (one device) and
+    ``distributed.fleet.ShardedFleet`` (the psum-closed global plan), so a
+    sharded fleet fed the same candidate set makes bit-identical choices."""
+    cands = sorted(cands, key=lambda c: (-c[0], c[1], c[2]))
+    for score, name, action, cost in cands:
+        if score <= 0.0 or name in chosen:
+            continue
+        if cost <= remaining + COST_FIT_EPS:
+            chosen[name] = PlannedAction(
+                view=name, action=action, score=score, predicted_s=cost
+            )
+            remaining -= cost
+    return remaining
+
+
 @dataclasses.dataclass
 class PlannedAction:
     view: str
@@ -193,15 +217,7 @@ class MaintenancePlanner:
                 cands.append((float(fs.scores[i, A_CLEAN]), name, "clean",
                               st.refresh_s))
             cands.append((float(fs.scores[i, A_MAINTAIN]), name, "maintain", st.maintain_s))
-        cands.sort(key=lambda c: (-c[0], c[1], c[2]))
-        for score, name, action, cost in cands:
-            if score <= 0.0 or name in chosen:
-                continue
-            if cost <= remaining + COST_FIT_EPS:
-                chosen[name] = PlannedAction(
-                    view=name, action=action, score=score, predicted_s=cost
-                )
-                remaining -= cost
+        remaining = greedy_knapsack(cands, remaining, chosen)
 
         actions = [chosen[n] for n in fs.names if n in chosen]
         for act in actions:

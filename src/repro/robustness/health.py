@@ -41,6 +41,7 @@ class ViewHealth:
     last_error: str = ""
     last_failure_epoch: int = -1
     recovered_epoch: int = -1  # epoch of the last quarantine-clearing success
+    suspended: bool = False  # host-level quarantine (shard lost, not view bug)
 
 
 class FleetHealth:
@@ -111,9 +112,35 @@ class FleetHealth:
             h.recovered_epoch = self.epoch
             trace.event("recover", view=name, epoch=self.epoch)
         h.degraded = False
+        h.suspended = False
         h.consecutive = 0
         h.retries_left = self.max_retries
         h.backoff_until_epoch = 0
+        return h
+
+    def suspend(self, name: str, reason: object) -> ViewHealth:
+        """Host-level quarantine: the view's owning shard dropped out of the
+        mesh (dead or straggling), so the view serves stale until the shard
+        is back — no retry backoff, since the view itself did nothing wrong.
+        Accounted exactly like a failure (one quarantine event, failures+=1)
+        so the trace reconciliation stays a single invariant."""
+        h = self._h(name)
+        h.degraded = True
+        h.suspended = True
+        h.failures += 1
+        h.last_error = f"{type(reason).__name__}: {reason}" if isinstance(
+            reason, BaseException) else str(reason)
+        h.last_failure_epoch = self.epoch
+        trace.event("quarantine", view=name, error=h.last_error,
+                    epoch=self.epoch, consecutive=h.consecutive)
+        return h
+
+    def resume(self, name: str) -> ViewHealth:
+        """The owning shard rejoined the mesh: lift the suspension.  The view
+        stays degraded (serve-stale) until its next successful clean or
+        maintain proves it fresh — resume only re-admits it to planning."""
+        h = self._h(name)
+        h.suspended = False
         return h
 
     # -- queries -------------------------------------------------------------
@@ -127,6 +154,8 @@ class FleetHealth:
         h = self.views.get(name)
         if h is None or not h.degraded:
             return False
+        if h.suspended:
+            return True  # shard gone: nothing to retry until resume()
         if h.retries_left <= 0 and h.consecutive >= self.max_retries:
             return True  # budget exhausted: permanent serve-stale until reset
         return self.epoch < h.backoff_until_epoch

@@ -446,7 +446,14 @@ def _coalesce_signed(
 
 class PartitionedDeltaLog:
     """§7.5: one DeltaLog per data shard; drained per-partition and merged
-    by the sharded (psum) delta aggregation rather than by row shuffling."""
+    by the sharded (psum) delta aggregation rather than by row shuffling.
+
+    Every single-log robustness contract holds PER PARTITION: offer keys
+    dedupe within their partition, ``requeue`` rolls one partition's failed
+    drain back bit-equally, ``shed_oldest``/``spill`` account their loss in
+    that partition's own counters.  The sharded fleet drains only the
+    partitions whose owning shard is alive — a lost shard's partition keeps
+    queueing until the shard rejoins and its drain catches up."""
 
     def __init__(self, base: str, n_shards: int, max_batches: int = 64,
                  clock: Callable[[], float] = time.monotonic,
@@ -458,6 +465,13 @@ class PartitionedDeltaLog:
             for i in range(n_shards)
         ]
 
+    @property
+    def n_shards(self) -> int:
+        return len(self.shards)
+
+    def __getitem__(self, shard: int) -> DeltaLog:
+        return self.shards[shard]
+
     def offer(self, shard: int, inserts: Optional[Relation] = None,
               deletes: Optional[Relation] = None, seq: Optional[int] = None,
               key: Optional[Hashable] = None):
@@ -467,5 +481,29 @@ class PartitionedDeltaLog:
     def pending_rows(self) -> int:
         return sum(s.pending_rows() for s in self.shards)
 
+    def pending_batches(self) -> int:
+        return sum(s.pending_batches() for s in self.shards)
+
+    def pending_seqs(self) -> List[List[int]]:
+        """Per-partition seq lists (reconciliation end-state, shard-keyed)."""
+        return [s.pending_seqs() for s in self.shards]
+
     def drain(self) -> List[Tuple[Optional[Relation], Optional[Relation]]]:
         return [s.drain() for s in self.shards]
+
+    def drain_shard(self, shard: int
+                    ) -> Tuple[Optional[Relation], Optional[Relation]]:
+        """Drain ONE partition (the fleet epoch path: live owners only)."""
+        return self.shards[shard].drain()
+
+    def requeue(self, shard: int, inserts: Optional[Relation],
+                deletes: Optional[Relation]) -> None:
+        """Roll one partition's failed drain back (same bit-equality
+        contract as the single log: next drain_shard re-drains it)."""
+        self.shards[shard].requeue(inserts, deletes)
+
+    def shed_oldest(self, shard: int, n: int = 1) -> int:
+        return self.shards[shard].shed_oldest(n)
+
+    def spill(self, shard: int) -> int:
+        return self.shards[shard].spill()

@@ -140,6 +140,10 @@ class ViewManager:
         # chaos-test injection point (robustness.faults.FaultPlan.attach);
         # None in production — the hooks below are single attribute checks
         self.fault_plan = None
+        # extra attributes stamped onto every span this manager opens (the
+        # sharded fleet sets {"shard": s} so the observatory can slice one
+        # trace per mesh shard); empty in the single-device fleet
+        self.obs_attrs: Dict[str, object] = {}
         self._c_fleet_merge_failures = self.metrics.counter(
             "fleet_merge_failures"
         )
@@ -404,7 +408,7 @@ class ViewManager:
         pending), bit-equal to a run that never failed."""
         mv = self.views[view_name]
         snap = _view_snapshot(mv)
-        with obs_trace.span("clean", view=view_name) as sp:
+        with obs_trace.span("clean", view=view_name, **self.obs_attrs) as sp:
             try:
                 dt = self._svc_refresh_inner(
                     mv, view_name, fused, _precomputed, _extra_s, _retuned
@@ -608,7 +612,8 @@ class ViewManager:
                     out_capacity=mv.sample_capacity,
                 ))
         merged, precomputed = {}, {}
-        with obs_trace.span("merge", jobs=len(jobs)) as sp:
+        with obs_trace.span("merge", jobs=len(jobs),
+                            **self.obs_attrs) as sp:
             t0 = self.clock()
             if jobs:
                 try:
@@ -661,7 +666,8 @@ class ViewManager:
         restores the view and quarantines it."""
         mv = self.views[view_name]
         snap = _view_snapshot(mv)
-        with obs_trace.span("clean", view=view_name, batched=True) as sp:
+        with obs_trace.span("clean", view=view_name, batched=True,
+                            **self.obs_attrs) as sp:
             try:
                 dt = self._finish_batched_inner(mv, view_name, rel, dt, retuned)
             except Exception as e:
@@ -726,7 +732,8 @@ class ViewManager:
             jnp.asarray(scratch.valid).block_until_ready()
             return self.clock() - t0
         snap = _view_snapshot(mv)
-        with obs_trace.span("maintain", view=view_name) as sp:
+        with obs_trace.span("maintain", view=view_name,
+                            **self.obs_attrs) as sp:
             try:
                 dt = self._maintain_inner(mv, view_name)
             except Exception as e:
@@ -867,7 +874,8 @@ class ViewManager:
             self.cost_model.observe_traffic(view_name, len(queries))
         mv = self.views[view_name]
         with obs_trace.span("estimate", view=view_name, n=len(queries),
-                            sample_version=mv.sample_version):
+                            sample_version=mv.sample_version,
+                            **self.obs_attrs):
             results: List[Optional[Estimate]] = [None] * len(queries)
             cols = sample_columns(mv.clean_sample)
             batched = [i for i, q in enumerate(queries) if is_encodable(q, cols)]

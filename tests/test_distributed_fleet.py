@@ -1,0 +1,384 @@
+"""Sharded fleet execution: partitioned ingest invariants, the psum-closed
+global planner's parity with the single-device planner, and the shard-loss
+degradation contract."""
+
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+from repro.core import Query, ViewDef
+from repro.distributed import ShardedFleet
+from repro.kernels.fleet_score import N_FEATURES, fleet_scores, fleet_scores_sharded
+from repro.obs import trace as obs_trace
+from repro.planner.scheduler import MaintenancePlanner, greedy_knapsack
+from repro.relational.plan import GroupByNode, Scan
+from repro.relational.relation import from_columns, to_host
+from repro.streaming import PartitionedDeltaLog
+from repro.views import ViewManager
+
+
+class FakeClock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+
+def _rel(pks, vals):
+    return from_columns(
+        {"k": np.asarray(pks, np.int32), "v": np.asarray(vals, np.float32)},
+        pk=["k"],
+    )
+
+
+def _rows(rel):
+    if rel is None:
+        return {}
+    h = to_host(rel)
+    return dict(zip(h["k"].tolist(), h["v"].tolist()))
+
+
+# ---------------------------------------------------------------------------
+# PartitionedDeltaLog: the single-log contracts hold PER PARTITION
+# ---------------------------------------------------------------------------
+
+def test_partitioned_requeue_rolls_back_one_partition_bit_equal():
+    plog = PartitionedDeltaLog("Log", n_shards=2)
+    plog.offer(0, inserts=_rel([1, 2], [10.0, 20.0]), seq=0)
+    plog.offer(0, inserts=_rel([2], [21.0]), seq=1)
+    plog.offer(1, inserts=_rel([7], [70.0]), seq=0)
+
+    ins, dels = plog.drain_shard(0)
+    first = _rows(ins)
+    assert first == {1: 10.0, 2: 21.0}  # coalesced, newest wins
+    assert plog[0].drained_through_seq == 1
+
+    # the apply failed: give the window back and re-drain bit-equally
+    plog.requeue(0, ins, dels)
+    assert plog[0].drained_through_seq == -1
+    assert plog[0].requeues == 1
+    ins2, _ = plog.drain_shard(0)
+    assert _rows(ins2) == first
+    assert plog[0].drained_through_seq == 1
+    # the sibling partition never moved
+    assert plog[1].pending_batches() == 1
+    assert _rows(plog.drain_shard(1)[0]) == {7: 70.0}
+
+
+def test_partitioned_offer_keys_dedupe_within_their_partition():
+    plog = PartitionedDeltaLog("Log", n_shards=2)
+    assert plog.offer(0, inserts=_rel([1], [1.0]), seq=0, key="k1") is not None
+    # at-least-once replay into the SAME partition is absorbed
+    assert plog.offer(0, inserts=_rel([1], [1.0]), seq=0, key="k1") is None
+    assert plog[0].deduped_batches == 1 and plog[0].deduped_rows == 1
+    # ...and survives the drain (re-drain stays bit-equal to once-delivered)
+    plog.drain_shard(0)
+    assert plog.offer(0, inserts=_rel([1], [1.0]), seq=0, key="k1") is None
+    assert plog[0].deduped_batches == 2
+    # a different partition is a different log: same key is fresh there
+    assert plog.offer(1, inserts=_rel([1], [1.0]), seq=0, key="k1") is not None
+    assert plog[1].deduped_batches == 0
+
+
+def test_partitioned_shed_accounting_stays_per_partition():
+    clock = FakeClock()
+    plog = PartitionedDeltaLog("Log", n_shards=2, clock=clock)
+    plog.offer(0, inserts=_rel([1, 2], [1.0, 2.0]), seq=0)
+    clock.t = 1.0
+    plog.offer(0, inserts=_rel([3], [3.0]), seq=1)
+    plog.offer(1, inserts=_rel([9], [9.0]), seq=0)
+
+    shed = plog.shed_oldest(0, 1)
+    assert shed == 2  # the oldest-arrival batch of partition 0
+    assert plog[0].shed_batches == 1 and plog[0].shed_rows == 2
+    assert plog[1].shed_batches == 0 and plog[1].shed_rows == 0
+    assert plog.pending_rows() == 2
+    assert _rows(plog.drain_shard(0)[0]) == {3: 3.0}
+
+
+def test_partitioned_spill_and_seqs_are_shard_keyed():
+    plog = PartitionedDeltaLog("Log", n_shards=2, max_batches=4)
+    for seq in range(3):
+        plog.offer(0, inserts=_rel([seq], [float(seq)]), seq=seq)
+    plog.offer(1, inserts=_rel([9], [9.0]), seq=5)
+    assert plog.pending_seqs() == [[0, 1, 2], [5]]
+    freed = plog.spill(0)
+    assert freed == 2 and plog[0].spills == 1
+    assert plog.pending_batches() == 2  # one coalesced batch per partition
+    assert plog.pending_seqs() == [[2], [5]]  # window keeps its max seq
+    assert _rows(plog.drain_shard(0)[0]) == {0: 0.0, 1: 1.0, 2: 2.0}
+
+
+def test_stack_shard_deltas_pads_and_rejects_deletes():
+    from repro.core.distributed_svc import stack_shard_deltas
+
+    plog = PartitionedDeltaLog("Log", n_shards=2)
+    rel = from_columns(
+        {"sessionId": np.arange(4, dtype=np.int32),
+         "videoId": np.asarray([0, 1, 0, 1], np.int32),
+         "bytes": np.asarray([1.0, 2.0, 3.0, 4.0], np.float32)},
+        pk=["sessionId"],
+    )
+    plog.offer(0, inserts=rel, seq=0)
+    keys, valid, values = stack_shard_deltas(
+        plog.drain(), "videoId", ["bytes"], rows_per_shard=8)
+    assert keys.shape == (16,) and valid.shape == (16,)
+    # partition 1 drained empty: its half is fully padded out
+    assert int(np.asarray(valid)[8:].sum()) == 0
+    assert int(np.asarray(valid).sum()) == 4
+    plog.offer(0, inserts=rel, seq=1)
+    plog.offer(0, deletes=_rel([1], [1.0]), seq=2)
+    with pytest.raises(ValueError, match="insert-only"):
+        stack_shard_deltas(plog.drain(), "videoId", ["bytes"], rows_per_shard=8)
+
+
+# ---------------------------------------------------------------------------
+# FleetHealth: shard-level suspension (serve-stale, quarantine accounting)
+# ---------------------------------------------------------------------------
+
+def test_suspend_blocks_planning_and_counts_as_quarantine():
+    tr = obs_trace.enable()
+    try:
+        vm = ViewManager()
+        vm.health.begin_epoch()
+        h = vm.health.suspend("v0", RuntimeError("shard 2 lost"))
+        assert h.suspended and h.degraded and h.failures == 1
+        assert vm.health.blocked("v0") and vm.health.is_degraded("v0")
+        assert not vm.health.retry_due("v0")
+        quar = [r for r in tr.records
+                if r["kind"] == "event" and r["name"] == "quarantine"]
+        assert len(quar) == 1  # meta["quarantines"] = Σ failures reconciles
+        vm.health.resume("v0")
+        assert not vm.health.blocked("v0")
+        assert vm.health.is_degraded("v0")  # stale until a success proves it
+        vm.health.record_success("v0")
+        assert not vm.health.is_degraded("v0")
+    finally:
+        obs_trace.set_tracer(None)
+
+
+# ---------------------------------------------------------------------------
+# ShardedFleet
+# ---------------------------------------------------------------------------
+
+def _group_plan(base, groups=8):
+    return GroupByNode(
+        child=Scan(base, pk=("k",)), keys=("g",),
+        aggs=(("total", "sum", "v"), ("cnt", "count", None)),
+        num_groups=2 * groups,
+    )
+
+
+def _base_rel(rng, n=300, groups=8, start=0):
+    return from_columns(
+        {"k": np.arange(start, start + n, dtype=np.int32),
+         "g": rng.integers(0, groups, n).astype(np.int32),
+         "v": rng.exponential(5.0, n).astype(np.float32)},
+        pk=["k"], capacity=2048,
+    )
+
+
+def _make_fleet(n_shards, n_views=4, clock=None, budget_s=10.0):
+    rng = np.random.default_rng(3)
+    fleet = ShardedFleet(n_shards=n_shards, budget_s=budget_s,
+                         clock=clock, heartbeat_timeout_s=1e9)
+    for i in range(n_views):
+        base = f"Log{i}"
+        fleet.register_base(base, _base_rel(np.random.default_rng(100 + i)))
+        fleet.register_view(ViewDef(f"v{i}", _group_plan(base)),
+                            delta_bases=(base,), m=0.4, seed=i,
+                            delta_group_capacity=16)
+    return fleet, rng
+
+
+def _delta(i, start, n=40, groups=8):
+    rng = np.random.default_rng(500 + i)
+    return from_columns(
+        {"k": np.arange(start, start + n, dtype=np.int32),
+         "g": rng.integers(0, groups, n).astype(np.int32),
+         "v": rng.exponential(5.0, n).astype(np.float32)},
+        pk=["k"],
+    )
+
+
+def test_placement_colocates_with_the_owning_base():
+    fleet, _ = _make_fleet(n_shards=2, n_views=2)
+    assert fleet.view_shard == {"v0": 0, "v1": 1}  # least-loaded round robin
+    # a second view over Log0 must land with Log0's owner
+    fleet.register_view(ViewDef("v0b", _group_plan("Log0")),
+                        delta_bases=("Log0",), m=0.4, seed=9,
+                        delta_group_capacity=16)
+    assert fleet.shard_of("v0b") == fleet.shard_of("v0")
+    # pinning it elsewhere would shuffle raw rows across shards: refused
+    with pytest.raises(ValueError, match="owned by shard"):
+        fleet.register_view(ViewDef("v0c", _group_plan("Log0")),
+                            delta_bases=("Log0",), m=0.4, seed=10,
+                            delta_group_capacity=16, shard=1)
+    with pytest.raises(ValueError, match="already registered"):
+        fleet.register_view(ViewDef("v0", _group_plan("Log0")),
+                            delta_bases=("Log0",), m=0.4, seed=0)
+
+
+def test_sharded_plan_is_bit_identical_to_flat_planner():
+    clock = FakeClock()
+    fleet, _ = _make_fleet(n_shards=2, n_views=4, clock=clock, budget_s=0.3)
+    flat = ViewManager(clock=clock)
+    planner = MaintenancePlanner(flat, budget_s=0.3, age_cap_s=1e9,
+                                 clock=clock)
+    for i in range(4):
+        base = f"Log{i}"
+        flat.register_base(base, _base_rel(np.random.default_rng(100 + i)))
+        flat.register_view(ViewDef(f"v{i}", _group_plan(base)),
+                           delta_bases=(base,), m=0.4, seed=i,
+                           delta_group_capacity=16)
+    for cm in fleet.cost_models + [planner.cost_model]:
+        cm.pin_costs(0.05, 0.25)
+    for i in range(4):
+        d = _delta(i, 1000)
+        fleet.vms[fleet.shard_of(f"v{i}")].ingest(f"Log{i}", inserts=d)
+        flat.ingest(f"Log{i}", inserts=d)
+
+    sharded = fleet.epoch_step(execute=False)
+    single = planner.plan()
+    assert (sorted((a.view, a.action) for a in sharded.actions)
+            == sorted((a.view, a.action) for a in single.actions))
+    for a in sharded.actions:
+        want = next(x for x in single.actions if x.view == a.view)
+        assert a.score == want.score and a.predicted_s == want.predicted_s
+        assert a.shard == fleet.shard_of(a.view)
+    assert sorted(sharded.skipped) == sorted(single.skipped)
+
+
+def test_sharded_epoch_answers_match_flat_epoch():
+    clock = FakeClock()
+    fleet, _ = _make_fleet(n_shards=2, n_views=4, clock=clock)
+    flat = ViewManager(clock=clock)
+    planner = MaintenancePlanner(flat, budget_s=10.0, age_cap_s=1e9,
+                                 clock=clock)
+    for i in range(4):
+        base = f"Log{i}"
+        flat.register_base(base, _base_rel(np.random.default_rng(100 + i)))
+        flat.register_view(ViewDef(f"v{i}", _group_plan(base)),
+                           delta_bases=(base,), m=0.4, seed=i,
+                           delta_group_capacity=16)
+    for cm in fleet.cost_models + [planner.cost_model]:
+        cm.pin_costs(0.05, 0.25)
+    for i in range(4):
+        d = _delta(i, 1000)
+        fleet.ingest(f"Log{i}", inserts=d, seq=0, key=f"e{i}")
+        flat.ingest(f"Log{i}", inserts=d)
+    rep = fleet.epoch_step()
+    planner.step()
+    assert {a.view for a in rep.actions} == {"v0", "v1", "v2", "v3"}
+    q = Query(agg="sum", col="total")
+    for i in range(4):
+        assert fleet.query(f"v{i}", q).value == flat.query(f"v{i}", q).value
+
+
+def test_shard_loss_degrades_to_serve_stale_and_recovers():
+    fleet, _ = _make_fleet(n_shards=2, n_views=4)
+    for i in range(4):
+        fleet.ingest(f"Log{i}", inserts=_delta(i, 1000), seq=0)
+    fleet.epoch_step()
+    q = Query(agg="sum", col="total")
+    before = {f"v{i}": fleet.query(f"v{i}", q).value for i in range(4)}
+
+    fleet.kill_shard(1)
+    for i in range(4):
+        fleet.ingest(f"Log{i}", inserts=_delta(i, 2000), seq=1)
+    rep = fleet.epoch_step()
+    lost = set(fleet.shard_views(1))
+    assert rep.excluded_shards == [1]
+    assert set(rep.suspended) == lost
+    assert {a.view for a in rep.actions} == set(fleet.shard_views(0))
+    # the lost shard's partitions keep queueing — nothing is dropped
+    assert fleet.pending_rows() == 80
+    # every view still answers; the lost shard's serve stale (degraded)
+    for i in range(4):
+        name = f"v{i}"
+        est = fleet.query(name, q)
+        assert np.isfinite(est.value)
+        if name in lost:
+            assert fleet.is_degraded(name)
+            assert est.value == before[name]  # last good sample, unmoved
+        else:
+            assert not fleet.is_degraded(name)
+    # a second epoch does not re-suspend (one quarantine per loss event)
+    failures = {n: fleet.vms[1].health.views[n].failures for n in lost}
+    fleet.epoch_step()
+    assert all(fleet.vms[1].health.views[n].failures == failures[n]
+               for n in lost)
+
+    fleet.revive_shard(1)
+    rep = fleet.epoch_step()
+    assert rep.excluded_shards == []
+    assert {a.view for a in rep.actions} >= lost  # the drain epoch catches up
+    assert fleet.pending_rows() == 0
+    for name in lost:
+        assert not fleet.is_degraded(name)
+        assert fleet.query(name, q).value != before[name]
+
+
+def test_epoch_respects_budget_and_skips():
+    clock = FakeClock()
+    fleet, _ = _make_fleet(n_shards=2, n_views=4, clock=clock, budget_s=0.05)
+    for cm in fleet.cost_models:
+        cm.pin_costs(0.05, 0.25)
+    for i in range(4):
+        fleet.ingest(f"Log{i}", inserts=_delta(i, 1000), seq=0)
+    rep = fleet.epoch_step()
+    assert len(rep.actions) == 1  # one clean fits the 0.05s budget
+    assert rep.predicted_spend_s <= 0.05 + 1e-9
+    assert len(rep.skipped) == 3
+
+
+# ---------------------------------------------------------------------------
+# fleet_scores_sharded: the score combine is bit-equal to the flat op
+# ---------------------------------------------------------------------------
+
+def test_fleet_scores_sharded_host_path_matches_flat_op():
+    rng = np.random.default_rng(0)
+    S, vmax = 4, 16
+    stacked = rng.exponential(5.0, (S, vmax, N_FEATURES)).astype(np.float32)
+    stacked[2, 10:] = 0.0  # padding lanes: all-zero features
+    sharded = np.asarray(fleet_scores_sharded(stacked, shard_views=[16, 16, 10, 16]))
+    flat = np.asarray(fleet_scores(stacked.reshape(S * vmax, N_FEATURES)))
+    assert sharded.shape == (S, vmax, flat.shape[1])
+    np.testing.assert_array_equal(sharded.reshape(S * vmax, -1), flat)
+    # padding lanes (all-zero features) never win an action
+    assert not np.asarray(sharded[2, 10:, :4]).any()
+
+
+def test_fleet_scores_sharded_validates_shape():
+    with pytest.raises(ValueError, match="stacked"):
+        fleet_scores_sharded(np.zeros((4, N_FEATURES), np.float32))
+
+
+# ---------------------------------------------------------------------------
+# greedy_knapsack: the extracted fill is order-insensitive and budget-true
+# ---------------------------------------------------------------------------
+
+def test_greedy_knapsack_deterministic_and_budgeted():
+    cands = [
+        (3.0, "b", "clean", 0.4),
+        (3.0, "a", "clean", 0.4),
+        (2.0, "a", "maintain", 0.9),
+        (1.0, "c", "clean", 0.3),
+        (0.0, "d", "clean", 0.0),  # zero score never chosen, even free
+    ]
+    chosen = {}
+    left = greedy_knapsack(cands, 0.8, chosen)
+    assert list(chosen) == ["a", "b"]  # tie broken by view name
+    assert left == pytest.approx(0.0)
+    # input order never matters
+    chosen2 = {}
+    greedy_knapsack(list(reversed(cands)), 0.8, chosen2)
+    assert {(c.view, c.action) for c in chosen.values()} \
+        == {(c.view, c.action) for c in chosen2.values()}
+    # pre-seeded entries (forced maintains) are respected
+    pre = dict(chosen)
+    greedy_knapsack(cands, 10.0, pre)
+    assert pre["a"].action == "clean"  # not re-chosen
+    assert pre["c"].action == "clean"

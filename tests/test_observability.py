@@ -14,7 +14,7 @@ from repro.core.estimators import Estimate
 from repro.obs import export_service_trace, observatory_panel
 from repro.obs import kprof
 from repro.obs import trace as obs_trace
-from repro.obs.reconcile import load_jsonl, reconcile
+from repro.obs.reconcile import check_shard_accounting, load_jsonl, reconcile
 from repro.obs.registry import MetricsRegistry, counter_attr
 from repro.obs.trace import NOOP_SPAN, Tracer
 from repro.relational.plan import GroupByNode, Scan
@@ -217,6 +217,127 @@ def test_profiler_sees_pipeline_dispatches():
     ops = prof.summary()
     assert "multi_agg" in ops and ops["multi_agg"]["dispatches"] >= 1
     assert all(st["dispatches"] >= st["compiles"] for st in ops.values())
+
+
+# -- per-shard kernel attribution --------------------------------------------
+
+def test_profiler_fans_dispatches_out_to_shards():
+    import jax.numpy as jnp
+
+    prof = kprof.set_profiler(kprof.KernelProfiler())
+    x = jnp.arange(8, dtype=jnp.float32)
+    kprof.profiled("fleet_score_sharded", lambda a: a * 2, x,
+                   rows=12, padded=16, shards=[0, 1],
+                   shard_rows=[5, 7], shard_padded=[8, 8])
+    s = prof.shard_summary()
+    fl = s["fleet"]["fleet_score_sharded"]
+    per = s["shards"]["fleet_score_sharded"]
+    assert fl["dispatches"] == 1 and fl["rows_real"] == 12
+    assert set(per) == {0, 1}
+    assert per[0]["rows_real"] == 5 and per[1]["rows_real"] == 7
+    assert per[0]["rows_padded"] == 8 and per[1]["rows_padded"] == 8
+    # each shard sees the dispatch; the wall is split, not duplicated
+    assert per[0]["dispatches"] == per[1]["dispatches"] == 1
+    wall = lambda st: st["compile_s"] + st["execute_s"]
+    assert wall(per[0]) + wall(per[1]) == pytest.approx(wall(fl))
+    assert check_shard_accounting(s) == []
+
+
+def test_shard_scope_attributes_ambient_dispatches():
+    prof = kprof.set_profiler(kprof.KernelProfiler())
+    assert kprof.current_shard() is None
+    with kprof.shard_scope(2):
+        assert kprof.current_shard() == 2
+        kprof.profiled("fused_clean", lambda a, b: a + b, 2, 3,
+                       rows=4, padded=4)
+        with kprof.shard_scope(None):  # explicit clear nests
+            kprof.profiled("fused_clean", lambda a, b: a + b, 2, 3,
+                           rows=4, padded=4)
+    assert kprof.current_shard() is None
+    s = prof.shard_summary()
+    per = s["shards"]["fused_clean"]
+    assert set(per) == {2} and per[2]["rows_real"] == 4
+    # the un-scoped dispatch stays out of BOTH shard-side ledgers (the
+    # global ``ops`` ledger still has it), so the mirror reconciles exactly
+    assert s["fleet"]["fused_clean"]["rows_real"] == 4
+    assert prof.summary()["fused_clean"]["rows_real"] == 8
+    assert check_shard_accounting(s) == []
+
+
+def test_check_shard_accounting_catches_drift():
+    ok = {"fleet": {"op": {"dispatches": 2, "rows_real": 10, "rows_padded": 12,
+                           "compile_s": 0.5, "execute_s": 0.1}},
+          "shards": {"op": {0: {"dispatches": 1, "rows_real": 4,
+                                "rows_padded": 6, "compile_s": 0.25,
+                                "execute_s": 0.05},
+                            1: {"dispatches": 1, "rows_real": 6,
+                                "rows_padded": 6, "compile_s": 0.25,
+                                "execute_s": 0.05}}}}
+    assert check_shard_accounting(ok) == []
+    bad = {"fleet": dict(ok["fleet"]),
+           "shards": {"op": {0: dict(ok["shards"]["op"][0],
+                                     rows_real=5)}}}
+    probs = check_shard_accounting(bad)
+    assert any("rows_real" in p for p in probs)
+    assert check_shard_accounting({"fleet": {}, "shards": {"x": {}}})
+    assert check_shard_accounting({"fleet": {"y": {}}, "shards": {}})
+
+
+def test_reconcile_includes_shard_checks():
+    prof = kprof.set_profiler(kprof.KernelProfiler())
+    with kprof.shard_scope(0):
+        kprof.profiled("fused_clean", lambda a, b: a + b, 1, 2,
+                       rows=3, padded=3)
+    tr = obs_trace.enable()
+    vm, rng = _fleet(n_views=1)
+    vm.query("v0", Query(agg="sum", col="total"))
+    meta = {"metrics": vm.metrics.snapshot(),
+            "quarantines": sum(h.failures for h in vm.health.views.values())}
+    rep = reconcile(meta, list(tr.records),
+                    shard_summary=prof.shard_summary())
+    assert rep["ok"] and rep["checks"]["shards"] == 0
+    drifted = prof.shard_summary()
+    drifted["shards"]["fused_clean"][0]["rows_real"] += 1
+    rep = reconcile(meta, list(tr.records), shard_summary=drifted)
+    assert not rep["ok"] and rep["checks"]["shards"] == 1
+    assert any("rows_real" in p for p in rep["problems"])
+
+
+def test_sharded_fleet_epoch_reconciles_per_shard():
+    from repro.distributed import ShardedFleet
+    from repro.core import ViewDef
+    from repro.relational.plan import GroupByNode, Scan
+
+    prof = kprof.set_profiler(kprof.KernelProfiler())
+    fleet = ShardedFleet(n_shards=2, budget_s=10.0, heartbeat_timeout_s=1e9)
+    rng = np.random.default_rng(7)
+    for i in range(2):
+        base = f"Log{i}"
+        n = 200
+        fleet.register_base(base, from_columns(
+            {"k": np.arange(n, dtype=np.int32),
+             "g": rng.integers(0, 8, n).astype(np.int32),
+             "v": rng.exponential(4.0, n).astype(np.float32)},
+            pk=["k"], capacity=1024))
+        fleet.register_view(
+            ViewDef(f"v{i}", GroupByNode(
+                child=Scan(base, pk=("k",)), keys=("g",),
+                aggs=(("total", "sum", "v"), ("cnt", "count", None)),
+                num_groups=16)),
+            delta_bases=(base,), m=0.4, seed=i, delta_group_capacity=16)
+        fleet.ingest(base, inserts=from_columns(
+            {"k": np.arange(1000, 1040, dtype=np.int32),
+             "g": rng.integers(0, 8, 40).astype(np.int32),
+             "v": rng.exponential(4.0, 40).astype(np.float32)},
+            pk=["k"]))
+    rep = fleet.epoch_step()
+    assert rep.actions
+    s = prof.shard_summary()
+    # the epoch's kernel work is attributed shard-by-shard and sums back
+    assert any(per for per in s["shards"].values())
+    assert check_shard_accounting(s) == []
+    seen_shards = {sh for per in s["shards"].values() for sh in per}
+    assert seen_shards <= {0, 1} and seen_shards
 
 
 # -- serving-plane counters back onto the registry ---------------------------

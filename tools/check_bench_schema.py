@@ -70,6 +70,21 @@ SCHEMAS = {
         "guards.cache_wins": bool,
         "guards.accounting_ok": bool,
     },
+    "BENCH_distributed.json": {
+        "quick": bool,
+        "devices": int,
+        "n_views": int,
+        "rows_per_view": int,
+        "curve": list,
+        "combine_s": NUM,
+        "scaling_at_8": NUM,
+        "availability": NUM,
+        "wall_s": NUM,
+        "guards.scaling_ok": bool,
+        "guards.parity_ok": bool,
+        "guards.availability_ok": bool,
+        "guards.drain_ok": bool,
+    },
     "BENCH_obs_overhead.json": {
         "quick": bool,
         "epochs": int,

@@ -34,16 +34,19 @@ REQUIRED_SECTIONS = {
     "docs/ARCHITECTURE.md": (
         "## Observability",
         "## Serving plane",
+        "## Sharded fleet",
         "## Kernels",
         "## Tests",
     ),
     "docs/API.md": (
         "## Observability",
+        "## Sharded fleet",
         "## Running things",
     ),
     "docs/BENCHMARKS.md": (
         "## The observability-overhead rows",
         "## The serving-soak rows",
+        "## The sharded-fleet scaling rows",
     ),
 }
 
